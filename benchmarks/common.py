@@ -1,0 +1,18 @@
+"""Benchmark helpers: timing + CSV emission (one row per measurement)."""
+
+from __future__ import annotations
+
+import time
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0

@@ -1,0 +1,56 @@
+"""Benchmark driver: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Sections:
+  fig2   — optimization ablations (UIE/OOF/DSD/EOST/dense off)
+  fig10  — TC/SG on Gn-p: PBME vs tuple backend (+ Pallas kernel path)
+  fig12  — REACH/CC/SSSP scaling on RMAT graphs
+  fig15  — program analyses (Andersen scaling, CSPA, CSDA)
+  fig8   — device-count scale-up of sharded PBME (+ Table 4 CPU efficiency)
+  roofline — three-term roofline per dry-run cell (needs results/dryrun.json)
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    sections = sys.argv[1:] or [
+        "fig2",
+        "fig10",
+        "fig12",
+        "fig15",
+        "fig8",
+        "roofline",
+    ]
+    print("name,us_per_call,derived")
+    for sec in sections:
+        try:
+            if sec == "fig2":
+                from benchmarks.bench_optimizations import run as r
+            elif sec == "fig10":
+                from benchmarks.bench_tc_sg import run as r
+            elif sec == "fig12":
+                from benchmarks.bench_graph_analytics import run as r
+            elif sec == "fig15":
+                from benchmarks.bench_program_analysis import run as r
+            elif sec == "fig8":
+                from benchmarks.bench_scaleup import run as r
+            elif sec == "roofline":
+                if not os.path.exists("results/dryrun.json"):
+                    print(f"{sec}_skipped,0,no results/dryrun.json (run dryrun first)")
+                    continue
+                from benchmarks.roofline import run as r
+            else:
+                print(f"{sec}_unknown,0,")
+                continue
+            r()
+        except Exception as e:
+            traceback.print_exc(file=sys.stderr)
+            print(f"{sec}_FAILED,0,{type(e).__name__}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps on the
+synthetic token stream, with checkpointing and straggler monitoring.
+
+Default (CPU container): a reduced ~1M model, 200 steps, so it finishes in
+minutes.  ``--full`` trains the real ~100M config (qwen1.5-0.5b-like at
+d_model=768) — the intended TPU-pod invocation.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200] [--full]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.tokens import TokenStream
+from repro.models.transformer import TransformerConfig, init_params, lm_loss
+from repro.train import (
+    CheckpointManager,
+    StragglerMonitor,
+    init_train_state,
+    make_train_step,
+    run_resilient,
+)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=128)
+ap.add_argument("--full", action="store_true")
+args = ap.parse_args()
+
+if args.full:
+    cfg = TransformerConfig(
+        name="lm-100m", n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+        head_dim=64, d_ff=2048, vocab=32768, dtype="bfloat16",
+        param_dtype="float32",
+    )
+else:
+    cfg = TransformerConfig(
+        name="lm-mini", n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
+        head_dim=32, d_ff=512, vocab=2048, dtype="float32",
+        param_dtype="float32",
+    )
+
+print(f"model: {cfg.name}, params={cfg.param_count()/1e6:.1f}M")
+stream = TokenStream(cfg.vocab, args.batch, args.seq, seed=0)
+step = make_train_step(
+    lm_loss, cfg, peak_lr=3e-3, warmup_steps=20, total_steps=args.steps,
+    donate=False,
+)
+mgr = CheckpointManager("/tmp/repro_lm_ckpt", save_every=50, keep=2)
+monitor = StragglerMonitor()
+
+t0 = time.time()
+state, history, restarts = run_resilient(
+    init_state_fn=lambda: init_train_state(
+        init_params(jax.random.PRNGKey(0), cfg)
+    ),
+    step_fn=step,
+    data_fn=lambda i: {k: jnp.asarray(v) for k, v in stream.batch(i).items()},
+    manager=mgr,
+    total_steps=args.steps,
+    monitor=monitor,
+)
+dt = time.time() - t0
+toks = args.steps * args.batch * args.seq
+print(f"steps: {args.steps}  loss {history[0]['loss']:.3f} → "
+      f"{history[-1]['loss']:.3f}  ({toks/dt:.0f} tok/s, "
+      f"{restarts} restarts, {len(monitor.events)} straggler events)")
+
+# quick sample from the trained model
+from repro.train.serve import generate
+
+out = generate(
+    state.params, jnp.zeros((1, 4), jnp.int32), cfg, steps=16, temperature=0.8
+)
+print("sample token ids:", out[0].tolist())

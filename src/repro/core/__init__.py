@@ -1,0 +1,29 @@
+"""RecStep-on-TPU: the paper's contribution as a composable JAX module.
+
+Public API::
+
+    from repro.core import parse, Engine, EngineConfig
+    program = parse("tc(x,y) :- arc(x,y). tc(x,y) :- tc(x,z), arc(z,y).")
+    result = Engine(EngineConfig()).run(program, {"arc": edges})
+"""
+
+from repro.core.ast import Atom, Rule, Program, Var, Const, Agg, Cmp
+from repro.core.parser import parse
+from repro.core.analyzer import analyze, Stratification
+from repro.core.engine import Engine, EngineConfig, EvalStats
+
+__all__ = [
+    "Atom",
+    "Rule",
+    "Program",
+    "Var",
+    "Const",
+    "Agg",
+    "Cmp",
+    "parse",
+    "analyze",
+    "Stratification",
+    "Engine",
+    "EngineConfig",
+    "EvalStats",
+]

@@ -1,0 +1,109 @@
+"""Aggregation (paper §3.3): stratified group-by + recursive MIN/MAX.
+
+Non-recursive aggregation lowers to sort-by-group-key → segment reduce (the
+SQL GROUP BY analogue).  Recursive aggregation (CC, SSSP) goes through
+:class:`repro.core.relation.DenseAggRelation` — see the engine.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ast import Agg, Const, Rule, Var
+from repro.core.joins import Bindings
+from repro.relational.sort import SENTINEL, lexsort_rows, unique_mask
+
+
+def eval_expr(expr, bindings: Bindings) -> jax.Array:
+    """Evaluate a linear expression (``d1+d2``, ``0``) over binding columns."""
+    out = jnp.full(bindings.valid.shape, expr.const, jnp.int32)
+    for v in expr.vars:
+        out = out + bindings.cols[v]
+    return jnp.where(bindings.valid, out, SENTINEL)
+
+
+def groupby_aggregate(
+    rule: Rule, bindings: Bindings, capacity: int
+) -> tuple[jax.Array, jax.Array]:
+    """Evaluate an aggregate head over a joined body.
+
+    Returns (rows, valid) with one output row per distinct group key, columns
+    in head-term order (group keys + aggregate values interleaved as written).
+    """
+    group_terms = [t for t in rule.head_terms if not isinstance(t, Agg)]
+    agg_terms = [(i, t) for i, t in enumerate(rule.head_terms) if isinstance(t, Agg)]
+    if not agg_terms:
+        raise ValueError("groupby_aggregate on non-aggregate rule")
+
+    n = bindings.valid.shape[0]
+    if group_terms:
+        gcols = []
+        for t in group_terms:
+            if isinstance(t, Const):
+                gcols.append(jnp.where(bindings.valid, t.value, SENTINEL))
+            else:
+                gcols.append(bindings.cols[t])
+        gmat = jnp.stack(gcols, axis=1)
+    else:
+        gmat = jnp.where(bindings.valid[:, None], 0, SENTINEL) * jnp.ones(
+            (n, 1), jnp.int32
+        )
+    gmat = jnp.where(bindings.valid[:, None], gmat, SENTINEL)
+    order = lexsort_rows(gmat)
+    gsorted = gmat[order]
+    firsts = unique_mask(gsorted)
+    seg_ids = jnp.cumsum(firsts) - 1
+    seg_ids = jnp.where(gsorted[:, 0] != SENTINEL, seg_ids, n - 1)
+    num_seg = n
+
+    out_cols: dict[int, jax.Array] = {}
+    for head_pos, agg in agg_terms:
+        vals = eval_expr(agg.arg, bindings)[order]
+        vals = jnp.where(gsorted[:, 0] != SENTINEL, vals, 0)
+        if agg.op == "MIN":
+            ini = jnp.where(gsorted[:, 0] != SENTINEL, vals, jnp.iinfo(jnp.int32).max)
+            agg_vals = jnp.full((num_seg,), jnp.iinfo(jnp.int32).max, jnp.int32)
+            agg_vals = agg_vals.at[seg_ids].min(ini)
+        elif agg.op == "MAX":
+            ini = jnp.where(gsorted[:, 0] != SENTINEL, vals, jnp.iinfo(jnp.int32).min)
+            agg_vals = jnp.full((num_seg,), jnp.iinfo(jnp.int32).min, jnp.int32)
+            agg_vals = agg_vals.at[seg_ids].max(ini)
+        elif agg.op == "SUM":
+            agg_vals = jnp.zeros((num_seg,), jnp.int32).at[seg_ids].add(vals)
+        elif agg.op == "COUNT":
+            ones = jnp.where(gsorted[:, 0] != SENTINEL, 1, 0)
+            agg_vals = jnp.zeros((num_seg,), jnp.int32).at[seg_ids].add(ones)
+        elif agg.op == "AVG":
+            s = jnp.zeros((num_seg,), jnp.int32).at[seg_ids].add(vals)
+            ones = jnp.where(gsorted[:, 0] != SENTINEL, 1, 0)
+            c = jnp.zeros((num_seg,), jnp.int32).at[seg_ids].add(ones)
+            agg_vals = s // jnp.maximum(c, 1)
+        else:
+            raise ValueError(agg.op)
+        out_cols[head_pos] = agg_vals
+
+    # one output row per first-occurrence group row
+    group_row_idx = jnp.where(firsts, jnp.arange(n), n - 1)
+    valid_out = firsts
+    rows = []
+    g_iter = iter(range(gsorted.shape[1]))
+    for pos, term in enumerate(rule.head_terms):
+        if isinstance(term, Agg):
+            col = out_cols[pos][seg_ids]           # value of own segment
+            col = jnp.where(firsts, col, SENTINEL)
+        else:
+            col = gsorted[:, next(g_iter)]
+            col = jnp.where(firsts, col, SENTINEL)
+        rows.append(col)
+    mat = jnp.stack(rows, axis=1)
+    mat = jnp.where(valid_out[:, None], mat, SENTINEL)
+    # compact firsts to the front, clip/pad to capacity
+    order2 = jnp.argsort(~valid_out, stable=True)
+    mat = mat[order2]
+    if mat.shape[0] >= capacity:
+        mat = mat[:capacity]
+    else:
+        pad = jnp.full((capacity - mat.shape[0], mat.shape[1]), SENTINEL, jnp.int32)
+        mat = jnp.concatenate([mat, pad], axis=0)
+    return mat, int(valid_out.sum())

@@ -1,0 +1,121 @@
+"""Rule analyzer: dependency graph, stratification, recursion classes (paper §3.1, §4).
+
+Builds the predicate dependency graph, computes strongly-connected components
+(strata) with a topological order, verifies stratified negation, and
+classifies each stratum (non-recursive / linear / non-linear / mutual
+recursion / recursive-aggregate).  Mirrors the paper's *rule analyzer* stage.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import networkx as nx
+
+from repro.core.ast import Agg, Atom, Program, Rule
+
+
+@dataclass
+class Stratum:
+    index: int
+    preds: list[str]
+    rules: list[Rule]
+    recursive: bool
+    nonlinear: bool = False
+    mutual: bool = False
+    has_recursive_agg: bool = False
+
+    def rules_for(self, pred: str) -> list[Rule]:
+        return [r for r in self.rules if r.head_pred == pred]
+
+
+@dataclass
+class Stratification:
+    program: Program
+    strata: list[Stratum]
+    idb: list[str]
+    edb: list[str]
+    graph: nx.DiGraph = field(repr=False, default_factory=nx.DiGraph)
+
+    def pred_arity(self, pred: str) -> int:
+        return self.program.arity_of(pred)
+
+
+def analyze(program: Program) -> Stratification:
+    program.validate()
+    idb = set(program.idb_preds)
+
+    g = nx.DiGraph()
+    for p in program.idb_preds:
+        g.add_node(p)
+    for rule in program.rules:
+        for atom in rule.atoms:
+            if atom.pred in idb:
+                g.add_edge(
+                    atom.pred,
+                    rule.head_pred,
+                    negated=atom.negated or g.get_edge_data(
+                        atom.pred, rule.head_pred, {}
+                    ).get("negated", False),
+                )
+
+    sccs = list(nx.strongly_connected_components(g))
+    cond = nx.condensation(g, scc=sccs)
+    order = list(nx.topological_sort(cond))
+
+    strata: list[Stratum] = []
+    for out_idx, comp_id in enumerate(order):
+        preds = sorted(cond.nodes[comp_id]["members"])
+        pred_set = set(preds)
+        rules = [r for r in program.rules if r.head_pred in pred_set]
+        if not rules:
+            continue
+        # recursive iff some rule's body references a pred of this SCC
+        recursive = any(
+            a.pred in pred_set for r in rules for a in r.atoms
+        )
+        # stratified-negation check: no negated edge inside an SCC
+        for r in rules:
+            for a in r.atoms:
+                if a.negated and a.pred in pred_set:
+                    raise ValueError(
+                        f"unstratifiable negation: {a.pred} negated within "
+                        f"its own stratum in rule {r}"
+                    )
+        nonlinear = any(
+            sum(1 for a in r.positive_atoms if a.pred in pred_set) > 1
+            for r in rules
+        )
+        mutual = len(preds) > 1
+        rec_agg = recursive and any(r.has_aggregate for r in rules)
+        if rec_agg:
+            for r in rules:
+                for t in r.head_terms:
+                    if isinstance(t, Agg) and t.op not in ("MIN", "MAX"):
+                        # recursion over a non-monotonic-lattice aggregate:
+                        # convergence is the user's responsibility (paper §3.3
+                        # assumes programs converge); we restrict to MIN/MAX
+                        # whose fixpoint always exists.
+                        raise ValueError(
+                            f"recursive aggregate {t.op} unsupported "
+                            f"(only MIN/MAX converge unconditionally): {r}"
+                        )
+        strata.append(
+            Stratum(
+                index=len(strata),
+                preds=preds,
+                rules=rules,
+                recursive=recursive,
+                nonlinear=nonlinear,
+                mutual=mutual,
+                has_recursive_agg=rec_agg,
+            )
+        )
+
+    return Stratification(
+        program=program,
+        strata=strata,
+        idb=program.idb_preds,
+        edb=program.edb_preds,
+        graph=g,
+    )

@@ -1,0 +1,272 @@
+"""PBME — Parallel Bit-Matrix Evaluation (paper §5.3), TPU-native.
+
+A dense binary IDB over active domain n is an n×n bit matrix, packed 32
+bits/word: ``uint32[n, n/32]``.  One semi-naïve iteration of TC is a
+boolean-semiring matmul of the Δ frontier against the arc matrix, with
+dedup + set-difference fused into the epilogue::
+
+    New = Δ ⊛ Arc          (boolean matmul — the MXU hot loop)
+    Δ'  = New & ~M         (set difference = bit andnot)
+    M   = M | Δ'           (merge = bit or)
+
+The paper's per-row worklists (MIMD threads) become frontier *row-block
+compaction*; its zero-coordination row partitioning becomes sharding rows
+over the ``data`` mesh axis (see ``distributed.py``).
+
+Pattern matching: a stratum qualifies for PBME when it is a recursive binary
+IDB whose rules are TC-shaped (ΔM ⊛ E), SG-shaped (Eᵀ ⊛ ΔM ⊛ E) or their
+unions, with no aggregation.  Everything else falls back to the tuple path.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.analyzer import Stratum
+from repro.core.ast import Atom, Cmp, Const, Rule, Var
+
+
+# --------------------------------------------------------------------------
+# packed bit-matrix primitives (pure jnp reference path; the Pallas kernel in
+# repro.kernels.bitmm is the TPU-optimized version of bitmm_packed)
+# --------------------------------------------------------------------------
+
+WORD = 32
+
+
+def pack_bits(dense: jax.Array) -> jax.Array:
+    """bool[n, m] → uint32[n, ceil(m/32)] (bit j of word w = col 32w+j)."""
+    n, m = dense.shape
+    pad = (-m) % WORD
+    if pad:
+        dense = jnp.concatenate(
+            [dense, jnp.zeros((n, pad), dense.dtype)], axis=1
+        )
+    d = dense.reshape(n, -1, WORD).astype(jnp.uint32)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    return (d << shifts).sum(axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(packed: jax.Array, m: int | None = None) -> jax.Array:
+    """uint32[n, w] → bool[n, m]."""
+    n, w = packed.shape
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (packed[:, :, None] >> shifts) & jnp.uint32(1)
+    out = bits.reshape(n, w * WORD).astype(bool)
+    return out[:, :m] if m is not None else out
+
+
+def edges_to_bitmatrix(edges: np.ndarray, n: int) -> jax.Array:
+    """int32[m, 2] edge list → packed uint32[n, ceil(n/32)]."""
+    words = (n + WORD - 1) // WORD
+    src = np.asarray(edges[:, 0], np.int64)
+    dst = np.asarray(edges[:, 1], np.int64)
+    flat = np.zeros((n * words,), np.uint32)
+    np.bitwise_or.at(
+        flat, src * words + dst // WORD, np.uint32(1) << (dst % WORD).astype(np.uint32)
+    )
+    return jnp.asarray(flat.reshape(n, words))
+
+
+def bitmatrix_to_edges(packed: jax.Array, n: int) -> np.ndarray:
+    dense = np.asarray(unpack_bits(packed, n))
+    src, dst = np.nonzero(dense)
+    return np.stack([src, dst], axis=1).astype(np.int32)
+
+
+def bitmm_ref(a_packed: jax.Array, b_packed: jax.Array, n: int) -> jax.Array:
+    """Boolean matmul on packed operands — pure-jnp oracle.
+
+    C[i, j] = OR_k A[i, k] & B[k, j]; runs the inner product on the MXU by
+    unpacking to {0,1} float32 and thresholding.  The Pallas kernel tiles the
+    same computation through VMEM.
+    """
+    a = unpack_bits(a_packed, n).astype(jnp.float32)
+    b = unpack_bits(b_packed, n).astype(jnp.float32)
+    c = (a @ b) > 0.0
+    return pack_bits(c)
+
+
+def popcount(packed: jax.Array) -> jax.Array:
+    """Total number of set bits (the Δ-count statistic)."""
+    x = packed
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    x = (x * jnp.uint32(0x01010101)) >> 24
+    return x.sum(dtype=jnp.int64) if jax.config.jax_enable_x64 else x.sum(
+        dtype=jnp.uint32
+    )
+
+
+def transpose_packed(packed: jax.Array, n: int) -> jax.Array:
+    return pack_bits(unpack_bits(packed, n).T)
+
+
+# --------------------------------------------------------------------------
+# fixpoint drivers
+# --------------------------------------------------------------------------
+
+
+def _bitmm(a, b, n, use_pallas: bool):
+    if use_pallas:
+        from repro.kernels.ops import bitmm as bitmm_kernel
+
+        return bitmm_kernel(a, b, n)
+    return bitmm_ref(a, b, n)
+
+
+def tc_fixpoint(
+    arc: jax.Array, n: int, *, use_pallas: bool = False, max_iters: int = 10_000
+) -> tuple[jax.Array, int]:
+    """Transitive closure: M ← M | (Δ ⊛ Arc) until Δ = ∅ (Alg. 2, vectorized)."""
+    m = arc
+    delta = arc
+    iters = 0
+    while iters < max_iters:
+        if use_pallas:
+            from repro.kernels.ops import bitmm_fused_delta
+
+            delta, m_new = bitmm_fused_delta(delta, arc, m)
+        else:
+            new = _bitmm(delta, arc, n, use_pallas)
+            delta = new & ~m              # DSD fused: one andnot
+            m_new = m | delta             # merge fused: one or
+        if int(popcount(delta)) == 0:
+            break
+        m = m_new
+        iters += 1
+    return m, iters + 1
+
+
+def sg_fixpoint(
+    arc: jax.Array, n: int, *, use_pallas: bool = False, max_iters: int = 10_000
+) -> tuple[jax.Array, int]:
+    """Same generation (Alg. 3):  sg ← Aᵀ⊛A & ~I;  Δ' = Aᵀ⊛Δ⊛A & ~sg."""
+    arc_t = transpose_packed(arc, n)
+    eye = pack_bits(jnp.eye(n, dtype=bool))
+    sg = _bitmm(arc_t, arc, n, use_pallas) & ~eye
+    delta = sg
+    iters = 0
+    while iters < max_iters:
+        mid = _bitmm(arc_t, delta, n, use_pallas)
+        new = _bitmm(mid, arc, n, use_pallas)
+        delta = new & ~sg
+        if int(popcount(delta)) == 0:
+            break
+        sg = sg | delta
+        iters += 1
+    return sg, iters + 1
+
+
+# --------------------------------------------------------------------------
+# stratum pattern matching (engine integration)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class BitmatrixPlan:
+    kind: str                 # "tc" | "sg"
+    idb: str
+    edb: str
+    n: int
+    use_pallas: bool
+    iterations: int = 0
+
+    def execute(self, store: dict[str, Any], engine) -> None:
+        from repro.core.relation import TupleRelation
+
+        edges = store[self.edb].to_numpy()
+        arc = edges_to_bitmatrix(edges, self.n)
+        if self.kind == "tc":
+            m, iters = tc_fixpoint(arc, self.n, use_pallas=self.use_pallas)
+        else:
+            m, iters = sg_fixpoint(arc, self.n, use_pallas=self.use_pallas)
+        self.iterations = iters
+        result = bitmatrix_to_edges(m, self.n)
+        store[self.idb] = TupleRelation.from_numpy(self.idb, result, engine.domain)
+
+
+def _is_var(t, name=None):
+    return isinstance(t, Var) and (name is None or t.name == name)
+
+
+def match_bitmatrix_stratum(stratum: Stratum, domain: int, config) -> BitmatrixPlan | None:
+    """Recognize TC-shaped and SG-shaped strata (paper's PBME targets)."""
+    if not stratum.recursive or stratum.mutual or len(stratum.preds) != 1:
+        return None
+    idb = stratum.preds[0]
+    rules = stratum.rules
+    if any(r.has_aggregate or any(a.negated for a in r.atoms) for r in rules):
+        return None
+    if len(rules) != 2:
+        return None
+    base = next((r for r in rules if all(a.pred != idb for a in r.atoms)), None)
+    rec = next((r for r in rules if any(a.pred == idb for a in r.atoms)), None)
+    if base is None or rec is None:
+        return None
+
+    # TC:  idb(x,y) :- e(x,y).   idb(x,y) :- idb(x,z), e(z,y).
+    if (
+        len(base.atoms) == 1
+        and not base.comparisons
+        and base.atoms[0].arity == 2
+        and len(base.head_terms) == 2
+        and base.atoms[0].terms == base.head_terms
+        and len(rec.atoms) == 2
+        and not rec.comparisons
+    ):
+        a0, a1 = rec.atoms
+        h = rec.head_terms
+        if (
+            a0.pred == idb
+            and a1.pred == base.atoms[0].pred
+            and a0.arity == a1.arity == 2
+            and _is_var(h[0])
+            and _is_var(h[1])
+            and a0.terms[0] == h[0]
+            and a0.terms[1] == a1.terms[0]
+            and a1.terms[1] == h[1]
+        ):
+            return BitmatrixPlan(
+                "tc", idb, base.atoms[0].pred, domain, config.use_pallas_bitmm
+            )
+
+    # SG:  idb(x,y) :- e(p,x), e(p,y), x != y.
+    #      idb(x,y) :- e(a,x), idb(a,b), e(b,y).
+    if (
+        len(base.atoms) == 2
+        and len(base.comparisons) == 1
+        and base.comparisons[0].op == "!="
+        and len(rec.atoms) == 3
+    ):
+        e = base.atoms[0].pred
+        b0, b1 = base.atoms
+        h = base.head_terms
+        sg_base_ok = (
+            b0.pred == b1.pred == e
+            and b0.terms[0] == b1.terms[0]
+            and b0.terms[1] == h[0]
+            and b1.terms[1] == h[1]
+        )
+        r0, r1, r2 = rec.atoms
+        hr = rec.head_terms
+        sg_rec_ok = (
+            r0.pred == e
+            and r1.pred == idb
+            and r2.pred == e
+            and r0.terms[1] == hr[0]
+            and r0.terms[0] == r1.terms[0]
+            and r1.terms[1] == r2.terms[0]
+            and r2.terms[1] == hr[1]
+        )
+        if sg_base_ok and sg_rec_ok:
+            return BitmatrixPlan("sg", idb, e, domain, config.use_pallas_bitmm)
+
+    return None

@@ -1,0 +1,637 @@
+"""The RecStep interpreter: Algorithm 1 on JAX (paper §4, §5).
+
+Host Python owns loop control (exactly as the paper's interpreter does); every
+relational operator runs on device.  Per recursive stratum, per iteration and
+per IDB ``R``:
+
+    R_t  ← uieval(rules(R, s))          # UIE: ONE fused evaluation of all
+                                        #       delta-variants deriving R
+    analyze(R_t)                        # OOF: scalar counts only
+    R_δ  ← dedup(R_t)                   # FAST-DEDUP analogue (compact keys)
+    ΔR   ← R_δ − R                      # DSD: OPSD/TPSD per cost model
+    R    ← R ⊎ ΔR                       # sorted merge (EOST: stays on device)
+
+Dense backends (the paper's "specialized data structures"): unary recursive
+IDBs → bit-vector; recursive MIN/MAX aggregates → dense value tables; dense
+binary TC/SG-shaped strata → PBME bit-matrix (see ``bitmatrix.py``).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregates import eval_expr, groupby_aggregate
+from repro.core.analyzer import Stratification, Stratum, analyze
+from repro.core.ast import Agg, Atom, Program, Rule, Var
+from repro.core.joins import (
+    Bindings,
+    antijoin,
+    apply_comparison,
+    init_bindings,
+    join_counts,
+    join_materialize,
+    order_atoms,
+    project_head,
+)
+from repro.core.relation import (
+    DenseAggRelation,
+    DenseSetRelation,
+    TupleRelation,
+    _dedup_sorted,
+    _sort_pad,
+    next_bucket,
+)
+from repro.core.seminaive import RuleVariant, delta_variants
+from repro.core.setdiff import DSDState, set_difference
+from repro.relational.sort import SENTINEL
+
+
+# --------------------------------------------------------------------------
+# configuration & statistics
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class EngineConfig:
+    enable_uie: bool = True          # Unified IDB Evaluation
+    enable_oof: bool = True          # per-iteration stats-driven planning
+    dsd: str = "dynamic"             # dynamic | opsd | tpsd
+    enable_eost: bool = True         # off: simulate per-iteration commits
+    enable_dense: bool = True        # dense set/agg specializations
+    backend: str = "auto"            # auto | tuple | bitmatrix
+    max_bitmatrix_n: int = 1 << 15   # PBME memory gate (paper §5.3)
+    use_pallas_bitmm: bool = False   # PBME via the Pallas kernel (interpret on CPU)
+    alpha: float = 4.0               # DSD cost-model α (see setdiff.calibrate_alpha)
+    max_iters: int = 1_000_000
+    capacity_min: int = 128
+    checkpoint_every: int = 0        # fixpoint checkpoint cadence (0 = off)
+    checkpoint_dir: str | None = None
+    eost_spill_dir: str | None = None  # EOST-off ablation writes here
+
+
+@dataclass
+class IterationRecord:
+    stratum: int
+    iteration: int
+    idb: str
+    candidates: int = 0
+    deduped: int = 0
+    delta: int = 0
+    full: int = 0
+    dsd_strategy: str = "-"
+    seconds: float = 0.0
+
+
+@dataclass
+class EvalStats:
+    records: list[IterationRecord] = field(default_factory=list)
+    iterations: dict[int, int] = field(default_factory=dict)
+    backend_used: dict[str, str] = field(default_factory=dict)
+    total_seconds: float = 0.0
+
+    def total_iterations(self) -> int:
+        return sum(self.iterations.values())
+
+
+# --------------------------------------------------------------------------
+# relation views (uniform join interface over physical representations)
+# --------------------------------------------------------------------------
+
+
+class TupleView:
+    """Read view for the join machinery: rows (sorted by col 0) + count."""
+
+    def __init__(self, rows: jax.Array, count: int, domain: int):
+        self.rows = rows
+        self.count = count
+        self.domain = domain
+        self._by_col: dict[int, tuple[jax.Array, jax.Array]] = {}
+
+    def sorted_by(self, col: int) -> tuple[jax.Array, jax.Array]:
+        if col == 0:
+            return self.rows, self.rows[:, 0]
+        if col not in self._by_col:
+            key = self.rows[:, col]
+            order = jnp.argsort(key, stable=True)
+            srt = self.rows[order]
+            self._by_col[col] = (srt, srt[:, col])
+        return self._by_col[col]
+
+
+def _empty_view(arity: int, domain: int) -> TupleView:
+    return TupleView(jnp.full((1, arity), SENTINEL, jnp.int32), 0, domain)
+
+
+# --------------------------------------------------------------------------
+# engine
+# --------------------------------------------------------------------------
+
+
+class Engine:
+    def __init__(self, config: EngineConfig | None = None):
+        self.config = config or EngineConfig()
+        self.stats = EvalStats()
+
+    # -- public API --------------------------------------------------------
+
+    def run(
+        self,
+        program: Program | str,
+        edb: dict[str, np.ndarray],
+        resume_from: str | None = None,
+    ) -> dict[str, np.ndarray]:
+        if isinstance(program, str):
+            from repro.core.parser import parse
+
+            program = parse(program)
+        strat = analyze(program)
+        t_start = time.perf_counter()
+
+        domain = 1
+        for arr in edb.values():
+            arr = np.asarray(arr)
+            if arr.size:
+                domain = max(domain, int(arr.max()) + 1)
+        self.domain = domain
+
+        store: dict[str, Any] = {}
+        for name in strat.edb:
+            if name not in edb:
+                raise KeyError(f"missing EDB relation {name!r}")
+            store[name] = TupleRelation.from_numpy(name, edb[name], domain)
+
+        start_stratum, start_iter = 0, 0
+        if resume_from is not None:
+            start_stratum, start_iter, store = self._load_fixpoint(
+                resume_from, strat, store
+            )
+
+        for stratum in strat.strata:
+            if stratum.index < start_stratum:
+                continue
+            it0 = start_iter if stratum.index == start_stratum else 0
+            self._eval_stratum(strat, stratum, store, start_iteration=it0)
+
+        self.stats.total_seconds = time.perf_counter() - t_start
+        out: dict[str, np.ndarray] = {}
+        for name in strat.idb:
+            out[name] = store[name].to_numpy() if name in store else np.zeros(
+                (0, program.arity_of(name)), np.int32
+            )
+        return out
+
+    # -- stratum evaluation -------------------------------------------------
+
+    def _eval_stratum(
+        self,
+        strat: Stratification,
+        stratum: Stratum,
+        store: dict[str, Any],
+        start_iteration: int = 0,
+    ) -> None:
+        cfg = self.config
+
+        # PBME: dense binary TC/SG-shaped strata on the bit-matrix backend
+        if cfg.backend in ("auto", "bitmatrix") and not stratum.has_recursive_agg:
+            from repro.core.bitmatrix import match_bitmatrix_stratum
+
+            plan = match_bitmatrix_stratum(stratum, self.domain, cfg)
+            if plan is not None and (
+                cfg.backend == "bitmatrix" or self.domain <= cfg.max_bitmatrix_n
+            ):
+                plan.execute(store, self)
+                self.stats.backend_used[stratum.preds[0]] = "bitmatrix"
+                self.stats.iterations[stratum.index] = plan.iterations
+                return
+
+        groups = delta_variants(stratum)
+        handles = self._init_handles(strat, stratum, store, fresh=start_iteration == 0)
+        for p in stratum.preds:
+            self.stats.backend_used[p] = handles[p]
+        dsd_state = {p: DSDState(alpha=cfg.alpha) for p in stratum.preds}
+        deltas: dict[str, TupleView | None] = {p: None for p in stratum.preds}
+
+        iteration = start_iteration
+        while True:
+            any_delta = False
+            for pred in stratum.preds:
+                t0 = time.perf_counter()
+                variants = [
+                    v
+                    for v in groups[pred]
+                    if (v.delta_idx is None) == (iteration == 0)
+                ]
+                if not variants and iteration > 0:
+                    # pred only has base rules — no recursion on it
+                    self._note(stratum, iteration, pred, 0, 0, 0, store, t0)
+                    continue
+                rec = self._eval_idb_iteration(
+                    strat, stratum, store, handles, deltas, dsd_state,
+                    pred, variants, iteration,
+                )
+                rec.seconds = time.perf_counter() - t0
+                self.stats.records.append(rec)
+                if rec.delta > 0:
+                    any_delta = True
+            iteration += 1
+            self.stats.iterations[stratum.index] = iteration
+
+            if not cfg.enable_eost:
+                self._simulate_commit(stratum, store)
+            if (
+                cfg.checkpoint_every
+                and cfg.checkpoint_dir
+                and iteration % cfg.checkpoint_every == 0
+            ):
+                self._save_fixpoint(cfg.checkpoint_dir, stratum.index, iteration, store)
+
+            if not stratum.recursive:
+                break                                    # Alg. 1 line 15
+            if iteration > 0 and not any_delta:
+                break                                    # fixpoint
+            if iteration >= cfg.max_iters:
+                raise RuntimeError("max_iters exceeded without fixpoint")
+
+    def _note(self, stratum, iteration, pred, cand, dd, dl, store, t0):
+        h = store.get(pred)
+        full = getattr(h, "count", 0)
+        self.stats.records.append(
+            IterationRecord(
+                stratum.index, iteration, pred, cand, dd, dl, full,
+                "-", time.perf_counter() - t0,
+            )
+        )
+
+    def _init_handles(
+        self,
+        strat: Stratification,
+        stratum: Stratum,
+        store: dict[str, Any],
+        fresh: bool = True,
+    ) -> dict[str, str]:
+        """Choose the physical representation per IDB (dense specializations)."""
+        cfg = self.config
+        kinds: dict[str, str] = {}
+        for pred in stratum.preds:
+            arity = strat.pred_arity(pred)
+            rules = stratum.rules_for(pred)
+            agg_ops = {
+                t.op
+                for r in rules
+                for t in r.head_terms
+                if isinstance(t, Agg)
+            }
+            dense_agg = (
+                cfg.enable_dense
+                and stratum.recursive
+                and arity == 2
+                and agg_ops in ({"MIN"}, {"MAX"})
+                and all(
+                    len(r.head_terms) == 2
+                    and isinstance(r.head_terms[0], Var)
+                    and isinstance(r.head_terms[1], Agg)
+                    for r in rules
+                )
+            )
+            dense_set = (
+                cfg.enable_dense and stratum.recursive and arity == 1 and not agg_ops
+            )
+            if dense_agg:
+                kinds[pred] = "dense_agg"
+                if fresh or pred not in store:
+                    store[pred] = DenseAggRelation.empty(
+                        pred, self.domain, next(iter(agg_ops))
+                    )
+            elif dense_set:
+                kinds[pred] = "dense_set"
+                if fresh or pred not in store:
+                    store[pred] = DenseSetRelation.empty(pred, self.domain)
+            else:
+                kinds[pred] = "tuple"
+                if fresh or pred not in store:
+                    store[pred] = TupleRelation.empty(
+                        pred, arity, self.domain, cfg.capacity_min
+                    )
+        self._kinds = kinds
+        return kinds
+
+    # -- one (IDB, iteration) ------------------------------------------------
+
+    def _eval_idb_iteration(
+        self,
+        strat: Stratification,
+        stratum: Stratum,
+        store: dict[str, Any],
+        handles: dict[str, str],
+        deltas: dict[str, TupleView | None],
+        dsd_state: dict[str, DSDState],
+        pred: str,
+        variants: list[RuleVariant],
+        iteration: int,
+    ) -> IterationRecord:
+        cfg = self.config
+        kind = handles[pred]
+        rec = IterationRecord(stratum.index, iteration, pred, 0, 0, 0, 0)
+
+        # ---- uieval: evaluate every variant's body ----
+        buffers: list[tuple[jax.Array, jax.Array, Rule]] = []
+        for var in variants:
+            res = self._eval_variant(strat, stratum, store, deltas, var)
+            if res is not None:
+                buffers.append(res)
+
+        if kind == "dense_agg":
+            handle: DenseAggRelation = store[pred]
+            new = handle
+            # Δ semantics: facts live in Δ for exactly one iteration.  With
+            # no candidates this iteration, Δ must CLEAR (a stale Δ would
+            # re-fire forever — dead-end frontiers); with several buffers,
+            # Δ is the UNION of per-update improvements.
+            delta_acc = jnp.zeros((handle.n,), bool)
+            for rows_or_bind, valid, rule in buffers:
+                agg = rule.head_terms[1]
+                assert isinstance(agg, Agg)
+                bind = rows_or_bind
+                keys = bind.cols[rule.head_terms[0]]
+                vals = eval_expr(agg.arg, bind)
+                new = new.update(
+                    jnp.clip(keys, 0, handle.n - 1), vals, bind.valid
+                )
+                delta_acc = delta_acc | new.delta
+            new = DenseAggRelation(
+                new.name, new.n, new.op, new.values, delta_acc,
+                new.count, int(delta_acc.sum()),
+            )
+            store[pred] = new
+            deltas[pred] = None  # dense deltas materialized on demand
+            rec.candidates = sum(int(b[1].sum()) for b in buffers)
+            rec.delta, rec.full = new.delta_count, new.count
+            return rec
+
+        if kind == "dense_set":
+            handle: DenseSetRelation = store[pred]
+            new = handle
+            delta_acc = jnp.zeros((handle.n,), bool)
+            for rows_or_bind, valid, rule in buffers:
+                bind = rows_or_bind
+                keys = bind.cols[rule.head_terms[0]]
+                new = new.update(jnp.clip(keys, 0, handle.n - 1), bind.valid)
+                delta_acc = delta_acc | new.delta
+            new = DenseSetRelation(
+                new.name, new.n, new.member, delta_acc,
+                new.count, int(delta_acc.sum()),
+            )
+            store[pred] = new
+            deltas[pred] = None
+            rec.candidates = sum(int(b[1].sum()) for b in buffers)
+            rec.delta, rec.full = new.delta_count, new.count
+            return rec
+
+        # ---- tuple path: UIE concat → dedup → DSD → merge ----
+        handle: TupleRelation = store[pred]
+        if not buffers:
+            deltas[pred] = _empty_view(handle.arity, self.domain)
+            rec.full = handle.count
+            return rec
+
+        if cfg.enable_uie:
+            cand = jnp.concatenate([b[0] for b in buffers], axis=0)
+        else:
+            # ablation: dedup each subquery separately, then re-union (the
+            # paper's "Individual IDB Evaluation" with temp tables, Fig. 4)
+            parts = []
+            for rows, valid, _rule in buffers:
+                cap_i = next_bucket(rows.shape[0], cfg.capacity_min)
+                srt = _sort_pad(rows, cap_i, self.domain)
+                dd, _ = _dedup_sorted(srt, self.domain)
+                parts.append(dd)
+            cand = jnp.concatenate(parts, axis=0)
+        rec.candidates = int(jnp.sum(cand[:, 0] != SENTINEL))
+
+        cap = next_bucket(cand.shape[0], cfg.capacity_min)
+        cand = _sort_pad(cand, cap, self.domain)
+        deduped, dd_count = _dedup_sorted(cand, self.domain)
+        rec.deduped = int(dd_count)
+
+        delta_rows, delta_count, strategy = set_difference(
+            deduped,
+            rec.deduped,
+            handle.rows,
+            handle.count,
+            self.domain,
+            dsd_state[pred],
+            mode=cfg.dsd if cfg.enable_oof or cfg.dsd != "dynamic" else "opsd",
+        )
+        rec.dsd_strategy = strategy
+        rec.delta = delta_count
+
+        store[pred] = handle.merge(delta_rows, delta_count)
+        rec.full = store[pred].count
+        dcap = next_bucket(max(delta_count, 1), cfg.capacity_min)
+        deltas[pred] = TupleView(delta_rows[:dcap], delta_count, self.domain)
+        return rec
+
+    # -- body evaluation ------------------------------------------------------
+
+    def _view_for(
+        self,
+        strat: Stratification,
+        stratum: Stratum,
+        store: dict[str, Any],
+        deltas: dict[str, TupleView | None],
+        atom: Atom,
+        use_delta: bool,
+    ) -> TupleView:
+        cfg = self.config
+        handle = store.get(atom.pred)
+        if handle is None:
+            return _empty_view(atom.arity, self.domain)
+        if isinstance(handle, TupleRelation):
+            if use_delta:
+                view = deltas.get(atom.pred)
+                return view if view is not None else _empty_view(atom.arity, self.domain)
+            return TupleView(handle.rows, handle.count, self.domain)
+        # dense handles: materialize a tuple view
+        cap = next_bucket(
+            max(handle.delta_count if use_delta else handle.count, 1),
+            cfg.capacity_min,
+        )
+        if isinstance(handle, DenseSetRelation):
+            rows, count = handle.delta_tuples(cap) if use_delta else (
+                self._dense_set_full(handle, cap)
+            )
+            return TupleView(rows, count, self.domain)
+        if isinstance(handle, DenseAggRelation):
+            rows, count = (
+                handle.delta_tuples(cap) if use_delta else handle.full_tuples(cap)
+            )
+            return TupleView(rows, count, self.domain)
+        raise TypeError(type(handle))
+
+    @staticmethod
+    def _dense_set_full(handle: DenseSetRelation, cap: int):
+        keys = jnp.where(handle.member, jnp.arange(handle.n), SENTINEL)
+        order = jnp.argsort(keys)
+        return keys[order][:cap, None].astype(jnp.int32), handle.count
+
+    def _eval_variant(
+        self,
+        strat: Stratification,
+        stratum: Stratum,
+        store: dict[str, Any],
+        deltas: dict[str, TupleView | None],
+        variant: RuleVariant,
+    ):
+        cfg = self.config
+        rule = variant.rule
+        atoms = list(rule.atoms)
+        pred_set = set(stratum.preds)
+
+        views: dict[int, TupleView] = {}
+        for i, atom in enumerate(atoms):
+            if atom.negated:
+                continue
+            use_delta = variant.delta_idx == i
+            views[i] = self._view_for(strat, stratum, store, deltas, atom, use_delta)
+            if views[i].count == 0:
+                return None   # empty input ⇒ empty body (positive atoms only)
+
+        sizes = {i: v.count for i, v in views.items()}
+        order = order_atoms(atoms, variant.delta_idx, sizes, oof=cfg.enable_oof)
+
+        first = order[0]
+        bindings = init_bindings(atoms[first], views[first].rows, views[first].count)
+        pending_cmps = list(rule.comparisons)
+        bindings, pending_cmps = self._apply_ready(bindings, pending_cmps)
+
+        for i in order[1:]:
+            atom, view = atoms[i], views[i]
+            shared = [v for v in atom.vars() if v in bindings.cols]
+            if shared:
+                key_var = shared[0]
+                col = next(
+                    p
+                    for p, t in enumerate(atom.terms)
+                    if isinstance(t, Var) and t == key_var
+                )
+                build_rows, build_key = view.sorted_by(col)
+                probe_key = bindings.cols[key_var]
+                lo, counts = join_counts(bindings, probe_key, build_key)
+            else:
+                build_rows = view.rows
+                lo = jnp.zeros(bindings.valid.shape, jnp.int32)
+                counts = jnp.where(bindings.valid, view.count, 0)
+            total = int(counts.sum())
+            if total == 0:
+                return None
+            cap = next_bucket(total, cfg.capacity_min)
+            bindings = join_materialize(bindings, atom, build_rows, lo, counts, cap)
+            bindings, pending_cmps = self._apply_ready(bindings, pending_cmps)
+
+        for atom in atoms:
+            if atom.negated:
+                view = self._view_for(strat, stratum, store, deltas, atom, False)
+                bindings = antijoin(bindings, atom, view.rows, self.domain)
+
+        assert not pending_cmps, f"unapplied comparisons in {rule}"
+
+        if rule.has_aggregate:
+            if self._kinds.get(rule.head_pred) in ("dense_agg",):
+                return bindings, bindings.valid, rule
+            cap = next_bucket(bindings.capacity, cfg.capacity_min)
+            rows, _count = groupby_aggregate(rule, bindings, cap)
+            return rows, rows[:, 0] != SENTINEL, rule
+        if self._kinds.get(rule.head_pred) in ("dense_set",):
+            return bindings, bindings.valid, rule
+        rows, valid = project_head(rule, bindings)
+        return rows, valid, rule
+
+    @staticmethod
+    def _apply_ready(bindings: Bindings, cmps: list):
+        remaining = []
+        for c in cmps:
+            if all(v in bindings.cols for v in c.vars()):
+                bindings = apply_comparison(bindings, c)
+            else:
+                remaining.append(c)
+        return bindings, remaining
+
+    # -- EOST ablation & fault tolerance --------------------------------------
+
+    def _simulate_commit(self, stratum: Stratum, store: dict[str, Any]) -> None:
+        """EOST-off: force a host round-trip (and optional disk write) per
+        iteration — the 'dirty page writeback' the paper's EOST avoids."""
+        blobs = {}
+        for pred in stratum.preds:
+            h = store.get(pred)
+            if h is None:
+                continue
+            for fname in ("rows", "member", "values"):
+                arr = getattr(h, fname, None)
+                if arr is not None:
+                    blobs[f"{pred}.{fname}"] = np.asarray(arr)
+        if self.config.eost_spill_dir:
+            os.makedirs(self.config.eost_spill_dir, exist_ok=True)
+            np.savez(
+                os.path.join(self.config.eost_spill_dir, f"commit_{stratum.index}.npz"),
+                **blobs,
+            )
+
+    def _save_fixpoint(
+        self, path: str, stratum_index: int, iteration: int, store: dict[str, Any]
+    ) -> None:
+        os.makedirs(path, exist_ok=True)
+        blobs: dict[str, np.ndarray] = {
+            "__meta__": np.array([stratum_index, iteration, self.domain], np.int64)
+        }
+        for name, h in store.items():
+            if isinstance(h, TupleRelation):
+                blobs[f"t::{name}"] = np.asarray(h.rows)
+                blobs[f"tc::{name}"] = np.array([h.count])
+            elif isinstance(h, DenseSetRelation):
+                blobs[f"s::{name}"] = np.asarray(h.member)
+                blobs[f"sd::{name}"] = np.asarray(h.delta)
+            elif isinstance(h, DenseAggRelation):
+                blobs[f"a::{name}::{h.op}"] = np.asarray(h.values)
+                blobs[f"ad::{name}"] = np.asarray(h.delta)
+        tmp = os.path.join(path, "fixpoint.npz.tmp.npz")
+        np.savez(tmp, **blobs)
+        os.replace(tmp, os.path.join(path, "fixpoint.npz"))
+
+    def _load_fixpoint(self, path: str, strat: Stratification, store: dict[str, Any]):
+        data = np.load(os.path.join(path, "fixpoint.npz"))
+        stratum_index, iteration, domain = data["__meta__"]
+        self.domain = int(domain)
+        for key in data.files:
+            if key == "__meta__":
+                continue
+            kind, name = key.split("::")[0], key.split("::")[1]
+            if kind == "t":
+                rows = jnp.asarray(data[key])
+                count = int(data[f"tc::{name}"][0])
+                store[name] = TupleRelation(
+                    name, rows.shape[1], rows, count, self.domain
+                )
+            elif kind == "s":
+                member = jnp.asarray(data[key])
+                delta = jnp.asarray(data[f"sd::{name}"])
+                store[name] = DenseSetRelation(
+                    name, member.shape[0], member, delta,
+                    int(member.sum()), int(delta.sum()),
+                )
+            elif kind == "a":
+                op = key.split("::")[2]
+                values = jnp.asarray(data[key])
+                delta = jnp.asarray(data[f"ad::{name}"])
+                h = DenseAggRelation(name, values.shape[0], op, values, delta)
+                h.count = int((values != h.absent).sum())
+                h.delta_count = int(delta.sum())
+                store[name] = h
+        return int(stratum_index), int(iteration), store

@@ -1,0 +1,247 @@
+"""Sort-merge join plans: the TPU-native replacement for hash joins.
+
+A rule body is evaluated as a left-deep sequence of binding-table ⋈ atom
+steps.  Each step probes the binding table's key column into the atom's
+relation *sorted by the join column* (the sorted table is the "index"; probing
+is two `searchsorted`s — no hash build).  Match expansion is the vectorized
+offsets+searchsorted trick with an exact, host-chosen output capacity (the
+counts pass is the paper's `analyze()` — OOF's lightweight statistics).
+
+Join-order selection is re-done **every iteration** from live relation counts
+(OOF at plan level): delta atom first, then greedily the atom sharing a
+variable with the bound set, tie-broken by smallest current count.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ast import Atom, Cmp, Const, Rule, Var
+from repro.relational.sort import SENTINEL, compact_key, lexsort_rows
+from repro.core.relation import next_bucket
+
+
+@dataclass
+class Bindings:
+    """Intermediate join result: one column per bound variable."""
+
+    cols: dict[Var, jax.Array]     # each int32[capacity]
+    valid: jax.Array               # bool[capacity]
+    count: int                     # host-side number of valid rows (≤ capacity)
+
+    @property
+    def capacity(self) -> int:
+        return self.valid.shape[0]
+
+
+def _apply_local_filters(atom: Atom, cols: list[jax.Array]) -> jax.Array:
+    """Constants and repeated variables *within* one atom."""
+    valid = jnp.ones(cols[0].shape, bool)
+    seen: dict[Var, int] = {}
+    for pos, term in enumerate(atom.terms):
+        if isinstance(term, Const):
+            valid &= cols[pos] == term.value
+        elif isinstance(term, Var) and term.name != "_":
+            if term in seen:
+                valid &= cols[pos] == cols[seen[term]]
+            else:
+                seen[term] = pos
+    return valid
+
+
+def init_bindings(atom: Atom, rows: jax.Array, count: int) -> Bindings:
+    """First atom: select+project the relation into a binding table."""
+    cols = [rows[:, i] for i in range(rows.shape[1])]
+    valid = _apply_local_filters(atom, cols) & (cols[0] != SENTINEL)
+    out: dict[Var, jax.Array] = {}
+    for pos, term in enumerate(atom.terms):
+        if isinstance(term, Var) and term.name != "_" and term not in out:
+            out[term] = jnp.where(valid, cols[pos], SENTINEL)
+    return Bindings(out, valid, count)
+
+
+def join_counts(
+    bindings: Bindings,
+    probe_key: jax.Array,
+    build_key: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Counts pass: per-probe-row match ranges (lo, counts)."""
+    lo = jnp.searchsorted(build_key, probe_key, side="left")
+    hi = jnp.searchsorted(build_key, probe_key, side="right")
+    counts = hi - lo
+    counts = jnp.where(bindings.valid & (probe_key != SENTINEL), counts, 0)
+    return lo, counts
+
+
+def join_materialize(
+    bindings: Bindings,
+    atom: Atom,
+    build_rows: jax.Array,
+    lo: jax.Array,
+    counts: jax.Array,
+    out_capacity: int,
+) -> Bindings:
+    """Expansion pass: gather matched (probe, build) pairs and extend bindings."""
+    offsets = jnp.cumsum(counts)
+    total = offsets[-1]
+    slots = jnp.arange(out_capacity, dtype=counts.dtype)
+    probe_idx = jnp.minimum(
+        jnp.searchsorted(offsets, slots, side="right"), counts.shape[0] - 1
+    )
+    excl = offsets[probe_idx] - counts[probe_idx]
+    build_idx = lo[probe_idx] + (slots - excl)
+    valid = slots < total
+    probe_idx = jnp.where(valid, probe_idx, 0)
+    build_idx = jnp.where(valid, jnp.minimum(build_idx, build_rows.shape[0] - 1), 0)
+
+    t_cols = [build_rows[build_idx, i] for i in range(build_rows.shape[1])]
+    valid &= _apply_local_filters(atom, t_cols)
+
+    out: dict[Var, jax.Array] = {
+        v: col[probe_idx] for v, col in bindings.cols.items()
+    }
+    for pos, term in enumerate(atom.terms):
+        if isinstance(term, Var) and term.name != "_":
+            if term in out:
+                valid &= out[term] == t_cols[pos]     # shared non-key var
+            else:
+                out[term] = t_cols[pos]
+    out = {v: jnp.where(valid, c, SENTINEL) for v, c in out.items()}
+    return Bindings(out, valid, int(total))
+
+
+def apply_comparison(bindings: Bindings, cmp: Cmp) -> Bindings:
+    def val(term):
+        if isinstance(term, Const):
+            return jnp.int32(term.value)
+        return bindings.cols[term]
+
+    l, r = val(cmp.lhs), val(cmp.rhs)
+    op = {
+        "==": jnp.equal,
+        "!=": jnp.not_equal,
+        "<": jnp.less,
+        "<=": jnp.less_equal,
+        ">": jnp.greater,
+        ">=": jnp.greater_equal,
+    }[cmp.op]
+    valid = bindings.valid & op(l, r)
+    cols = {v: jnp.where(valid, c, SENTINEL) for v, c in bindings.cols.items()}
+    return Bindings(cols, valid, bindings.count)
+
+
+def membership(
+    probe_rows: jax.Array, table_rows: jax.Array, domain: int
+) -> jax.Array:
+    """``bool[n_probe]``: is each probe tuple present in the table?
+
+    Compact-key fast path (CCK) when the domain allows, else the universal
+    concat-lexsort membership (any arity, any domain).
+    """
+    pk = compact_key(probe_rows, domain)
+    tk = compact_key(table_rows, domain)
+    if pk is not None and tk is not None:
+        lo = jnp.searchsorted(tk, pk, side="left")
+        hi = jnp.searchsorted(tk, pk, side="right")
+        return (hi > lo) & (pk != SENTINEL)
+    # universal: tag sources, lexsort, member iff equal adjacent row from table
+    n_p, n_t = probe_rows.shape[0], table_rows.shape[0]
+    rows = jnp.concatenate([table_rows, probe_rows], axis=0)
+    src = jnp.concatenate(
+        [jnp.zeros((n_t,), jnp.int32), jnp.ones((n_p,), jnp.int32)]
+    )
+    tagged = jnp.concatenate([rows, src[:, None]], axis=1)
+    order = lexsort_rows(tagged)
+    srt = tagged[order]
+    same_as_prev = jnp.concatenate(
+        [
+            jnp.zeros((1,), bool),
+            jnp.all(srt[1:, :-1] == srt[:-1, :-1], axis=1),
+        ]
+    )
+    # propagate "a table row exists in this equal-run" forward through the run
+    from_table = srt[:, -1] == 0
+
+    def scan_fn(carry, x):
+        same, is_t = x
+        carry = (carry & same) | is_t
+        return carry, carry
+
+    _, run_has_table = jax.lax.scan(
+        scan_fn, jnp.bool_(False), (same_as_prev, from_table)
+    )
+    is_member_sorted = run_has_table & (srt[:, -1] == 1)
+    member = jnp.zeros((n_t + n_p,), bool).at[order].set(is_member_sorted)
+    out = member[n_t:]
+    return out & (probe_rows[:, 0] != SENTINEL)
+
+
+def antijoin(bindings: Bindings, atom: Atom, table_rows: jax.Array, domain: int) -> Bindings:
+    """Stratified negation: drop binding rows whose atom tuple is in the table."""
+    cols = []
+    for term in atom.terms:
+        if isinstance(term, Const):
+            cols.append(jnp.full(bindings.valid.shape, term.value, jnp.int32))
+        else:
+            cols.append(bindings.cols[term])
+    probe = jnp.stack(cols, axis=1)
+    probe = jnp.where(bindings.valid[:, None], probe, SENTINEL)
+    member = membership(probe, table_rows, domain)
+    valid = bindings.valid & ~member
+    out = {v: jnp.where(valid, c, SENTINEL) for v, c in bindings.cols.items()}
+    return Bindings(out, valid, bindings.count)
+
+
+def order_atoms(
+    atoms: list[Atom],
+    delta_idx: int | None,
+    sizes: dict[int, int],
+    oof: bool = True,
+) -> list[int]:
+    """OOF join ordering from live stats: Δ first, then greedy shared-var,
+    smallest-relation tie-break.  With ``oof=False``: textual order."""
+    pos_idx = [i for i, a in enumerate(atoms) if not a.negated]
+    if not oof:
+        if delta_idx is not None:
+            return [delta_idx] + [i for i in pos_idx if i != delta_idx]
+        return pos_idx
+    remaining = set(pos_idx)
+    order: list[int] = []
+    if delta_idx is not None:
+        order.append(delta_idx)
+        remaining.discard(delta_idx)
+    else:
+        first = min(remaining, key=lambda i: sizes.get(i, 1 << 30))
+        order.append(first)
+        remaining.discard(first)
+    bound: set[Var] = set(atoms[order[0]].vars())
+    while remaining:
+        connected = [i for i in remaining if set(atoms[i].vars()) & bound]
+        pool = connected or list(remaining)
+        nxt = min(pool, key=lambda i: sizes.get(i, 1 << 30))
+        order.append(nxt)
+        remaining.discard(nxt)
+        bound |= set(atoms[nxt].vars())
+    return order
+
+
+def project_head(
+    rule: Rule, bindings: Bindings, capacity: int | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Project bound variables onto plain (non-aggregate) head terms."""
+    cols = []
+    for term in rule.head_terms:
+        if isinstance(term, Const):
+            cols.append(
+                jnp.where(bindings.valid, jnp.int32(term.value), SENTINEL)
+            )
+        elif isinstance(term, Var):
+            cols.append(bindings.cols[term])
+        else:
+            raise ValueError("aggregate heads handled by aggregates.project_agg")
+    rows = jnp.stack(cols, axis=1)
+    rows = jnp.where(bindings.valid[:, None], rows, SENTINEL)
+    return rows, bindings.valid

@@ -1,0 +1,172 @@
+"""Parser for the paper's Datalog surface syntax.
+
+Grammar (per paper §3 and §6.2 benchmark programs)::
+
+    program  := (rule '.')*
+    rule     := atom ':-' body | atom            (facts allowed)
+    body     := item (',' item)*
+    item     := ['!'|'¬'] pred '(' terms ')' | term cmp term
+    term     := var | int | '_'
+    headterm := term | AGG '(' expr ')'
+    expr     := addend ('+' addend)*
+
+Comments: ``// ...`` and ``% ...`` to end of line.
+"""
+
+from __future__ import annotations
+
+import re
+
+from repro.core.ast import (
+    AGG_OPS,
+    Agg,
+    Atom,
+    Cmp,
+    Const,
+    Expr,
+    Program,
+    Rule,
+    Var,
+)
+
+_TOKEN = re.compile(
+    r"\s*(?:(?P<comment>(?://|%)[^\n]*)"
+    r"|(?P<name>[A-Za-z_][A-Za-z0-9_]*)"
+    r"|(?P<int>-?\d+)"
+    r"|(?P<op>:-|!=|==|<=|>=|<|>|=|\+|!|¬|\(|\)|,|\.)"
+    r")"
+)
+
+
+def _tokenize(text: str) -> list[str]:
+    tokens: list[str] = []
+    pos = 0
+    while pos < len(text):
+        m = _TOKEN.match(text, pos)
+        if not m:
+            if text[pos:].strip() == "":
+                break
+            raise SyntaxError(f"bad token at: {text[pos:pos+30]!r}")
+        pos = m.end()
+        if m.lastgroup == "comment" or m.group().strip() == "":
+            continue
+        tokens.append(m.group().strip())
+    return tokens
+
+
+class _Parser:
+    def __init__(self, tokens: list[str]):
+        self.toks = tokens
+        self.i = 0
+
+    def peek(self) -> str | None:
+        return self.toks[self.i] if self.i < len(self.toks) else None
+
+    def pop(self, expect: str | None = None) -> str:
+        if self.i >= len(self.toks):
+            raise SyntaxError("unexpected end of program")
+        t = self.toks[self.i]
+        if expect is not None and t != expect:
+            raise SyntaxError(f"expected {expect!r}, got {t!r}")
+        self.i += 1
+        return t
+
+    def parse_program(self) -> Program:
+        prog = Program()
+        while self.peek() is not None:
+            prog.rules.append(self.parse_rule())
+        prog.validate()
+        return prog
+
+    def parse_rule(self) -> Rule:
+        head_pred, head_terms = self.parse_head()
+        body: list = []
+        if self.peek() == ":-":
+            self.pop(":-")
+            body.append(self.parse_body_item())
+            while self.peek() == ",":
+                self.pop(",")
+                body.append(self.parse_body_item())
+        self.pop(".")
+        return Rule(head_pred, tuple(head_terms), tuple(body))
+
+    def parse_head(self):
+        pred = self.pop()
+        self.pop("(")
+        terms: list = []
+        while True:
+            terms.append(self.parse_head_term())
+            if self.peek() == ",":
+                self.pop(",")
+                continue
+            break
+        self.pop(")")
+        return pred, terms
+
+    def parse_head_term(self):
+        t = self.peek()
+        assert t is not None
+        if t.upper() in AGG_OPS and self.toks[self.i + 1] == "(":
+            self.pop()
+            self.pop("(")
+            expr = self.parse_expr()
+            self.pop(")")
+            return Agg(t.upper(), expr)
+        return self.parse_term()
+
+    def parse_expr(self) -> Expr:
+        vars_: list[Var] = []
+        const = 0
+        while True:
+            t = self.parse_term()
+            if isinstance(t, Var):
+                vars_.append(t)
+            else:
+                const += t.value
+            if self.peek() == "+":
+                self.pop("+")
+                continue
+            break
+        return Expr(tuple(vars_), const)
+
+    def parse_term(self):
+        t = self.pop()
+        if re.fullmatch(r"-?\d+", t):
+            return Const(int(t))
+        if not re.fullmatch(r"[A-Za-z_][A-Za-z0-9_]*", t):
+            raise SyntaxError(f"expected term, got {t!r}")
+        return Var(t)
+
+    def parse_body_item(self):
+        negated = False
+        if self.peek() in ("!", "¬"):
+            # negation only if followed by a predicate atom
+            nxt = self.toks[self.i + 1 : self.i + 3]
+            if len(nxt) == 2 and nxt[1] == "(":
+                self.pop()
+                negated = True
+        # lookahead: atom `p(...)` vs comparison `t op t`
+        if (
+            re.fullmatch(r"[A-Za-z_][A-Za-z0-9_]*", self.toks[self.i])
+            and self.i + 1 < len(self.toks)
+            and self.toks[self.i + 1] == "("
+        ):
+            pred = self.pop()
+            self.pop("(")
+            terms: list = [self.parse_term()]
+            while self.peek() == ",":
+                self.pop(",")
+                terms.append(self.parse_term())
+            self.pop(")")
+            return Atom(pred, tuple(terms), negated=negated)
+        lhs = self.parse_term()
+        op = self.pop()
+        if op == "=":
+            op = "=="
+        rhs = self.parse_term()
+        return Cmp(op, lhs, rhs)
+
+
+def parse(text: str) -> Program:
+    """Parse Datalog source text into a validated :class:`Program`."""
+    return _Parser(_tokenize(text)).parse_program()

@@ -1,0 +1,245 @@
+"""Device-resident relations (EOST: state never leaves the device).
+
+Three physical representations, chosen by the engine per-IDB (the paper's
+"specialized data structures" lever):
+
+* :class:`TupleRelation`    — sorted ``int32[capacity, arity]`` + count; the
+  general representation (program analysis, arbitrary arity).
+* :class:`DenseSetRelation` — ``bool[n]`` for unary recursive IDBs (REACH):
+  the bit-vector cousin of PBME.
+* :class:`DenseAggRelation` — ``int32[n]`` best-value table for recursive
+  MIN/MAX aggregates (CC, SSSP): a group-by whose key is the active domain
+  *is* a dense array.
+
+Capacities are power-of-two buckets; growth doubles the bucket, which bounds
+recompilation (OOF plan-selection happens at bucket granularity).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.relational.sort import SENTINEL, compact_key, lexsort_rows, unique_mask
+
+INT_INF = int(SENTINEL)
+
+
+def next_bucket(n: int, minimum: int = 128) -> int:
+    return max(minimum, 1 << int(np.ceil(np.log2(max(n, 1)))))
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "domain"))
+def _sort_pad(rows: jax.Array, capacity: int, domain: int) -> jax.Array:
+    pad = jnp.full((capacity - rows.shape[0], rows.shape[1]), SENTINEL, jnp.int32)
+    rows = jnp.concatenate([rows.astype(jnp.int32), pad], axis=0)
+    key = compact_key(rows, domain)
+    order = jnp.argsort(key) if key is not None else lexsort_rows(rows)
+    return rows[order]
+
+
+@functools.partial(jax.jit, static_argnames=("domain",))
+def _dedup_sorted(rows: jax.Array, domain: int) -> tuple[jax.Array, jax.Array]:
+    """Sorted rows → (unique rows first + SENTINEL pads, unique count)."""
+    mask = unique_mask(rows)
+    kept = jnp.where(mask[:, None], rows, SENTINEL)
+    order = jnp.argsort(~mask, stable=True)
+    return kept[order], mask.sum()
+
+
+@functools.partial(jax.jit, static_argnames=("col",))
+def _sorted_by_col(rows: jax.Array, col: int) -> tuple[jax.Array, jax.Array]:
+    key = rows[:, col]
+    # pads already have SENTINEL keys; stable sort keeps lex order within key
+    order = jnp.argsort(key, stable=True)
+    srt = rows[order]
+    return srt, srt[:, col]
+
+
+@dataclass
+class TupleRelation:
+    """Sorted fixed-capacity tuple table."""
+
+    name: str
+    arity: int
+    rows: jax.Array          # int32[capacity, arity], lex-sorted, pads last
+    count: int               # host-side valid-row count (the OOF statistic)
+    domain: int              # active-domain size (compact-key eligibility)
+    _by_col: dict[int, tuple[jax.Array, jax.Array]] = field(default_factory=dict)
+
+    @property
+    def capacity(self) -> int:
+        return self.rows.shape[0]
+
+    @classmethod
+    def empty(cls, name: str, arity: int, domain: int, capacity: int = 128):
+        rows = jnp.full((capacity, arity), SENTINEL, jnp.int32)
+        return cls(name, arity, rows, 0, domain)
+
+    @classmethod
+    def from_numpy(cls, name: str, data: np.ndarray, domain: int):
+        data = np.asarray(data, dtype=np.int32)
+        if data.ndim == 1:
+            data = data[:, None]
+        data = np.unique(data, axis=0) if data.size else data
+        cap = next_bucket(len(data))
+        rows = _sort_pad(jnp.asarray(data), cap, domain)
+        return cls(name, data.shape[1], rows, int(len(data)), domain)
+
+    def sorted_by(self, col: int) -> tuple[jax.Array, jax.Array]:
+        """Relation sorted by one column (join index); cached per column."""
+        if col == 0:
+            return self.rows, self.rows[:, 0]
+        if col not in self._by_col:
+            self._by_col[col] = _sorted_by_col(self.rows, col)
+        return self._by_col[col]
+
+    def merge(self, delta_rows: jax.Array, delta_count: int) -> "TupleRelation":
+        """R ⊎ ΔR keeping the table sorted (ΔR pre-deduped, disjoint from R)."""
+        if delta_count == 0:
+            return self
+        new_count = self.count + delta_count
+        cap = self.capacity
+        while cap < new_count:
+            cap *= 2
+        merged = _merge_sorted(self.rows, delta_rows, cap, self.domain)
+        return TupleRelation(self.name, self.arity, merged, new_count, self.domain)
+
+    def to_numpy(self) -> np.ndarray:
+        return np.asarray(self.rows[: self.count])
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "domain"))
+def _merge_sorted(a: jax.Array, b: jax.Array, capacity: int, domain: int) -> jax.Array:
+    rows = jnp.concatenate([a, b], axis=0)
+    if rows.shape[0] < capacity:
+        pad = jnp.full((capacity - rows.shape[0], rows.shape[1]), SENTINEL, jnp.int32)
+        rows = jnp.concatenate([rows, pad], axis=0)
+    key = compact_key(rows, domain)
+    order = jnp.argsort(key) if key is not None else lexsort_rows(rows)
+    out = rows[order]
+    return out[:capacity]
+
+
+@dataclass
+class DenseSetRelation:
+    """Unary recursive IDB as a boolean membership vector (REACH)."""
+
+    name: str
+    n: int
+    member: jax.Array        # bool[n]
+    delta: jax.Array         # bool[n] — newly added last iteration
+    count: int = 0
+    delta_count: int = 0
+
+    @classmethod
+    def empty(cls, name: str, n: int):
+        z = jnp.zeros((n,), bool)
+        return cls(name, n, z, z, 0, 0)
+
+    def update(self, candidate_keys: jax.Array, valid: jax.Array) -> "DenseSetRelation":
+        """Insert candidates; Δ = candidates not already members."""
+        keys = jnp.where(valid, candidate_keys, 0)
+        hit = jnp.zeros((self.n,), bool).at[keys].max(valid)
+        delta = hit & ~self.member
+        member = self.member | delta
+        return DenseSetRelation(
+            self.name,
+            self.n,
+            member,
+            delta,
+            int(member.sum()),
+            int(delta.sum()),
+        )
+
+    def delta_tuples(self, capacity: int) -> tuple[jax.Array, int]:
+        """Materialize Δ as a (capacity, 1) tuple view for the join machinery."""
+        keys = jnp.where(self.delta, jnp.arange(self.n), SENTINEL)
+        order = jnp.argsort(keys)
+        rows = keys[order][:capacity, None].astype(jnp.int32)
+        return rows, self.delta_count
+
+    def to_numpy(self) -> np.ndarray:
+        return np.flatnonzero(np.asarray(self.member)).astype(np.int32)[:, None]
+
+
+@dataclass
+class DenseAggRelation:
+    """Recursive MIN/MAX aggregate IDB as a dense best-value table (CC/SSSP)."""
+
+    name: str
+    n: int
+    op: str                  # "MIN" | "MAX"
+    values: jax.Array        # int32[n]; INT_INF (MIN) / -INT_INF (MAX) = absent
+    delta: jax.Array         # bool[n] — keys improved last iteration
+    count: int = 0
+    delta_count: int = 0
+
+    @property
+    def absent(self) -> int:
+        return INT_INF if self.op == "MIN" else -INT_INF
+
+    @classmethod
+    def empty(cls, name: str, n: int, op: str):
+        absent = INT_INF if op == "MIN" else -INT_INF
+        return cls(
+            name,
+            n,
+            op,
+            jnp.full((n,), absent, jnp.int32),
+            jnp.zeros((n,), bool),
+            0,
+            0,
+        )
+
+    def update(
+        self, candidate_keys: jax.Array, candidate_vals: jax.Array, valid: jax.Array
+    ) -> "DenseAggRelation":
+        keys = jnp.where(valid, candidate_keys, 0)
+        if self.op == "MIN":
+            vals = jnp.where(valid, candidate_vals, INT_INF)
+            best = jnp.full((self.n,), INT_INF, jnp.int32).at[keys].min(vals)
+            improved = best < self.values
+            values = jnp.minimum(self.values, best)
+        else:
+            vals = jnp.where(valid, candidate_vals, -INT_INF)
+            best = jnp.full((self.n,), -INT_INF, jnp.int32).at[keys].max(vals)
+            improved = best > self.values
+            values = jnp.maximum(self.values, best)
+        return DenseAggRelation(
+            self.name,
+            self.n,
+            self.op,
+            values,
+            improved,
+            int((values != self.absent).sum()),
+            int(improved.sum()),
+        )
+
+    def delta_tuples(self, capacity: int) -> tuple[jax.Array, int]:
+        keys = jnp.where(self.delta, jnp.arange(self.n), SENTINEL)
+        order = jnp.argsort(keys)
+        srt = keys[order][:capacity].astype(jnp.int32)
+        vals = jnp.where(
+            srt != SENTINEL, self.values[jnp.minimum(srt, self.n - 1)], SENTINEL
+        )
+        return jnp.stack([srt, vals], axis=1), self.delta_count
+
+    def full_tuples(self, capacity: int) -> tuple[jax.Array, int]:
+        present = self.values != self.absent
+        keys = jnp.where(present, jnp.arange(self.n), SENTINEL)
+        order = jnp.argsort(keys)
+        srt = keys[order][:capacity].astype(jnp.int32)
+        vals = jnp.where(
+            srt != SENTINEL, self.values[jnp.minimum(srt, self.n - 1)], SENTINEL
+        )
+        return jnp.stack([srt, vals], axis=1), self.count
+
+    def to_numpy(self) -> np.ndarray:
+        vals = np.asarray(self.values)
+        keys = np.flatnonzero(vals != self.absent)
+        return np.stack([keys, vals[keys]], axis=1).astype(np.int32)

@@ -1,0 +1,43 @@
+"""Semi-naïve delta rewriting (paper §3.2), incl. non-linear & mutual recursion.
+
+For a rule whose body holds k atoms of the current stratum, emit k variants —
+variant i reads atom i from Δ (previous iteration's new facts) and every other
+stratum atom from the full current relation.  Rules with no stratum atom in
+the body are *base rules*, evaluated once at iteration 0.  The union of all
+variants deriving one IDB is evaluated as a single fused program (UIE).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.analyzer import Stratum
+from repro.core.ast import Rule
+
+
+@dataclass(frozen=True)
+class RuleVariant:
+    rule: Rule
+    delta_idx: int | None          # body-atom index read from Δ; None = base rule
+
+    def __repr__(self) -> str:
+        mark = f" [Δ@{self.delta_idx}]" if self.delta_idx is not None else " [base]"
+        return repr(self.rule) + mark
+
+
+def delta_variants(stratum: Stratum) -> dict[str, list[RuleVariant]]:
+    """IDB pred → variants (UIE groups: all variants of one head together)."""
+    groups: dict[str, list[RuleVariant]] = {p: [] for p in stratum.preds}
+    pred_set = set(stratum.preds)
+    for rule in stratum.rules:
+        rec_positions = [
+            i
+            for i, a in enumerate(rule.atoms)
+            if a.pred in pred_set and not a.negated
+        ]
+        if not stratum.recursive or not rec_positions:
+            groups[rule.head_pred].append(RuleVariant(rule, None))
+        else:
+            for i in rec_positions:
+                groups[rule.head_pred].append(RuleVariant(rule, i))
+    return groups

@@ -1,0 +1,20 @@
+"""Synthetic data pipelines: graphs (Gn-p, RMAT), LM token streams,
+program-analysis EDBs, recsys click streams.  All deterministic given a seed
+and resumable via an explicit cursor (checkpointable data state)."""
+
+from repro.data.graphs import gnp_graph, rmat_graph, grid_mesh_graph, batched_molecules
+from repro.data.tokens import TokenStream
+from repro.data.program_facts import andersen_facts, csda_facts, cspa_facts
+from repro.data.recsys_stream import RecsysStream
+
+__all__ = [
+    "gnp_graph",
+    "rmat_graph",
+    "grid_mesh_graph",
+    "batched_molecules",
+    "TokenStream",
+    "andersen_facts",
+    "csda_facts",
+    "cspa_facts",
+    "RecsysStream",
+]

@@ -1,0 +1,15 @@
+from repro.distributed.sharding import (
+    param_sharding,
+    batch_sharding,
+    lm_param_spec,
+    dp_axes_of,
+)
+from repro.distributed.hlo import collective_bytes
+
+__all__ = [
+    "param_sharding",
+    "batch_sharding",
+    "lm_param_spec",
+    "dp_axes_of",
+    "collective_bytes",
+]

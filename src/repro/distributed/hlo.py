@@ -1,0 +1,60 @@
+"""HLO analysis: collective-bytes extraction for the roofline.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but not collective
+traffic, so we parse the (compiled or lowered) HLO text and sum operand bytes
+of every collective op, bucketed by kind.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %x = f32[128,1024]{1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|([a-z0-9]+)\[([0-9,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nbytes = _DTYPE_BYTES.get(dtype, 4)
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * nbytes
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output-shape bytes per collective kind (plus 'total')."""
+    out: dict[str, int] = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        tuple_shapes, dtype, dims, kind = m.group(1), m.group(2), m.group(3), m.group(4)
+        if "-done(" in m.group(0):
+            continue  # avoid double counting start/done pairs
+        size = 0
+        if tuple_shapes is not None:
+            for sm in _SHAPE_RE.finditer(tuple_shapes):
+                size += _shape_bytes(sm.group(1), sm.group(2))
+        else:
+            size = _shape_bytes(dtype, dims)
+        out[kind] += size
+        out["total"] += size
+    return dict(out)

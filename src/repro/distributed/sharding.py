@@ -1,0 +1,110 @@
+"""Sharding rules: DP over (pod, data), TP/EP over model, SP for long decode.
+
+Rules are name+rank based over plain pytrees (no logical-axis framework):
+
+* vocab/embedding tables       → vocab dim over ``model``
+* attention / FFN in-proj      → output features over ``model``  (column)
+* attention / FFN out-proj     → input features over ``model``   (row)
+* MoE expert stacks (E, d, f)  → expert dim over ``model``       (EP)
+* norms, biases, routers       → replicated
+* batch-like inputs            → leading dim over (pod, data)
+
+Scan-stacked layer params carry a leading L dim → specs get a None prefix.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+TP = "model"
+
+_COLUMN = {"wq", "wk", "wv", "w_gate", "w_up", "w_dkv", "w_uk", "w_uv"}
+_ROW = {"wo", "w_down"}
+_TABLES = {"embed", "user_table", "item_table"}
+
+
+def dp_axes_of(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+    return out
+
+
+def lm_param_spec(path, leaf) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    scanned = 1 if "layers" in names else 0
+    base_ndim = leaf.ndim - scanned
+    prefix = (None,) * scanned
+
+    if name in _TABLES and leaf.ndim == 2:
+        return P(TP, None)
+    if name == "unembed" and leaf.ndim == 2:
+        return P(None, TP)
+    if name in _COLUMN:
+        if base_ndim == 3 and "shared" not in names:      # MoE expert stack
+            return P(*prefix, TP, None, None)
+        if base_ndim == 2:
+            return P(*prefix, None, TP)
+    if name in _ROW:
+        if base_ndim == 3 and "shared" not in names:      # MoE expert stack
+            return P(*prefix, TP, None, None)
+        if base_ndim == 2:
+            return P(*prefix, TP, None)
+    return P()                                             # replicate
+
+
+def _divisible(spec: P, shape, mesh: Mesh) -> bool:
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        shards = 1
+        for a in axes:
+            shards *= mesh.shape[a]
+        if dim % shards != 0:
+            return False
+    return True
+
+
+def param_sharding(params, mesh: Mesh, spec_fn=lm_param_spec):
+    """Pytree of NamedShardings following the rules above.
+
+    Falls back to replication when a sharded dim is not divisible by the
+    axis size (e.g. granite's vocab 49155 on 16-way ``model``) — jit
+    in_shardings require exact divisibility.
+    """
+
+    def one(path, leaf):
+        spec = spec_fn(path, leaf)
+        if not _divisible(spec, leaf.shape, mesh):
+            spec = P()
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_sharding(batch, mesh: Mesh):
+    """Leading (batch/edge/token) dim over all DP axes; rest replicated."""
+    dp = dp_axes_of(mesh)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(dp, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+def replicated(tree, mesh: Mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,165 @@
+"""Pallas TPU kernel: boolean bit-matrix matmul (the PBME hot loop).
+
+The paper's PBME evaluates TC/SG by per-row scalar worklists over a bit
+matrix — a MIMD-thread design.  The TPU-native adaptation runs the same
+boolean-semiring product on the MXU:
+
+  * operands stay **bit-packed in HBM/VMEM** (uint32, 32 bits/word) — 8×
+    less HBM traffic than bytes, 32× less than f32;
+  * each (128, 128)-bit tile is **unpacked in-register** to {0,1} bf16,
+    multiplied on the MXU with f32 accumulation (counts ≤ K fit exactly),
+    thresholded, and **re-packed** before the store;
+  * the semi-naïve epilogue (Δ' = New & ~M; M' = M | Δ') is **fused** into
+    the same kernel, so dedup + set-difference never touch HBM as dense data.
+
+Tiling: grid (M/TM, N/TN, K/TK); A tile (TM, TK/32) words, B tile (TK, TN/32)
+words, C tile (TM, TN/32) words, f32 accumulator (TM, TN) in VMEM scratch.
+TM = TK = TN = 128 keeps every MXU operand at the native 128×128.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # pltpu is import-safe on CPU; used for VMEM scratch + memory spaces
+    from jax.experimental.pallas import tpu as pltpu
+except Exception:  # pragma: no cover
+    pltpu = None
+
+WORD = 32
+TM = 128          # output row tile
+TN = 128          # output col tile (bits) = 4 uint32 words
+TK = 128          # contraction tile (bits) = 4 uint32 words
+
+
+def _unpack_tile(words: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    """uint32[r, w] → {0,1}[r, w*32] (bit j of word w → column 32w + j)."""
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (words[:, :, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(words.shape[0], -1).astype(dtype)
+
+
+def _pack_tile(bits: jax.Array) -> jax.Array:
+    """bool[r, c] (c % 32 == 0) → uint32[r, c/32]."""
+    r, c = bits.shape
+    b = bits.reshape(r, c // WORD, WORD).astype(jnp.uint32)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    return (b << shifts).sum(axis=-1, dtype=jnp.uint32)
+
+
+def _bitmm_kernel(a_ref, b_ref, c_ref, acc_ref, *, k_blocks: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = _unpack_tile(a_ref[...])                      # (TM, TK) {0,1} bf16
+    b = _unpack_tile(b_ref[...])                      # (TK, TN) {0,1} bf16
+    acc_ref[...] += jax.lax.dot(
+        a, b, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_blocks - 1)
+    def _done():
+        c_ref[...] = _pack_tile(acc_ref[...] > 0.0)
+
+
+def _bitmm_fused_kernel(a_ref, b_ref, m_ref, delta_ref, mout_ref, acc_ref, *, k_blocks: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = _unpack_tile(a_ref[...])
+    b = _unpack_tile(b_ref[...])
+    acc_ref[...] += jax.lax.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_blocks - 1)
+    def _done():
+        new = _pack_tile(acc_ref[...] > 0.0)
+        m = m_ref[...]
+        delta = new & ~m                              # DSD fused: andnot
+        delta_ref[...] = delta
+        mout_ref[...] = m | delta                     # merge fused: or
+
+
+def _scratch():
+    if pltpu is not None:
+        return [pltpu.VMEM((TM, TN), jnp.float32)]
+    return [pl.MemorySpace.ANY((TM, TN), jnp.float32)]  # pragma: no cover
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitmm_call(a: jax.Array, b: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """C = A ⊛ B on packed operands.
+
+    a: uint32[M, K/32]; b: uint32[K, N/32]; M, K, N multiples of 128.
+    """
+    m, kw = a.shape
+    k, nw = b.shape
+    assert kw * WORD == k, (a.shape, b.shape)
+    k_blocks = k // TK
+    grid = (m // TM, nw * WORD // TN, k_blocks)
+    return pl.pallas_call(
+        functools.partial(_bitmm_kernel, k_blocks=k_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TM, TK // WORD), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((TK, TN // WORD), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((TM, TN // WORD), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, nw), jnp.uint32),
+        scratch_shapes=_scratch(),
+        compiler_params=(
+            pltpu.CompilerParams(
+                dimension_semantics=("parallel", "parallel", "arbitrary")
+            )
+            if pltpu is not None and not interpret
+            else None
+        ),
+        interpret=interpret,
+    )(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitmm_fused_delta_call(
+    a: jax.Array, b: jax.Array, m_cur: jax.Array, *, interpret: bool = True
+) -> tuple[jax.Array, jax.Array]:
+    """One fused PBME iteration: (Δ', M') = ((A⊛B) & ~M, M | Δ')."""
+    m, kw = a.shape
+    k, nw = b.shape
+    assert kw * WORD == k and m_cur.shape == (m, nw)
+    k_blocks = k // TK
+    grid = (m // TM, nw * WORD // TN, k_blocks)
+    return pl.pallas_call(
+        functools.partial(_bitmm_fused_kernel, k_blocks=k_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TM, TK // WORD), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((TK, TN // WORD), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((TM, TN // WORD), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TM, TN // WORD), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((TM, TN // WORD), lambda i, j, kk: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, nw), jnp.uint32),
+            jax.ShapeDtypeStruct((m, nw), jnp.uint32),
+        ],
+        scratch_shapes=_scratch(),
+        compiler_params=(
+            pltpu.CompilerParams(
+                dimension_semantics=("parallel", "parallel", "arbitrary")
+            )
+            if pltpu is not None and not interpret
+            else None
+        ),
+        interpret=interpret,
+    )(a, b, m_cur)

@@ -1,0 +1,79 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Each op pads its inputs to the kernel's tile grid, dispatches to the Pallas
+implementation (``interpret=True`` off-TPU so the kernel body executes on
+CPU for validation), and un-pads the result.  ``ref.py`` holds the pure-jnp
+oracles the tests compare against.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bitmm as _bitmm
+from repro.kernels import gather_sum as _gather
+
+WORD = 32
+TILE = 128
+TILE_W = TILE // WORD
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad2(x: jax.Array, r: int, c: int, value=0) -> jax.Array:
+    pr, pc = (-x.shape[0]) % r, (-x.shape[1]) % c
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)), constant_values=value)
+    return x
+
+
+def bitmm(a: jax.Array, b: jax.Array, n: int | None = None) -> jax.Array:
+    """Boolean matmul on bit-packed uint32 operands (PBME hot loop).
+
+    a: uint32[M, Kw], b: uint32[K, Nw] with K = Kw*32.  Arbitrary sizes —
+    padded to the 128-bit tile grid; zero bits are absorbing for OR-AND.
+    """
+    m0, kw0 = a.shape
+    k0, nw0 = b.shape
+    a_p = _pad2(a, TILE, TILE_W)
+    b_p = _pad2(b, TILE, TILE_W)
+    if a_p.shape[1] * WORD != b_p.shape[0]:
+        b_p = _pad2(b_p, a_p.shape[1] * WORD, TILE_W)
+    out = _bitmm.bitmm_call(a_p, b_p, interpret=not _on_tpu())
+    return out[:m0, :nw0]
+
+
+def bitmm_fused_delta(
+    a: jax.Array, b: jax.Array, m_cur: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Fused PBME iteration: (Δ', M') = ((A⊛B) & ~M, M | Δ')."""
+    m0, _ = a.shape
+    _, nw0 = b.shape
+    a_p = _pad2(a, TILE, TILE_W)
+    b_p = _pad2(b, TILE, TILE_W)
+    if a_p.shape[1] * WORD != b_p.shape[0]:
+        b_p = _pad2(b_p, a_p.shape[1] * WORD, TILE_W)
+    m_p = _pad2(m_cur, TILE, TILE_W)
+    m_p = m_p[: a_p.shape[0], : b_p.shape[1]]
+    delta, m_new = _bitmm.bitmm_fused_delta_call(
+        a_p, b_p, m_p, interpret=not _on_tpu()
+    )
+    return delta[:m0, :nw0], m_new[:m0, :nw0]
+
+
+def spmm_ell(idx: jax.Array, x: jax.Array) -> jax.Array:
+    """ELL SpMM: out[i] = Σ_k x[idx[i,k]] (pad = -1).  GNN aggregation."""
+    d0 = x.shape[1]
+    x_p = _pad2(x, 1, TILE)
+    out = _gather.gather_sum_call(idx, x_p, interpret=not _on_tpu())
+    return out[:, :d0]
+
+
+def embed_bag(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """Embedding-bag: out[b] = Σ_k table[idx[b,k]] (pad = -1).  RecSys."""
+    return spmm_ell(idx, table)

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WORD = 32
+
+
+def unpack_bits(packed: jax.Array) -> jax.Array:
+    """uint32[n, w] → float32[n, w*32] of {0,1}."""
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (packed[:, :, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(packed.shape[0], -1).astype(jnp.float32)
+
+
+def pack_bits(dense: jax.Array) -> jax.Array:
+    """{0,1}[n, m] (m % 32 == 0) → uint32[n, m/32]."""
+    n, m = dense.shape
+    d = dense.reshape(n, m // WORD, WORD).astype(jnp.uint32)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    return (d << shifts).sum(axis=-1, dtype=jnp.uint32)
+
+
+def bitmm(a_packed: jax.Array, b_packed: jax.Array) -> jax.Array:
+    """Boolean matmul oracle: C = (A ⊛ B) over the OR-AND semiring.
+
+    a_packed: uint32[M, K/32]; b_packed: uint32[K, N/32] → uint32[M, N/32].
+    """
+    a = unpack_bits(a_packed)                    # [M, K]
+    b = unpack_bits(b_packed)                    # [K, N]
+    c = (a @ b) > 0.0
+    return pack_bits(c)
+
+
+def bitmm_fused_delta(
+    a_packed: jax.Array, b_packed: jax.Array, m_packed: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """PBME iteration with fused epilogue: Δ' = (A⊛B) & ~M;  M' = M | Δ'."""
+    new = bitmm(a_packed, b_packed)
+    delta = new & ~m_packed
+    return delta, m_packed | delta
+
+
+def spmm_ell(
+    idx: jax.Array, x: jax.Array, valid: jax.Array | None = None
+) -> jax.Array:
+    """ELL (padded neighbor list) SpMM oracle.
+
+    idx: int32[n, K] neighbor ids (-1 pad); x: f32[n_src, D] → f32[n, D]
+    out[i] = sum_k x[idx[i, k]] over valid k.
+    """
+    if valid is None:
+        valid = idx >= 0
+    safe = jnp.maximum(idx, 0)
+    gathered = x[safe]                            # [n, K, D]
+    gathered = jnp.where(valid[:, :, None], gathered, 0.0)
+    return gathered.sum(axis=1)
+
+
+def embed_bag(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """Embedding-bag oracle: idx int32[B, K] (-1 pad) → f32[B, D] sums."""
+    valid = idx >= 0
+    safe = jnp.maximum(idx, 0)
+    rows = table[safe]                            # [B, K, D]
+    rows = jnp.where(valid[:, :, None], rows, 0.0)
+    return rows.sum(axis=1)

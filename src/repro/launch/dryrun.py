@@ -1,0 +1,204 @@
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices, set
+# before ANY other import — jax locks the device count on first init.
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "").replace(
+        "--xla_force_host_platform_device_count=512", ""
+    )
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell: ``jax.jit(fn, in_shardings=…).lower(*specs).compile()`` on the
+single-pod (16, 16) and multi-pod (2, 16, 16) production meshes, recording
+
+  * ``compiled.memory_analysis()``  — proves the cell fits per-device HBM,
+  * ``compiled.cost_analysis()``    — HLO FLOPs / bytes for the roofline,
+  * collective bytes parsed from the compiled HLO (repro.distributed.hlo),
+  * the analytic MODEL_FLOPS from the registry.
+
+Results stream into ``results/dryrun.json`` (one JSON per cell) so an
+interrupted sweep resumes where it left off.  Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun [--mesh single|multi|both]
+        [--arch A] [--shape S] [--out results/dryrun.json] [--refresh]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import registry
+from repro.distributed.hlo import collective_bytes
+from repro.launch.mesh import make_production_mesh
+
+
+def run_cell(arch: str, shape: str, mesh, mesh_name: str) -> dict:
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_name,
+        "devices": int(len(mesh.devices.flat)),
+        "status": "?",
+    }
+    t0 = time.time()
+    try:
+        cell = registry.build_cell(arch, shape, mesh)
+        rec.update(step=cell.step, note=cell.note, model_flops=cell.model_flops)
+        if cell.skip and not cell.bonus:
+            rec["status"] = "skip"
+            rec["skip_reason"] = cell.skip
+            return rec
+        if cell.skip:
+            rec["skip_reason"] = cell.skip
+            rec["bonus"] = True
+
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings)
+        lowered = jitted.lower(*cell.args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0 - rec["lower_s"], 1)
+
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            ):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    rec[k] = int(v)
+
+        cost = compiled.cost_analysis()
+        if cost:
+            rec["hlo_flops"] = float(cost.get("flops", 0.0))
+            rec["hlo_bytes"] = float(cost.get("bytes accessed", 0.0))
+        try:
+            hlo = compiled.as_text()
+        except Exception:
+            hlo = lowered.as_text()
+        rec["collectives"] = collective_bytes(hlo)
+        rec["hlo_len"] = len(hlo)
+        rec["status"] = "ok" if not cell.skip else "bonus-ok"
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {str(e)[:500]}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def load_results(path: str) -> dict:
+    try:
+        with open(path) as f:
+            return {tuple(k.split("|")): v for k, v in json.load(f).items()}
+    except (OSError, json.JSONDecodeError):
+        return {}
+
+
+def save_results(path: str, results: dict) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"|".join(k): v for k, v in results.items()}, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--refresh", action="store_true")
+    ap.add_argument("--include-datalog", action="store_true", default=True)
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, "dry-run requires 512 placeholder devices"
+    results = {} if args.refresh else load_results(args.out)
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single-pod-16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi-pod-2x16x16", make_production_mesh(multi_pod=True)))
+
+    cells = registry.all_cells()
+    if args.arch:
+        cells = [c for c in cells if c[0] == args.arch]
+    if args.shape:
+        cells = [c for c in cells if c[1] == args.shape]
+
+    for mesh_name, mesh in meshes:
+        for arch, shape in cells:
+            key = (mesh_name, arch, shape)
+            if key in results and results[key]["status"] in ("ok", "skip", "bonus-ok"):
+                continue
+            print(f"[dryrun] {mesh_name} {arch} × {shape} ...", flush=True)
+            rec = run_cell(arch, shape, mesh, mesh_name)
+            results[key] = rec
+            save_results(args.out, results)
+            print(
+                f"  -> {rec['status']}"
+                + (f" ({rec.get('error','')[:120]})" if rec["status"] == "FAIL" else "")
+                + f" [{rec.get('total_s', 0)}s]",
+                flush=True,
+            )
+
+        # paper-native workload: distributed PBME TC step (bonus row)
+        if args.include_datalog and not args.arch:
+            key = (mesh_name, "datalog-tc-pbme", "g80k")
+            if key not in results or results[key]["status"] == "FAIL":
+                print(f"[dryrun] {mesh_name} datalog-tc-pbme × g80k ...", flush=True)
+                rec = {
+                    "arch": "datalog-tc-pbme",
+                    "shape": "g80k",
+                    "mesh": mesh_name,
+                    "status": "?",
+                }
+                t0 = time.time()
+                try:
+                    from repro.core.distributed import lower_tc_step
+
+                    row_axes = (
+                        ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+                    )
+                    lowered = lower_tc_step(mesh, 81920, row_axes=row_axes)
+                    compiled = lowered.compile()
+                    cost = compiled.cost_analysis()
+                    rec["hlo_flops"] = float(cost.get("flops", 0.0))
+                    rec["hlo_bytes"] = float(cost.get("bytes accessed", 0.0))
+                    rec["collectives"] = collective_bytes(compiled.as_text())
+                    mem = compiled.memory_analysis()
+                    if mem is not None:
+                        rec["temp_size_in_bytes"] = int(
+                            getattr(mem, "temp_size_in_bytes", 0)
+                        )
+                        rec["argument_size_in_bytes"] = int(
+                            getattr(mem, "argument_size_in_bytes", 0)
+                        )
+                    # useful work: one boolean matmul on n×n bits
+                    n = 81920
+                    rec["model_flops"] = 2.0 * n * n * n / 32
+                    rec["status"] = "ok"
+                except Exception as e:
+                    rec["status"] = "FAIL"
+                    rec["error"] = f"{type(e).__name__}: {str(e)[:300]}"
+                rec["total_s"] = round(time.time() - t0, 1)
+                results[key] = rec
+                save_results(args.out, results)
+                print(f"  -> {rec['status']} [{rec['total_s']}s]", flush=True)
+
+    n_ok = sum(1 for r in results.values() if r["status"] in ("ok", "bonus-ok"))
+    n_skip = sum(1 for r in results.values() if r["status"] == "skip")
+    n_fail = sum(1 for r in results.values() if r["status"] == "FAIL")
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skip, {n_fail} FAIL -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Model zoo: the 10 assigned architectures as selectable configs.
+
+Every model is a pair of pure functions ``init(key, cfg) → params`` and
+``apply(params, batch, cfg) → outputs`` over plain dict pytrees — no module
+framework, fully pjit/shard_map-compatible.
+"""

@@ -1,0 +1,84 @@
+"""Shared functional building blocks (no module framework, plain pytrees)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out), dtype) * scale).astype(dtype)
+
+
+def mlp_init(key, dims: tuple[int, ...], dtype=jnp.float32, bias: bool = True):
+    params = {}
+    keys = jax.random.split(key, len(dims) - 1)
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        params[f"w{i}"] = dense_init(keys[i], a, b, dtype)
+        if bias:
+            params[f"b{i}"] = jnp.zeros((b,), dtype)
+    return params
+
+
+def mlp_apply(params, x, act=jax.nn.relu, final_act: bool = False):
+    n = len([k for k in params if k.startswith("w")])
+    for i in range(n):
+        x = x @ params[f"w{i}"]
+        if f"b{i}" in params:
+            x = x + params[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    mean = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    return y * params["scale"] + params["bias"]
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype)}   # gemma-style (1 + w) convention
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    y = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0) -> jax.Array:
+    """Rotary embedding.  x: [..., S, H, D]; positions: [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # [...,S,1,half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array, ignore: int = -1):
+    """Mean token cross-entropy in f32, ignoring ``ignore`` labels.
+
+    The gold logit is extracted with a one-hot contraction rather than
+    ``take_along_axis`` so GSPMD keeps vocab-sharded logits sharded (the
+    one-hot fuses into the reduction; a gather would force an all-gather of
+    the full [B,S,V] logits)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    gold = jnp.einsum("...v,...v->...", logits, onehot)
+    mask = (labels != ignore).astype(jnp.float32)
+    loss = (logz - gold) * mask
+    return loss.sum() / jnp.maximum(mask.sum(), 1.0)

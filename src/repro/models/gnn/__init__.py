@@ -1,0 +1,11 @@
+from repro.models.gnn.common import GraphBatch, GNNConfig
+from repro.models.gnn import gcn, meshgraphnet, schnet, graphcast
+
+MODELS = {
+    "gcn": gcn,
+    "meshgraphnet": meshgraphnet,
+    "schnet": schnet,
+    "graphcast": graphcast,
+}
+
+__all__ = ["GraphBatch", "GNNConfig", "MODELS", "gcn", "meshgraphnet", "schnet", "graphcast"]

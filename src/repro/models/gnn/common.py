@@ -1,0 +1,82 @@
+"""Shared GNN containers and helpers.
+
+Message passing here is *relational*: gather(src) → combine → segment(dst),
+the exact primitive the Datalog engine's dense aggregates lower to (see
+DESIGN.md §Arch-applicability).  All models consume a :class:`GraphBatch`
+of static shapes (padded edges, -1 sentinels) — TPU-friendly.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.relational.segment import segment_sum, segment_mean
+
+
+class GraphBatch(NamedTuple):
+    """Static-shape graph container (-1 edge pads).  NOTE: all fields are
+    pytree leaves (traced under jit); static quantities like the number of
+    graphs are derived from shapes (``labels.shape[0]``), never stored."""
+
+    node_feat: jax.Array            # f32[N, Din]
+    senders: jax.Array              # int32[E]  (-1 pad)
+    receivers: jax.Array            # int32[E]
+    edge_feat: jax.Array | None     # f32[E, De] or None
+    pos: jax.Array | None           # f32[N, 3] or None
+    graph_ids: jax.Array | None     # int32[N] for batched small graphs
+    labels: jax.Array | None        # task-dependent
+
+
+@dataclass(frozen=True)
+class GNNConfig:
+    name: str = "gnn"
+    arch: str = "gcn"
+    n_layers: int = 2
+    d_hidden: int = 16
+    d_in: int = 1433
+    d_edge: int = 0
+    d_out: int = 7
+    aggregator: str = "mean"
+    mlp_layers: int = 2
+    # schnet
+    n_rbf: int = 300
+    cutoff: float = 10.0
+    # graphcast
+    mesh_nodes: int = 0              # 0 → derived from graph size
+    n_vars: int = 0
+    task: str = "node_class"         # node_class | node_reg | graph_reg
+    dtype: str = "float32"
+
+
+def edge_mask(senders: jax.Array) -> jax.Array:
+    return senders >= 0
+
+
+def scatter_edges(
+    msgs: jax.Array, receivers: jax.Array, n_nodes: int, mask: jax.Array, agg: str
+):
+    msgs = jnp.where(mask[:, None], msgs, 0.0)
+    recv = jnp.where(mask, receivers, 0)
+    if agg == "sum":
+        return segment_sum(msgs, recv, n_nodes)
+    if agg == "mean":
+        tot = segment_sum(msgs, recv, n_nodes)
+        cnt = segment_sum(mask.astype(msgs.dtype), recv, n_nodes)
+        return tot / jnp.maximum(cnt, 1.0)[:, None]
+    if agg == "max":
+        big = jnp.where(mask[:, None], msgs, -jnp.inf)
+        out = jax.ops.segment_max(big, recv, num_segments=n_nodes)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(agg)
+
+
+def graph_pool(x: jax.Array, graph_ids: jax.Array | None, n_graphs: int, mode="sum"):
+    if graph_ids is None:
+        return x.sum(0, keepdims=True) if mode == "sum" else x.mean(0, keepdims=True)
+    if mode == "sum":
+        return segment_sum(x, graph_ids, n_graphs)
+    return segment_mean(x, graph_ids, n_graphs)

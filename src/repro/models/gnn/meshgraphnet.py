@@ -1,0 +1,65 @@
+"""MeshGraphNet (Pfaff et al., arXiv:2010.03409).
+
+Encode-process-decode with 15 message-passing steps; each step updates edges
+with MLP(e, h_src, h_dst) and nodes with MLP(h, Σ_in e'), both residual, with
+LayerNorm-ed 2-layer MLPs (the paper's exact block).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import layernorm, layernorm_init, mlp_apply, mlp_init
+from repro.models.gnn.common import GNNConfig, GraphBatch, edge_mask, scatter_edges
+
+
+def _block_init(key, d_in: int, d: int, mlp_layers: int):
+    dims = (d_in,) + (d,) * mlp_layers
+    k1, k2 = jax.random.split(key)
+    return {"mlp": mlp_init(k1, dims), "ln": layernorm_init(d)}
+
+
+def _block_apply(p, x):
+    return layernorm(p["ln"], mlp_apply(p["mlp"], x))
+
+
+def init_params(key, cfg: GNNConfig):
+    d = cfg.d_hidden
+    keys = jax.random.split(key, 2 * cfg.n_layers + 3)
+    params = {
+        "node_enc": _block_init(keys[0], cfg.d_in, d, cfg.mlp_layers),
+        "edge_enc": _block_init(keys[1], max(cfg.d_edge, 1), d, cfg.mlp_layers),
+        "decoder": mlp_init(keys[2], (d, d, cfg.d_out)),
+    }
+    for i in range(cfg.n_layers):
+        params[f"edge_{i}"] = _block_init(keys[3 + 2 * i], 3 * d, d, cfg.mlp_layers)
+        params[f"node_{i}"] = _block_init(keys[4 + 2 * i], 2 * d, d, cfg.mlp_layers)
+    return params
+
+
+def forward(params, g: GraphBatch, cfg: GNNConfig):
+    n = g.node_feat.shape[0]
+    mask = edge_mask(g.senders)
+    snd = jnp.where(mask, g.senders, 0)
+    rcv = jnp.where(mask, g.receivers, 0)
+
+    h = _block_apply(params["node_enc"], g.node_feat)
+    if g.edge_feat is not None:
+        ef = g.edge_feat
+    else:
+        ef = jnp.ones((g.senders.shape[0], 1), h.dtype)
+    e = _block_apply(params["edge_enc"], ef)
+
+    for i in range(cfg.n_layers):
+        e_in = jnp.concatenate([e, h[snd], h[rcv]], axis=-1)
+        e = e + _block_apply(params[f"edge_{i}"], e_in)
+        agg = scatter_edges(e, rcv, n, mask, "sum")
+        h = h + _block_apply(params[f"node_{i}"], jnp.concatenate([h, agg], -1))
+
+    return mlp_apply(params["decoder"], h)
+
+
+def loss(params, g: GraphBatch, cfg: GNNConfig):
+    pred = forward(params, g, cfg)
+    return jnp.mean((pred - g.labels) ** 2)

@@ -1,0 +1,19 @@
+from repro.models.recsys.two_tower import (
+    RecsysConfig,
+    init_params,
+    user_tower,
+    item_tower,
+    forward,
+    loss,
+    retrieval_scores,
+)
+
+__all__ = [
+    "RecsysConfig",
+    "init_params",
+    "user_tower",
+    "item_tower",
+    "forward",
+    "loss",
+    "retrieval_scores",
+]

@@ -1,0 +1,19 @@
+from repro.models.transformer.config import TransformerConfig
+from repro.models.transformer.model import (
+    init_params,
+    forward,
+    lm_loss,
+    init_cache,
+    prefill,
+    decode_step,
+)
+
+__all__ = [
+    "TransformerConfig",
+    "init_params",
+    "forward",
+    "lm_loss",
+    "init_cache",
+    "prefill",
+    "decode_step",
+]

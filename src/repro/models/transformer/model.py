@@ -1,0 +1,226 @@
+"""Transformer LM: init / forward / loss / prefill / decode.
+
+Layers are **scanned** (stacked params, ``jax.lax.scan``) so the HLO contains
+one layer body regardless of depth — essential for 512-device dry-run compile
+times and the standard MaxText-style structure.  An optional unstacked dense
+prefix covers DeepSeek-V2-Lite's first dense layer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import rmsnorm, rmsnorm_init, softmax_xent
+from repro.models.transformer.config import TransformerConfig
+from repro.models.transformer.layers import (
+    glu_apply,
+    glu_init,
+    gqa_attention,
+    gqa_init,
+    mla_attention,
+    mla_init,
+    moe_apply,
+    moe_init,
+)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: TransformerConfig, moe_layer: bool):
+    ka, kf = jax.random.split(key)
+    attn = mla_init(ka, cfg) if cfg.attention == "mla" else gqa_init(ka, cfg)
+    if moe_layer:
+        ffn = moe_init(kf, cfg)
+    else:
+        ffn = glu_init(kf, cfg.d_model, cfg.d_ff, cfg.params_dtype)
+    return {
+        "attn": attn,
+        "ffn": ffn,
+        "ln1": rmsnorm_init(cfg.d_model, cfg.params_dtype),
+        "ln2": rmsnorm_init(cfg.d_model, cfg.params_dtype),
+    }
+
+
+def init_params(key, cfg: TransformerConfig):
+    k_emb, k_prefix, k_stack, k_out = jax.random.split(key, 4)
+    params = {
+        "embed": (
+            jax.random.normal(k_emb, (cfg.vocab, cfg.d_model), cfg.params_dtype)
+            * 0.02
+        ),
+        "final_norm": rmsnorm_init(cfg.d_model, cfg.params_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = (
+            jax.random.normal(k_out, (cfg.d_model, cfg.vocab), cfg.params_dtype)
+            * 0.02
+        )
+    n_stack = cfg.n_layers - cfg.n_dense_prefix
+    if cfg.n_dense_prefix:
+        pkeys = jax.random.split(k_prefix, cfg.n_dense_prefix)
+        params["prefix"] = [
+            _layer_init(pkeys[i], cfg, moe_layer=False)
+            for i in range(cfg.n_dense_prefix)
+        ]
+    skeys = jax.random.split(k_stack, n_stack)
+    params["layers"] = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[_layer_init(skeys[i], cfg, moe_layer=cfg.moe) for i in range(n_stack)],
+    )
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+
+def _block(layer, x, positions, cfg: TransformerConfig, moe_layer: bool,
+           kv_cache=None, cache_len=None):
+    attn_fn = mla_attention if cfg.attention == "mla" else gqa_attention
+    h, new_kv = attn_fn(
+        layer["attn"], rmsnorm(layer["ln1"], x), positions, cfg,
+        kv_cache=kv_cache, cache_len=cache_len,
+    )
+    x = x + h
+    y = rmsnorm(layer["ln2"], x)
+    if moe_layer:
+        f, aux = moe_apply(layer["ffn"], y, cfg)
+    else:
+        f, aux = glu_apply(layer["ffn"], y, cfg.activation), 0.0
+    return x + f, new_kv, aux
+
+
+def _embed(params, tokens, cfg: TransformerConfig):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    if cfg.scale_embeddings:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(cfg.compute_dtype)
+    return x
+
+
+def _unembed(params, x, cfg: TransformerConfig):
+    x = rmsnorm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        return x @ params["embed"].astype(cfg.compute_dtype).T
+    return x @ params["unembed"].astype(cfg.compute_dtype)
+
+
+def forward(params, tokens, cfg: TransformerConfig, remat: bool = False):
+    """tokens int32[B,S] → logits [B,S,V] (+ MoE aux loss)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = _embed(params, tokens, cfg)
+
+    for layer in params.get("prefix", []):
+        x, _, _ = _block(layer, x, positions, cfg, moe_layer=False)
+
+    def body(carry, layer):
+        x, aux = carry
+        x, _, a = _block(layer, x, positions, cfg, moe_layer=cfg.moe)
+        return (x, aux + a), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0.0)), params["layers"])
+    return _unembed(params, x, cfg), aux
+
+
+def lm_loss(params, batch, cfg: TransformerConfig, remat: bool = False):
+    logits, aux = forward(params, batch["tokens"], cfg, remat=remat)
+    return softmax_xent(logits, batch["labels"]) + aux
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + decode with a stacked KV cache
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.compute_dtype
+    n_stack = cfg.n_layers - cfg.n_dense_prefix
+    if cfg.attention == "mla":
+        shape_a = (batch, max_len, cfg.kv_lora_rank)
+        shape_b = (batch, max_len, cfg.qk_rope_head_dim)
+    else:
+        shape_a = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        shape_b = shape_a
+    cache = {
+        "a": jnp.zeros((n_stack,) + shape_a, dtype),
+        "b": jnp.zeros((n_stack,) + shape_b, dtype),
+    }
+    if cfg.n_dense_prefix:
+        cache["prefix_a"] = jnp.zeros((cfg.n_dense_prefix,) + shape_a, dtype)
+        cache["prefix_b"] = jnp.zeros((cfg.n_dense_prefix,) + shape_b, dtype)
+    return cache
+
+
+def _write_cache(buf, new, start):
+    return jax.lax.dynamic_update_slice_in_dim(buf, new, start, axis=1)
+
+
+def prefill(params, tokens, cfg: TransformerConfig, max_len: int):
+    """Full-sequence forward that also materializes the KV cache."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = _embed(params, tokens, cfg)
+    cache = init_cache(cfg, b, max_len)
+
+    for i, layer in enumerate(params.get("prefix", [])):
+        x, kv, _ = _block(layer, x, positions, cfg, moe_layer=False)
+        cache["prefix_a"] = cache["prefix_a"].at[i].set(
+            _write_cache(cache["prefix_a"][i], kv[0], 0)
+        )
+        cache["prefix_b"] = cache["prefix_b"].at[i].set(
+            _write_cache(cache["prefix_b"][i], kv[1], 0)
+        )
+
+    def body(x, layer):
+        x, kv, _ = _block(layer, x, positions, cfg, moe_layer=cfg.moe)
+        return x, kv
+
+    x, kvs = jax.lax.scan(body, x, params["layers"])
+    cache["a"] = jax.lax.dynamic_update_slice_in_dim(cache["a"], kvs[0], 0, axis=2)
+    cache["b"] = jax.lax.dynamic_update_slice_in_dim(cache["b"], kvs[1], 0, axis=2)
+    logits = _unembed(params, x[:, -1:], cfg)
+    return logits[:, 0], cache
+
+
+def decode_step(params, cache, tokens, cache_len, cfg: TransformerConfig):
+    """One decode step.  tokens int32[B]; cache_len: filled prefix length.
+
+    Returns (logits [B,V], new cache).  GQA caches (k, v); MLA caches the
+    compressed latent (c_kv, k_rope) and attends in latent space (absorbed).
+    """
+    b = tokens.shape[0]
+    positions = jnp.full((b, 1), cache_len, jnp.int32)
+    x = _embed(params, tokens[:, None], cfg)
+
+    new_cache = dict(cache)
+    for i, layer in enumerate(params.get("prefix", [])):
+        kv = (cache["prefix_a"][i], cache["prefix_b"][i])
+        x, kv2, _ = _block(
+            layer, x, positions, cfg, moe_layer=False,
+            kv_cache=kv, cache_len=cache_len,
+        )
+        new_cache["prefix_a"] = new_cache["prefix_a"].at[i].set(kv2[0])
+        new_cache["prefix_b"] = new_cache["prefix_b"].at[i].set(kv2[1])
+
+    def body(x, layer_and_kv):
+        layer, ca, cb = layer_and_kv
+        x, kv2, _ = _block(
+            layer, x, positions, cfg, moe_layer=cfg.moe,
+            kv_cache=(ca, cb), cache_len=cache_len,
+        )
+        return x, (kv2[0], kv2[1])
+
+    x, (ca, cb) = jax.lax.scan(
+        body, x, (params["layers"], cache["a"], cache["b"])
+    )
+    new_cache["a"], new_cache["b"] = ca, cb
+    logits = _unembed(params, x, cfg)
+    return logits[:, 0], new_cache

@@ -1,0 +1,46 @@
+"""Shared relational substrate.
+
+The Datalog engine (``repro.core``), the GNN models and the recsys models all
+sit on the same primitives: sorted integer tables, compact-key dedup,
+searchsorted joins, and segment aggregation.  A GNN message-passing layer is a
+relational join + group-by-aggregate; an embedding-bag is a join with an
+embedding table + SUM.  This module is that common layer.
+"""
+
+from repro.relational.sort import (
+    SENTINEL,
+    compact_key,
+    lexsort_rows,
+    sort_rows,
+    unique_mask,
+    searchsorted_rows,
+)
+from repro.relational.segment import (
+    segment_sum,
+    segment_max,
+    segment_min,
+    segment_mean,
+    segment_softmax,
+    degree,
+)
+from repro.relational.embedding import embedding_bag, sampled_softmax_loss
+from repro.relational.sampler import NeighborSampler, build_csr
+
+__all__ = [
+    "SENTINEL",
+    "compact_key",
+    "lexsort_rows",
+    "sort_rows",
+    "unique_mask",
+    "searchsorted_rows",
+    "segment_sum",
+    "segment_max",
+    "segment_min",
+    "segment_mean",
+    "segment_softmax",
+    "degree",
+    "embedding_bag",
+    "sampled_softmax_loss",
+    "NeighborSampler",
+    "build_csr",
+]

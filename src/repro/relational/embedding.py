@@ -1,0 +1,79 @@
+"""EmbeddingBag and sampled-softmax: the recsys hot path as relational ops.
+
+JAX has no native ``nn.EmbeddingBag``; per the assignment this is part of the
+system: a bag lookup is ``jnp.take`` (join with the embedding table) followed
+by ``segment_sum`` (SUM aggregate).  The Pallas `embed_bag` kernel fuses the
+two for the serving path; this module is the reference/training route.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.relational.segment import segment_sum
+
+
+def embedding_bag(
+    table: jax.Array,
+    indices: jax.Array,
+    bag_ids: jax.Array | None = None,
+    *,
+    num_bags: int | None = None,
+    weights: jax.Array | None = None,
+    mode: str = "sum",
+) -> jax.Array:
+    """Ragged multi-hot lookup.
+
+    Two layouts:
+      * dense   — ``indices`` is ``int32[num_bags, K]`` (pad = -1); bag_ids None.
+      * ragged  — ``indices`` is ``int32[nnz]`` with ``bag_ids int32[nnz]``.
+    """
+    if bag_ids is None:
+        num_bags, k = indices.shape
+        flat = indices.reshape(-1)
+        valid = flat >= 0
+        rows = jnp.take(table, jnp.maximum(flat, 0), axis=0)
+        rows = jnp.where(valid[:, None], rows, 0.0)
+        if weights is not None:
+            rows = rows * weights.reshape(-1)[:, None]
+        rows = rows.reshape(num_bags, k, -1)
+        out = rows.sum(axis=1)
+        if mode == "mean":
+            cnt = jnp.maximum(valid.reshape(num_bags, k).sum(axis=1), 1)
+            out = out / cnt[:, None]
+        return out
+    assert num_bags is not None
+    valid = indices >= 0
+    rows = jnp.take(table, jnp.maximum(indices, 0), axis=0)
+    rows = jnp.where(valid[:, None], rows, 0.0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    out = segment_sum(rows, bag_ids, num_bags)
+    if mode == "mean":
+        cnt = segment_sum(valid.astype(rows.dtype), bag_ids, num_bags)
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+def sampled_softmax_loss(
+    query: jax.Array,
+    item: jax.Array,
+    *,
+    log_q: jax.Array | None = None,
+    temperature: float = 1.0,
+) -> jax.Array:
+    """In-batch sampled softmax with logQ correction (Yi et al., RecSys'19).
+
+    ``query`` and ``item`` are ``[B, D]`` normalized tower outputs; positives
+    are the diagonal; every other in-batch item is a sampled negative whose
+    logit is corrected by its sampling log-probability ``log_q`` to debias
+    popular items.
+    """
+    logits = query @ item.T / temperature                  # [B, B]
+    if log_q is not None:
+        logits = logits - log_q[None, :]
+    labels = jnp.arange(query.shape[0])
+    logz = jax.nn.logsumexp(logits, axis=1)
+    pos = jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0]
+    return jnp.mean(logz - pos)

@@ -1,0 +1,80 @@
+"""Segment aggregation: the message-passing / group-by primitive.
+
+``jax.ops.segment_*`` over an edge-index → node scatter IS the system's
+relational aggregate: a Datalog rule ``h(v, AGG(e)) :- arc(u, v), g(u, e)``
+lowers to gather(g, src) → segment_AGG(dst).  The GNN models and the engine's
+recursive aggregates (CC, SSSP) both call through here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(data, segment_ids, num_segments: int):
+    return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+
+
+def segment_max(data, segment_ids, num_segments: int):
+    return jax.ops.segment_max(data, segment_ids, num_segments=num_segments)
+
+
+def segment_min(data, segment_ids, num_segments: int):
+    return jax.ops.segment_min(data, segment_ids, num_segments=num_segments)
+
+
+def segment_mean(data, segment_ids, num_segments: int):
+    tot = segment_sum(data, segment_ids, num_segments)
+    cnt = segment_sum(jnp.ones(data.shape[:1], data.dtype), segment_ids, num_segments)
+    cnt = jnp.maximum(cnt, 1)
+    if data.ndim > 1:
+        cnt = cnt.reshape((-1,) + (1,) * (data.ndim - 1))
+    return tot / cnt
+
+
+def segment_softmax(logits, segment_ids, num_segments: int):
+    """Numerically-stable softmax over variable-size segments (edge softmax)."""
+    seg_max = segment_max(logits, segment_ids, num_segments)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    shifted = logits - seg_max[segment_ids]
+    exp = jnp.exp(shifted)
+    denom = segment_sum(exp, segment_ids, num_segments)
+    return exp / jnp.maximum(denom[segment_ids], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments",))
+def degree(segment_ids, num_segments: int):
+    return jax.ops.segment_sum(
+        jnp.ones_like(segment_ids, dtype=jnp.float32),
+        segment_ids,
+        num_segments=num_segments,
+    )
+
+
+def gather_scatter(
+    node_feats: jax.Array,
+    src: jax.Array,
+    dst: jax.Array,
+    num_nodes: int,
+    *,
+    edge_weight: jax.Array | None = None,
+    agg: str = "sum",
+) -> jax.Array:
+    """One relational message-passing step: gather(src) → [×w] → segment(dst)."""
+    msgs = node_feats[src]
+    if edge_weight is not None:
+        msgs = msgs * edge_weight[:, None]
+    if agg == "sum":
+        return segment_sum(msgs, dst, num_nodes)
+    if agg == "mean":
+        return segment_mean(msgs, dst, num_nodes)
+    if agg == "max":
+        out = segment_max(msgs, dst, num_nodes)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    if agg == "min":
+        out = segment_min(msgs, dst, num_nodes)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(f"unknown aggregator {agg!r}")

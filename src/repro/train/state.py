@@ -1,0 +1,20 @@
+"""Train state: params + AdamW moments + step, as a plain pytree."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import adamw_init
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    step: jax.Array          # int32 scalar
+
+
+def init_train_state(params) -> TrainState:
+    return TrainState(params=params, opt=adamw_init(params), step=jnp.zeros((), jnp.int32))

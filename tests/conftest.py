@@ -1,0 +1,30 @@
+# NOTE: no XLA_FLAGS here — smoke tests must see the real single CPU device;
+# only launch/dryrun.py forces 512 placeholder devices (in its own process).
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def tc_oracle(adj: np.ndarray) -> np.ndarray:
+    """Exact transitive closure by boolean matrix fixpoint."""
+    r = adj.copy()
+    while True:
+        r2 = r | (r @ adj)
+        if (r2 == r).all():
+            return r
+        r = r2
+
+
+def random_edges(rng, n: int, m: int) -> np.ndarray:
+    e = np.unique(rng.integers(0, n, size=(m, 2)), axis=0).astype(np.int32)
+    return e
+
+
+def adj_of(edges: np.ndarray, n: int) -> np.ndarray:
+    a = np.zeros((n, n), bool)
+    a[edges[:, 0], edges[:, 1]] = True
+    return a

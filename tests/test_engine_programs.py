@@ -1,0 +1,225 @@
+"""End-to-end engine tests: every paper benchmark program vs an oracle."""
+
+import numpy as np
+import pytest
+
+from conftest import adj_of, random_edges, tc_oracle
+from repro.core import Engine, EngineConfig, parse
+from repro.configs.datalog_workloads import ALL as WORKLOADS
+
+
+@pytest.mark.parametrize("backend", ["tuple", "bitmatrix"])
+def test_tc(rng, backend):
+    n = 35
+    edges = random_edges(rng, n, 80)
+    r = tc_oracle(adj_of(edges, n))
+    eng = Engine(EngineConfig(backend=backend))
+    got = set(map(tuple, eng.run(WORKLOADS["tc"].program, {"arc": edges})["tc"]))
+    assert got == set(zip(*np.nonzero(r)))
+    if backend == "bitmatrix":
+        assert eng.stats.backend_used["tc"] == "bitmatrix"
+
+
+@pytest.mark.parametrize("backend", ["tuple", "bitmatrix"])
+def test_sg(rng, backend):
+    n = 25
+    edges = random_edges(rng, n, 55)
+    a = adj_of(edges, n).astype(np.int64)
+    s = ((a.T @ a) > 0) & ~np.eye(n, dtype=bool)
+    while True:
+        s2 = s | ((a.T @ s.astype(np.int64) @ a) > 0)
+        if (s2 == s).all():
+            break
+        s = s2
+    eng = Engine(EngineConfig(backend=backend))
+    got = set(map(tuple, eng.run(WORKLOADS["sg"].program, {"arc": edges})["sg"]))
+    assert got == set(zip(*np.nonzero(s)))
+
+
+@pytest.mark.parametrize("dense", [True, False])
+def test_reach(rng, dense):
+    n = 40
+    edges = random_edges(rng, n, 90)
+    r = tc_oracle(adj_of(edges, n))
+    expect = {0} | set(np.nonzero(r[0])[0].tolist())
+    eng = Engine(EngineConfig(enable_dense=dense))
+    out = eng.run(
+        WORKLOADS["reach"].program,
+        {"id": np.array([[0]], np.int32), "arc": edges},
+    )
+    assert set(out["reach"][:, 0].tolist()) == expect
+    assert eng.stats.backend_used["reach"] == ("dense_set" if dense else "tuple")
+
+
+def test_cc_min_label_propagation(rng):
+    n = 30
+    edges = random_edges(rng, n, 60)
+    lab = {int(u): int(u) for u in np.unique(edges[:, 0])}
+    changed = True
+    while changed:
+        changed = False
+        for u, v in edges:
+            u, v = int(u), int(v)
+            if u in lab and lab.get(v, 1 << 30) > lab[u]:
+                lab[v] = lab[u]
+                changed = True
+    eng = Engine(EngineConfig())
+    out = eng.run(WORKLOADS["cc"].program, {"arc": edges})
+    assert set(map(tuple, out["cc2"])) == set(lab.items())
+    assert set(out["cc"][:, 0].tolist()) == set(lab.values())
+    assert eng.stats.backend_used["cc3"] == "dense_agg"
+
+
+def test_sssp_vs_dijkstra(rng):
+    import networkx as nx
+
+    n = 30
+    edges = random_edges(rng, n, 70)
+    w = rng.integers(1, 10, size=len(edges)).astype(np.int32)
+    arcw = np.concatenate([edges, w[:, None]], axis=1)
+    g = nx.DiGraph()
+    g.add_weighted_edges_from(
+        [(int(u), int(v), int(d)) for (u, v), d in zip(edges, w)]
+    )
+    expect = (
+        nx.single_source_dijkstra_path_length(g, 0) if g.has_node(0) else {}
+    )
+    eng = Engine(EngineConfig())
+    out = eng.run(
+        WORKLOADS["sssp"].program,
+        {"id": np.array([[0]], np.int32), "arc": arcw},
+    )
+    got = {int(k): int(v) for k, v in out["sssp"]}
+    assert got == {int(k): int(v) for k, v in expect.items()}
+
+
+def _andersen_oracle(edb):
+    pt = set(map(tuple, edb["addressOf"]))
+    assign = set(map(tuple, edb["assign"]))
+    load = set(map(tuple, edb["load"]))
+    store = set(map(tuple, edb["store"]))
+    while True:
+        new = set()
+        for y, z in assign:
+            new |= {(y, x) for z2, x in pt if z2 == z}
+        for y, x in load:
+            for x2, z in pt:
+                if x2 == x:
+                    new |= {(y, w) for z2, w in pt if z2 == z}
+        for y, x in store:
+            for y2, z in pt:
+                if y2 == y:
+                    new |= {(z, w) for x2, w in pt if x2 == x}
+        if new <= pt:
+            return pt
+        pt |= new
+
+
+def test_andersen_nonlinear(rng):
+    nv = 18
+    def rel(m):
+        return np.unique(rng.integers(0, nv, size=(m, 2)), axis=0).astype(np.int32)
+
+    edb = {"addressOf": rel(14), "assign": rel(10), "load": rel(7), "store": rel(7)}
+    eng = Engine(EngineConfig())
+    got = set(map(tuple, eng.run(WORKLOADS["andersen"].program, edb)["pointsTo"]))
+    assert got == _andersen_oracle(edb)
+
+
+def test_cspa_mutual_recursion(rng):
+    nv = 10
+    def rel(m):
+        return np.unique(rng.integers(0, nv, size=(m, 2)), axis=0).astype(np.int32)
+
+    edb = {"assign": rel(9), "dereference": rel(9)}
+    # naive fixpoint oracle over all three relations
+    assign = set(map(tuple, edb["assign"]))
+    deref = set(map(tuple, edb["dereference"]))
+    vf, ma, va = set(), set(), set()
+    for y, x in assign:
+        vf |= {(y, x), (x, x), (y, y)}
+        ma |= {(x, x), (y, y)}
+    while True:
+        n_vf = {(x, y) for x, z in assign for z2, y in ma if z2 == z}
+        n_vf |= {(x, y) for x, z in vf for z2, y in vf if z2 == z}
+        n_ma = {
+            (x, w)
+            for y, x in deref
+            for y2, z in va
+            if y2 == y
+            for z2, w in deref
+            if z2 == z
+        }
+        n_va = {(x, y) for z, x in vf for z2, y in vf if z2 == z}
+        n_va |= {
+            (x, y)
+            for z, x in vf
+            for z2, w in ma
+            if z2 == z
+            for w2, y in vf
+            if w2 == w
+        }
+        if n_vf <= vf and n_ma <= ma and n_va <= va:
+            break
+        vf |= n_vf
+        ma |= n_ma
+        va |= n_va
+    eng = Engine(EngineConfig())
+    out = eng.run(WORKLOADS["cspa"].program, edb)
+    assert set(map(tuple, out["valueFlow"])) == vf
+    assert set(map(tuple, out["memoryAlias"])) == ma
+    assert set(map(tuple, out["valueAlias"])) == va
+
+
+def test_csda_long_chain():
+    chain = np.array([[i, i + 1] for i in range(150)], np.int32)
+    ne = np.array([[0, 0]], np.int32)
+    eng = Engine(EngineConfig())
+    out = eng.run(WORKLOADS["csda"].program, {"nullEdge": ne, "arc": chain})
+    assert len(out["null"]) == 151          # (0,0)..(0,150)
+    assert eng.stats.iterations[0] >= 150   # many-iteration workload
+
+
+def test_negation_and_count(rng):
+    n = 15
+    edges = random_edges(rng, n, 25)
+    r = tc_oracle(adj_of(edges, n))
+    nodes = set(edges[:, 0].tolist()) | set(edges[:, 1].tolist())
+    prog = parse(
+        """
+        tc(x,y) :- arc(x,y).
+        tc(x,y) :- tc(x,z), arc(z,y).
+        node(x) :- arc(x,y).
+        node(y) :- arc(x,y).
+        ntc(x,y) :- node(x), node(y), !tc(x,y).
+        gtc(x, COUNT(y)) :- tc(x,y).
+        """
+    )
+    out = Engine(EngineConfig(backend="tuple")).run(prog, {"arc": edges})
+    assert set(map(tuple, out["ntc"])) == {
+        (u, v) for u in nodes for v in nodes if not r[u, v]
+    }
+    assert set(map(tuple, out["gtc"])) == {
+        (u, int(r[u].sum())) for u in range(n) if r[u].any()
+    }
+
+
+def test_fixpoint_checkpoint_resume(rng, tmp_path):
+    n = 30
+    edges = random_edges(rng, n, 70)
+    expect = set(zip(*np.nonzero(tc_oracle(adj_of(edges, n)))))
+    d = str(tmp_path)
+    eng = Engine(
+        EngineConfig(backend="tuple", checkpoint_every=2, checkpoint_dir=d)
+    )
+    got = set(map(tuple, eng.run(WORKLOADS["tc"].program, {"arc": edges})["tc"]))
+    assert got == expect
+    # restart-from-checkpoint produces the same fixpoint
+    eng2 = Engine(EngineConfig(backend="tuple"))
+    got2 = set(
+        map(
+            tuple,
+            eng2.run(WORKLOADS["tc"].program, {"arc": edges}, resume_from=d)["tc"],
+        )
+    )
+    assert got2 == expect

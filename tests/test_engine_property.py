@@ -1,0 +1,86 @@
+"""Property-based engine tests (hypothesis): system invariants.
+
+Invariants checked on random graphs:
+  * every optimization configuration (UIE/OOF/DSD/EOST on or off, dense on
+    or off, tuple vs bitmatrix) computes the SAME fixpoint — optimizations
+    must be semantics-preserving;
+  * TC is idempotent (TC(TC ∪ arc-edges) adds nothing) and transitive;
+  * monotonicity: adding edges never removes TC facts.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from conftest import adj_of, tc_oracle
+from repro.core import Engine, EngineConfig
+
+TC_PROG = "tc(x,y) :- arc(x,y). tc(x,y) :- tc(x,z), arc(z,y)."
+
+edge_lists = st.lists(
+    st.tuples(st.integers(0, 12), st.integers(0, 12)),
+    min_size=1,
+    max_size=40,
+)
+
+
+def _run(edges, **cfg):
+    eng = Engine(EngineConfig(**cfg))
+    out = eng.run(TC_PROG, {"arc": np.array(edges, np.int32)})
+    return set(map(tuple, out["tc"]))
+
+
+@settings(deadline=None, max_examples=6)
+@given(edge_lists)
+def test_all_configs_agree(pairs):
+    edges = np.unique(np.array(pairs, np.int32), axis=0)
+    n = int(edges.max()) + 1
+    expect = set(zip(*np.nonzero(tc_oracle(adj_of(edges, n)))))
+    configs = [
+        dict(backend="tuple"),
+        dict(backend="tuple", enable_uie=False),
+        dict(backend="tuple", enable_oof=False),
+        dict(backend="tuple", dsd="opsd"),
+        dict(backend="tuple", dsd="tpsd"),
+        dict(backend="tuple", enable_eost=False),
+        dict(backend="bitmatrix"),
+        dict(backend="bitmatrix", use_pallas_bitmm=True),
+    ]
+    for cfg in configs:
+        assert _run(edges.tolist(), **cfg) == expect, cfg
+
+
+@settings(deadline=None, max_examples=6)
+@given(edge_lists)
+def test_tc_transitive_and_contains_arc(pairs):
+    edges = np.unique(np.array(pairs, np.int32), axis=0)
+    tc = _run(edges.tolist(), backend="tuple")
+    assert set(map(tuple, edges)) <= tc
+    for a, b in list(tc)[:50]:
+        for c, d in list(tc)[:50]:
+            if b == c:
+                assert (a, d) in tc
+
+
+@settings(deadline=None, max_examples=5)
+@given(edge_lists, edge_lists)
+def test_tc_monotone(pairs_a, pairs_b):
+    small = _run(pairs_a, backend="tuple")
+    big = _run(pairs_a + pairs_b, backend="tuple")
+    assert small <= big
+
+
+@settings(deadline=None, max_examples=5)
+@given(
+    edge_lists,
+    st.integers(0, 12),
+)
+def test_reach_subset_of_tc(pairs, src):
+    edges = np.unique(np.array(pairs, np.int32), axis=0)
+    tc = _run(pairs, backend="tuple")
+    eng = Engine(EngineConfig())
+    out = eng.run(
+        "reach(y) :- id(y). reach(y) :- reach(x), arc(x,y).",
+        {"id": np.array([[src]], np.int32), "arc": edges},
+    )
+    reach = set(out["reach"][:, 0].tolist())
+    assert reach == {src} | {b for a, b in tc if a == src}

@@ -1,0 +1,85 @@
+"""Parser + rule-analyzer unit tests (paper §3, §4 front end)."""
+
+import pytest
+
+from repro.core import parse, analyze
+from repro.core.ast import Agg, Atom, Cmp, Const, Var
+
+
+def test_parse_tc():
+    p = parse("tc(x,y) :- arc(x,y). tc(x,y) :- tc(x,z), arc(z,y).")
+    assert len(p.rules) == 2
+    assert p.idb_preds == ["tc"]
+    assert p.edb_preds == ["arc"]
+    assert p.rules[1].atoms[0].pred == "tc"
+
+
+def test_parse_negation_and_comparison():
+    p = parse("ntc(x,y) :- node(x), node(y), !tc(x,y), x != y.")
+    r = p.rules[0]
+    assert r.atoms[2].negated
+    assert r.comparisons[0].op == "!="
+
+
+def test_parse_aggregate_with_arithmetic():
+    p = parse("sssp2(y, MIN(d1+d2)) :- sssp2(x,d1), arc(x,y,d2).")
+    agg = p.rules[0].head_terms[1]
+    assert isinstance(agg, Agg) and agg.op == "MIN"
+    assert [v.name for v in agg.arg.vars] == ["d1", "d2"]
+
+
+def test_parse_constants_and_wildcard():
+    p = parse("r(x, 5) :- e(x, _), x > 2.")
+    assert isinstance(p.rules[0].head_terms[1], Const)
+
+
+def test_unsafe_rule_rejected():
+    with pytest.raises(ValueError, match="unsafe"):
+        parse("r(x, y) :- e(x).")
+
+
+def test_unstratifiable_negation_rejected():
+    with pytest.raises(ValueError, match="unstratifiable"):
+        analyze(parse("p(x) :- e(x), !q(x). q(x) :- e(x), !p(x)."))
+
+
+def test_stratification_order():
+    s = analyze(
+        parse(
+            """
+            tc(x,y) :- arc(x,y).
+            tc(x,y) :- tc(x,z), arc(z,y).
+            node(x) :- arc(x,y).
+            ntc(x,y) :- node(x), node(y), !tc(x,y).
+            """
+        )
+    )
+    idx = {p: st.index for st in s.strata for p in st.preds}
+    assert idx["ntc"] > idx["tc"] and idx["ntc"] > idx["node"]
+    tc_stratum = next(st for st in s.strata if "tc" in st.preds)
+    assert tc_stratum.recursive and not tc_stratum.nonlinear
+
+
+def test_mutual_nonlinear_detection():
+    s = analyze(
+        parse(
+            """
+            vf(x,y) :- assign(x,y).
+            vf(x,y) :- vf(x,z), vf(z,y).
+            ma(x,y) :- vf(x,z), vf(z,y).
+            vf(x,y) :- assign(x,z), ma(z,y).
+            """
+        )
+    )
+    big = next(st for st in s.strata if "vf" in st.preds)
+    assert big.mutual and big.nonlinear and set(big.preds) == {"vf", "ma"}
+
+
+def test_recursive_nonmonotone_agg_rejected():
+    with pytest.raises(ValueError, match="recursive aggregate"):
+        analyze(parse("c(x, SUM(y)) :- c(x, y), e(x, y)."))
+
+
+def test_arity_mismatch_rejected():
+    with pytest.raises(ValueError, match="arity"):
+        parse("r(x) :- e(x, y). r(x, y) :- e(x, y).").validate()

@@ -1,0 +1,115 @@
+"""Relational substrate tests, incl. hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.relational import (
+    SENTINEL,
+    compact_key,
+    embedding_bag,
+    segment_softmax,
+    unique_mask,
+)
+from repro.relational.sort import expand_matches, sort_rows
+from repro.relational.sampler import NeighborSampler, build_csr
+
+
+def test_compact_key_roundtrip_order():
+    rows = jnp.array([[3, 1], [1, 2], [0, 9]], jnp.int32)
+    key = compact_key(rows, domain=10)
+    assert key is not None
+    assert key.tolist() == [31, 12, 9]
+
+
+def test_compact_key_overflow_returns_none():
+    rows = jnp.zeros((2, 3), jnp.int32)
+    assert compact_key(rows, domain=1 << 30) is None
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    st.lists(
+        st.tuples(st.integers(0, 50), st.integers(0, 50)),
+        min_size=1,
+        max_size=60,
+    )
+)
+def test_sort_dedup_matches_numpy(pairs):
+    arr = np.array(pairs, np.int32)
+    rows = sort_rows(jnp.asarray(arr), domain=64)
+    mask = unique_mask(rows)
+    got = np.asarray(rows)[np.asarray(mask)]
+    expect = np.unique(arr, axis=0)
+    assert (got == expect).all()
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    st.lists(st.integers(0, 5), min_size=1, max_size=20),
+    st.integers(1, 64),
+)
+def test_expand_matches_property(counts, extra_cap):
+    counts = np.array(counts, np.int32)
+    lo = np.cumsum(np.concatenate([[0], counts[:-1]])).astype(np.int32)
+    total = int(counts.sum())
+    cap = total + extra_cap
+    probe, build, valid = expand_matches(
+        jnp.asarray(lo), jnp.asarray(counts), cap
+    )
+    assert int(valid.sum()) == total
+    # every (probe, within-range build) pair appears exactly once
+    got = sorted(zip(np.asarray(probe)[np.asarray(valid)].tolist(),
+                     np.asarray(build)[np.asarray(valid)].tolist()))
+    expect = sorted(
+        (i, int(lo[i]) + j) for i in range(len(counts)) for j in range(counts[i])
+    )
+    assert got == expect
+
+
+def test_embedding_bag_modes():
+    tbl = jnp.arange(20, dtype=jnp.float32).reshape(10, 2)
+    idx = jnp.array([[1, 2, -1], [0, -1, -1]])
+    s = embedding_bag(tbl, idx, mode="sum")
+    m = embedding_bag(tbl, idx, mode="mean")
+    np.testing.assert_allclose(np.asarray(s[0]), np.asarray(tbl[1] + tbl[2]))
+    np.testing.assert_allclose(np.asarray(m[0]), np.asarray((tbl[1] + tbl[2]) / 2))
+    np.testing.assert_allclose(np.asarray(s[1]), np.asarray(tbl[0]))
+
+
+def test_embedding_bag_ragged():
+    tbl = jnp.arange(12, dtype=jnp.float32).reshape(6, 2)
+    idx = jnp.array([0, 1, 2, 3], jnp.int32)
+    bags = jnp.array([0, 0, 1, 1], jnp.int32)
+    out = embedding_bag(tbl, idx, bags, num_bags=2)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(tbl[0] + tbl[1]))
+
+
+def test_segment_softmax_normalizes():
+    logits = jnp.array([1.0, 2.0, 3.0, 4.0])
+    seg = jnp.array([0, 0, 1, 1])
+    p = segment_softmax(logits, seg, 2)
+    np.testing.assert_allclose(float(p[:2].sum()), 1.0, rtol=1e-6)
+    np.testing.assert_allclose(float(p[2:].sum()), 1.0, rtol=1e-6)
+
+
+def test_neighbor_sampler_valid_neighbors(rng):
+    n = 50
+    src = rng.integers(0, n, 300).astype(np.int64)
+    dst = rng.integers(0, n, 300).astype(np.int64)
+    rp, col = build_csr(src, dst, n)
+    in_nbrs = {v: set(src[dst == v].tolist()) for v in range(n)}
+    samp = NeighborSampler(rp, col, (7, 3))
+    seeds = jnp.asarray(rng.integers(0, n, 16).astype(np.int32))
+    blocks = samp.sample(jax.random.PRNGKey(0), seeds)
+    assert len(blocks) == 2
+    b0 = blocks[0]
+    s0 = np.asarray(b0.src).reshape(16, 7)
+    m0 = np.asarray(b0.mask).reshape(16, 7)
+    for i, v in enumerate(np.asarray(seeds)):
+        for j in range(7):
+            if m0[i, j]:
+                assert s0[i, j] in in_nbrs[int(v)]
+            else:
+                assert len(in_nbrs[int(v)]) == 0

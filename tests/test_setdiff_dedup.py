@@ -1,0 +1,98 @@
+"""DSD cost model (paper Appendix A) + dedup + membership unit tests."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.joins import membership
+from repro.core.relation import TupleRelation, _dedup_sorted, _sort_pad
+from repro.core.setdiff import DSDState, opsd, set_difference, tpsd
+from repro.relational.sort import SENTINEL
+
+
+def _table(rows, cap, domain=1 << 20):
+    arr = jnp.asarray(np.array(rows, np.int32).reshape(-1, 2))
+    return _sort_pad(arr, cap, domain)
+
+
+def test_dsd_thresholds_match_paper():
+    """β ≤ 1 → OPSD;  β ≥ 2α/(α−1) → TPSD (Appendix A)."""
+    s = DSDState(alpha=4.0)
+    assert s.choose(r_size=10, delta_size=20) == "opsd"      # β = 0.5
+    assert s.choose(r_size=10, delta_size=10) == "opsd"      # β = 1
+    thresh = 2 * 4.0 / 3.0                                   # ≈ 2.67
+    assert s.choose(r_size=30, delta_size=10) == "tpsd"      # β = 3 ≥ 2.67
+    # grey zone β ∈ (1, 2.67): decided by μ_prev via Eq. (5)
+    s.mu_prev = 100.0     # tiny intersection → TPSD phase-2 cheap
+    beta2 = 2.0
+    diff = beta2 * 3.0 - (4.0 + 4.0 / 100.0)
+    assert (s.choose(20, 10) == "tpsd") == (diff > 0)
+
+
+def test_dsd_mu_observation():
+    s = DSDState(alpha=4.0)
+    s.observe(delta_in=100, intersect=25)
+    assert abs(s.mu_prev - 4.0) < 1e-9
+
+
+@settings(deadline=None, max_examples=12)
+@given(
+    st.lists(st.tuples(st.integers(0, 30), st.integers(0, 30)), max_size=40),
+    st.lists(st.tuples(st.integers(0, 30), st.integers(0, 30)), max_size=40),
+)
+def test_opsd_tpsd_equivalent(r_rows, d_rows):
+    """Both strategies must compute the same ΔR (semantics-preserving)."""
+    r_set = set(r_rows)
+    d_set = set(d_rows)
+    expect = d_set - r_set
+    cap_r = max(len(r_set), 1) * 2
+    cap_d = max(len(d_set), 1) * 2
+    r = _table(sorted(r_set) or [(SENTINEL, SENTINEL)], cap_r)
+    d = _table(sorted(d_set) or [(SENTINEL, SENTINEL)], cap_d)
+    d, d_count = _dedup_sorted(d, 1 << 20)
+    for mode in ("opsd", "tpsd"):
+        out, count, strat = set_difference(
+            d, int(d_count), r, len(r_set), 1 << 20, DSDState(), mode=mode
+        )
+        got = set(map(tuple, np.asarray(out[:count])))
+        got = {t for t in got if t[0] != SENTINEL}
+        assert got == expect, (mode, got, expect)
+
+
+def test_membership_compact_and_lexsort_paths():
+    table = _table([(1, 2), (3, 4), (5, 6)], 8, domain=10)
+    probe = _table([(3, 4), (9, 9), (1, 2)], 4, domain=10)
+    # compact-key path (domain small)
+    m = membership(probe, table, 10)
+    got = {tuple(r) for r, ok in zip(np.asarray(probe), np.asarray(m)) if ok}
+    assert got == {(1, 2), (3, 4)}
+    # force universal lexsort path with a huge domain
+    m2 = membership(probe, table, 1 << 30)
+    assert (np.asarray(m) == np.asarray(m2)).all()
+
+
+def test_dedup_counts():
+    rows = jnp.asarray(
+        np.array([[1, 2], [1, 2], [3, 4], [3, 4], [3, 4], [0, 0]], np.int32)
+    )
+    srt = _sort_pad(rows, 8, 10)
+    out, count = _dedup_sorted(srt, 10)
+    assert int(count) == 3
+    valid = np.asarray(out[: int(count)])
+    assert {tuple(r) for r in valid} == {(0, 0), (1, 2), (3, 4)}
+
+
+def test_relation_merge_stays_sorted_and_grows():
+    rel = TupleRelation.from_numpy("r", np.array([[5, 1], [1, 1]], np.int32), 10)
+    delta = _table([(3, 3), (9, 9)], 4, domain=10)
+    merged = rel.merge(delta, 2)
+    assert merged.count == 4
+    rows = np.asarray(merged.rows[: merged.count])
+    assert (rows == np.array(sorted(map(tuple, rows)))).all()
+
+
+def test_calibrate_alpha_positive():
+    from repro.core.setdiff import calibrate_alpha
+
+    alpha = calibrate_alpha(n=1 << 10, k=2)
+    assert alpha > 1.0
