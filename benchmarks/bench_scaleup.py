@@ -17,13 +17,12 @@ from benchmarks.common import emit
 _CHILD = r"""
 import json, time
 import jax, numpy as np
-from jax.sharding import AxisType
+from repro.distributed.compat import make_mesh
 from repro.core.distributed import tc_fixpoint_sharded
 from repro.data.graphs import gnp_graph
 
 ndev = {ndev}
-mesh = jax.make_mesh(({rows}, {cols}), ("data", "model"),
-                     axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh(({rows}, {cols}), ("data", "model"))
 edges = gnp_graph(400, p=0.02, seed=0)
 t0 = time.time()
 m, n_pad, iters = tc_fixpoint_sharded(edges, 400, mesh)

@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   fig12  — REACH/CC/SSSP scaling on RMAT graphs
   fig15  — program analyses (Andersen scaling, CSPA, CSDA)
   fig8   — device-count scale-up of sharded PBME (+ Table 4 CPU efficiency)
+  serve  — incremental serving: update-batch latency vs. full recompute
   roofline — three-term roofline per dry-run cell (needs results/dryrun.json)
 """
 
@@ -23,6 +24,7 @@ def main() -> None:
         "fig12",
         "fig15",
         "fig8",
+        "serve",
         "roofline",
     ]
     print("name,us_per_call,derived")
@@ -38,6 +40,8 @@ def main() -> None:
                 from benchmarks.bench_program_analysis import run as r
             elif sec == "fig8":
                 from benchmarks.bench_scaleup import run as r
+            elif sec == "serve":
+                from benchmarks.bench_serve_datalog import run as r
             elif sec == "roofline":
                 if not os.path.exists("results/dryrun.json"):
                     print(f"{sec}_skipped,0,no results/dryrun.json (run dryrun first)")

@@ -93,16 +93,26 @@ def bitmm_ref(a_packed: jax.Array, b_packed: jax.Array, n: int) -> jax.Array:
     return pack_bits(c)
 
 
-def popcount(packed: jax.Array) -> jax.Array:
-    """Total number of set bits (the Δ-count statistic)."""
+def _popcount_words(packed: jax.Array) -> jax.Array:
+    """Per-word set-bit counts (SWAR)."""
     x = packed
     x = x - ((x >> 1) & jnp.uint32(0x55555555))
     x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
     x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
-    x = (x * jnp.uint32(0x01010101)) >> 24
+    return (x * jnp.uint32(0x01010101)) >> 24
+
+
+def popcount(packed: jax.Array) -> jax.Array:
+    """Total number of set bits (the Δ-count statistic)."""
+    x = _popcount_words(packed)
     return x.sum(dtype=jnp.int64) if jax.config.jax_enable_x64 else x.sum(
         dtype=jnp.uint32
     )
+
+
+def popcount_rows(packed: jax.Array) -> jax.Array:
+    """Per-row set-bit counts — the frontier-compaction statistic."""
+    return _popcount_words(packed).sum(axis=1, dtype=jnp.uint32)
 
 
 def transpose_packed(packed: jax.Array, n: int) -> jax.Array:
@@ -143,6 +153,191 @@ def tc_fixpoint(
         m = m_new
         iters += 1
     return m, iters + 1
+
+
+def bitmm_rows(
+    a_packed: jax.Array,
+    b_packed: jax.Array,
+    n: int,
+    row_idx: np.ndarray,
+    *,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """Row-compacted boolean matmul: only ``row_idx`` rows of A against B.
+
+    The paper's per-row worklists become frontier row-block compaction: the
+    Δ frontier usually has few nonzero rows, so the MXU work shrinks from
+    n×n×n to |frontier|×n×n.  Rows are padded to a power-of-two bucket (the
+    same recompilation bound as tuple capacities); the result is scattered
+    back into an n-row zero matrix (pad rows scatter out of bounds → dropped).
+    """
+    return bitmm_chain_rows(a_packed, (b_packed,), n, row_idx, use_pallas=use_pallas)
+
+
+def bitmm_chain_rows(
+    a_packed: jax.Array,
+    mats: tuple,
+    n: int,
+    row_idx: np.ndarray,
+    *,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """Row-compacted boolean matmul chain: ``A[rows] ⊛ mats[0] ⊛ mats[1] …``.
+
+    The intermediate products stay compacted to the frontier row block, so a
+    k-row frontier pays k·n² per factor instead of n³ — the win for seeds
+    like Δᵀ ⊛ sg ⊛ arc whose leading frontier is a handful of new edges.
+    """
+    from repro.core.relation import next_bucket
+
+    k = next_bucket(len(row_idx), 8)
+    gather = np.zeros((k,), np.int32)
+    gather[: len(row_idx)] = row_idx
+    scatter = np.full((k,), n, np.int32)
+    scatter[: len(row_idx)] = row_idx
+    sub = a_packed[jnp.asarray(gather)]
+    for b_packed in mats:
+        sub = _bitmm(sub, b_packed, n, use_pallas)
+    zero = jnp.zeros_like(a_packed)
+    return zero.at[jnp.asarray(scatter)].set(sub, mode="drop")
+
+
+def _frontier_rows(delta: jax.Array) -> np.ndarray:
+    return np.flatnonzero(np.asarray(popcount_rows(delta)))
+
+
+def _sandwich_rows(
+    delta: jax.Array, arc: jax.Array, n: int, row_idx: np.ndarray
+) -> jax.Array:
+    """``arcᵀ ⊛ Δ ⊛ arc`` for a *symmetric* Δ whose nonzero rows are
+    ``row_idx`` — both contractions run over the |frontier|-row block:
+
+        new(i, j) = OR_{k ∈ R} arc(k, i) · (Δ ⊛ arc)(k, j)
+
+    (Δ symmetric ⇒ the k-contraction of arcᵀ⊛Δ only ranges over Δ's rows),
+    so the cost is 2·|R|·n² instead of 2·n³.
+    """
+    from repro.core.relation import next_bucket
+
+    k = next_bucket(len(row_idx), 8)
+    gather = np.zeros((k,), np.int32)
+    gather[: len(row_idx)] = row_idx
+    valid = jnp.arange(k) < len(row_idx)
+    d_sub = jnp.where(valid[:, None], delta[jnp.asarray(gather)], 0)
+    a_sub = jnp.where(valid[:, None], arc[jnp.asarray(gather)], 0)
+    t = unpack_bits(bitmm_ref(d_sub, arc, n), n).astype(jnp.float32)   # k×n
+    a = unpack_bits(a_sub, n).astype(jnp.float32)                      # k×n
+    return pack_bits((a.T @ t) > 0.0)
+
+
+def tc_increment(
+    m: jax.Array,
+    arc: jax.Array,
+    delta_arc: jax.Array,
+    n: int,
+    *,
+    use_pallas: bool = False,
+    max_iters: int = 10_000,
+) -> tuple[jax.Array, int]:
+    """Resume TC from its fixpoint after ``arc`` gains ``delta_arc`` edges.
+
+    Insert-only IVM on the bit-matrix: every new closure pair decomposes at
+    its *first* new edge into (old path | empty) · Δarc · (suffix in arc′), so
+
+        Δ₀ = (M ⊛ Δarc  |  Δarc) & ~M        # seed: prefix + first new edge
+        Δ  ← (Δ ⊛ arc′) & ~M                 # extend suffix one arc at a time
+
+    ``arc`` must already include the new edges.  The seed's big product is
+    computed transposed (Δarcᵀ ⊛ Mᵀ) so its row frontier is the handful of
+    new-edge heads; loop products compact to the Δ frontier rows.  Returns
+    (new fixpoint, iterations).
+    """
+    heads = _frontier_rows(transpose_packed(delta_arc, n))
+    if len(heads) == 0:
+        return m, 0
+    if not use_pallas and len(heads) <= n // 2:
+        ext_t = bitmm_rows(
+            transpose_packed(delta_arc, n), transpose_packed(m, n), n, heads
+        )
+        ext = transpose_packed(ext_t, n)
+    else:
+        ext = _bitmm(m, delta_arc, n, use_pallas)
+    delta = (ext | delta_arc) & ~m
+    iters = 0
+    while iters < max_iters:
+        frontier = _frontier_rows(delta)   # doubles as the termination test
+        if len(frontier) == 0:
+            break
+        m = m | delta
+        # extend through the *growing closure*, not just single arcs: old-path
+        # suffix segments absorb in one step (m is transitively closed over
+        # everything absorbed so far), so iterations scale with the number of
+        # new edges on a path, not its length
+        reach = arc | m
+        if not use_pallas and len(frontier) <= n // 2:
+            new = bitmm_rows(delta, reach, n, frontier)
+        else:
+            new = _bitmm(delta, reach, n, use_pallas)
+        delta = new & ~m
+        iters += 1
+    return m, iters
+
+
+def sg_increment(
+    sg: jax.Array,
+    arc: jax.Array,
+    delta_arc: jax.Array,
+    n: int,
+    *,
+    use_pallas: bool = False,
+    max_iters: int = 10_000,
+) -> tuple[jax.Array, int]:
+    """Resume SG from its fixpoint after ``arc`` gains ``delta_arc`` edges.
+
+    A new sg pair's derivation tree contains a new component at some level:
+    either a new base pair (arc′ᵀ⊛arc′ & ~I), a new wrapping edge around an
+    *old* sg fact (arc′ᵀ⊛sg⊛Δarc or Δarcᵀ⊛sg⊛arc′), or a new inner sg fact —
+    the last is exactly what the resumed Δ loop derives.  ``arc`` must
+    already include the new edges.
+    """
+    dat = transpose_packed(delta_arc, n)
+    heads = _frontier_rows(dat)              # dst endpoints of the new edges
+    if len(heads) == 0:                      # doubles as the empty-Δ test
+        return sg, 0
+    arc_t = transpose_packed(arc, n)
+    eye = pack_bits(jnp.eye(n, dtype=bool))
+    if not use_pallas and len(heads) <= n // 2:
+        # every seed product has Δarcᵀ as one factor, so chain the whole
+        # thing through its |heads|-row block: k·n² per factor, not n³.
+        # base:  (Δaᵀ⊛arc′ | its transpose) covers base pairs with ≥1 new edge
+        # wraps: arc′ᵀ⊛sg⊛Δa = (Δaᵀ⊛sgᵀ⊛arc′)ᵀ   and   Δaᵀ⊛sg⊛arc′
+        t1 = bitmm_chain_rows(dat, (arc,), n, heads)
+        seed = (t1 | transpose_packed(t1, n)) & ~eye
+        seed = seed | transpose_packed(
+            bitmm_chain_rows(dat, (transpose_packed(sg, n), arc), n, heads), n
+        )
+        seed = seed | bitmm_chain_rows(dat, (sg, arc), n, heads)
+    else:
+        seed = _bitmm(arc_t, arc, n, use_pallas) & ~eye
+        seed = seed | _bitmm(_bitmm(arc_t, sg, n, use_pallas), delta_arc, n, use_pallas)
+        seed = seed | _bitmm(_bitmm(dat, sg, n, use_pallas), arc, n, use_pallas)
+    delta = seed & ~sg
+    iters = 0
+    while iters < max_iters:
+        frontier = _frontier_rows(delta)   # doubles as the termination test
+        if len(frontier) == 0:
+            break
+        sg = sg | delta
+        if not use_pallas and len(frontier) <= n // 2:
+            # Δ is symmetric throughout (sg and every seed term are), so the
+            # sandwich product contracts over Δ's row block alone
+            new = _sandwich_rows(delta, arc, n, frontier)
+        else:
+            mid = _bitmm(arc_t, delta, n, use_pallas)
+            new = _bitmm(mid, arc, n, use_pallas)
+        delta = new & ~sg
+        iters += 1
+    return sg, iters
 
 
 def sg_fixpoint(
@@ -195,6 +390,23 @@ class BitmatrixPlan:
 
 def _is_var(t, name=None):
     return isinstance(t, Var) and (name is None or t.name == name)
+
+
+def eligible_plan(stratum: Stratum, domain: int, config) -> BitmatrixPlan | None:
+    """The full PBME gate: shape match + backend/memory policy.
+
+    Single source of truth shared by the engine's fast path and the serving
+    layer's bit-matrix residency — they must agree on which strata are
+    bitmatrix-evaluated or incremental updates would diverge from full runs.
+    """
+    if config.backend not in ("auto", "bitmatrix") or stratum.has_recursive_agg:
+        return None
+    plan = match_bitmatrix_stratum(stratum, domain, config)
+    if plan is not None and (
+        config.backend == "bitmatrix" or domain <= config.max_bitmatrix_n
+    ):
+        return plan
+    return None
 
 
 def match_bitmatrix_stratum(stratum: Stratum, domain: int, config) -> BitmatrixPlan | None:

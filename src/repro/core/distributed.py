@@ -24,6 +24,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
+from repro.distributed.compat import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.bitmatrix import bitmm_ref, edges_to_bitmatrix, unpack_bits
@@ -68,7 +70,7 @@ def make_tc_step(mesh: Mesh, row_axes: tuple[str, ...], col_axis: str):
         )
         return d_new, m_new, cnt
 
-    sharded = jax.shard_map(
+    sharded = shard_map(
         step,
         mesh=mesh,
         in_specs=(spec_dm, spec_arc, spec_dm),
@@ -127,7 +129,7 @@ def make_tc_step_1d(mesh: Mesh, row_axes: tuple[str, ...]):
         return d_new, m_new, cnt
 
     return jax.jit(
-        jax.shard_map(
+        shard_map(
             step,
             mesh=mesh,
             in_specs=(spec_rows, P(None, None), spec_rows),
@@ -167,7 +169,7 @@ def make_tc_step_psum(mesh: Mesh, row_axes: tuple[str, ...], col_axis: str):
         return d_new, m_new, cnt
 
     return jax.jit(
-        jax.shard_map(
+        shard_map(
             step,
             mesh=mesh,
             in_specs=(spec_dm, spec_arc, spec_dm),

@@ -146,12 +146,14 @@ class Engine:
         program: Program | str,
         edb: dict[str, np.ndarray],
         resume_from: str | None = None,
+        strat: Stratification | None = None,
     ) -> dict[str, np.ndarray]:
         if isinstance(program, str):
             from repro.core.parser import parse
 
             program = parse(program)
-        strat = analyze(program)
+        if strat is None:
+            strat = analyze(program)
         t_start = time.perf_counter()
 
         domain = 1
@@ -180,6 +182,9 @@ class Engine:
             self._eval_stratum(strat, stratum, store, start_iteration=it0)
 
         self.stats.total_seconds = time.perf_counter() - t_start
+        # expose materialized state for incremental maintenance (serve_datalog)
+        self.strat = strat
+        self.store = store
         out: dict[str, np.ndarray] = {}
         for name in strat.idb:
             out[name] = store[name].to_numpy() if name in store else np.zeros(
@@ -199,17 +204,14 @@ class Engine:
         cfg = self.config
 
         # PBME: dense binary TC/SG-shaped strata on the bit-matrix backend
-        if cfg.backend in ("auto", "bitmatrix") and not stratum.has_recursive_agg:
-            from repro.core.bitmatrix import match_bitmatrix_stratum
+        from repro.core.bitmatrix import eligible_plan
 
-            plan = match_bitmatrix_stratum(stratum, self.domain, cfg)
-            if plan is not None and (
-                cfg.backend == "bitmatrix" or self.domain <= cfg.max_bitmatrix_n
-            ):
-                plan.execute(store, self)
-                self.stats.backend_used[stratum.preds[0]] = "bitmatrix"
-                self.stats.iterations[stratum.index] = plan.iterations
-                return
+        plan = eligible_plan(stratum, self.domain, cfg)
+        if plan is not None:
+            plan.execute(store, self)
+            self.stats.backend_used[stratum.preds[0]] = "bitmatrix"
+            self.stats.iterations[stratum.index] = plan.iterations
+            return
 
         groups = delta_variants(stratum)
         handles = self._init_handles(strat, stratum, store, fresh=start_iteration == 0)
@@ -217,7 +219,30 @@ class Engine:
             self.stats.backend_used[p] = handles[p]
         dsd_state = {p: DSDState(alpha=cfg.alpha) for p in stratum.preds}
         deltas: dict[str, TupleView | None] = {p: None for p in stratum.preds}
+        self._seminaive_loop(
+            strat, stratum, store, handles, deltas, dsd_state, groups,
+            start_iteration=start_iteration,
+        )
 
+    def _seminaive_loop(
+        self,
+        strat: Stratification,
+        stratum: Stratum,
+        store: dict[str, Any],
+        handles: dict[str, str],
+        deltas: dict[str, TupleView | None],
+        dsd_state: dict[str, DSDState],
+        groups: dict[str, list[RuleVariant]],
+        start_iteration: int = 0,
+    ) -> None:
+        """The per-stratum iteration loop of Algorithm 1, resumable.
+
+        Callable mid-fixpoint: with ``start_iteration > 0`` and externally
+        seeded ``deltas`` (incremental view maintenance — new EDB facts become
+        ΔR and iteration continues from where the fixpoint left off) only the
+        Δ-variants fire, never the base rules.
+        """
+        cfg = self.config
         iteration = start_iteration
         while True:
             any_delta = False
@@ -453,10 +478,17 @@ class Engine:
         handle = store.get(atom.pred)
         if handle is None:
             return _empty_view(atom.arity, self.domain)
+        if use_delta:
+            # An explicit Δ view wins for every handle kind: the incremental
+            # path (serve_datalog) seeds deltas for EDB and upstream-stratum
+            # preds here, which the normal loop never does (its dense preds
+            # keep ``deltas[pred] = None`` and fall through below).
+            view = deltas.get(atom.pred)
+            if view is not None:
+                return view
         if isinstance(handle, TupleRelation):
             if use_delta:
-                view = deltas.get(atom.pred)
-                return view if view is not None else _empty_view(atom.arity, self.domain)
+                return _empty_view(atom.arity, self.domain)
             return TupleView(handle.rows, handle.count, self.domain)
         # dense handles: materialize a tuple view
         cap = next_bucket(

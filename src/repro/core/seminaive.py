@@ -41,3 +41,23 @@ def delta_variants(stratum: Stratum) -> dict[str, list[RuleVariant]]:
             for i in rec_positions:
                 groups[rule.head_pred].append(RuleVariant(rule, i))
     return groups
+
+
+def ingest_variants(stratum: Stratum, changed: set[str]) -> dict[str, list[RuleVariant]]:
+    """Delta rewriting against *external* changes (incremental maintenance).
+
+    ``changed`` names relations outside the stratum (EDB or upstream IDBs)
+    that just gained facts.  For every positive occurrence of a changed
+    relation, emit a variant reading that atom from the external Δ and every
+    other atom from the full (already-updated) relation: any derivation using
+    at least one new fact is covered by the variant whose Δ atom is one of the
+    new facts it uses, and duplicates are absorbed by dedup + set-difference.
+    The results, set-differenced against the stored IDB, seed ΔR for the
+    resumed semi-naïve loop.
+    """
+    groups: dict[str, list[RuleVariant]] = {p: [] for p in stratum.preds}
+    for rule in stratum.rules:
+        for i, atom in enumerate(rule.atoms):
+            if not atom.negated and atom.pred in changed:
+                groups[rule.head_pred].append(RuleVariant(rule, i))
+    return groups

@@ -5,8 +5,11 @@ from repro.distributed.sharding import (
     dp_axes_of,
 )
 from repro.distributed.hlo import collective_bytes
+from repro.distributed.compat import make_mesh, shard_map
 
 __all__ = [
+    "make_mesh",
+    "shard_map",
     "param_sharding",
     "batch_sharding",
     "lm_param_spec",

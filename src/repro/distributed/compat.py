@@ -1,0 +1,39 @@
+"""JAX version compatibility shims for the distributed layer.
+
+``jax.sharding.AxisType`` (explicit/auto axis typing) only exists in newer
+JAX releases; on older ones every mesh axis is implicitly Auto, so dropping
+the argument is semantics-preserving.  Centralizing the fallback here keeps
+call sites (launch, tests, benchmarks) on one code path.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:  # JAX ≥ 0.5: axis types are explicit
+    from jax.sharding import AxisType as _AxisType
+except ImportError:  # pragma: no cover - depends on installed JAX
+    _AxisType = None
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if _AxisType is not None:
+        return jax.make_mesh(shape, axes, axis_types=(_AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """``jax.shard_map`` on new JAX; ``jax.experimental.shard_map`` (where the
+    replication-check kwarg is spelled ``check_rep``) on older releases."""
+    if hasattr(jax, "shard_map"):
+        kwargs = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kwargs = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+    )

@@ -10,6 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.compat import shard_map
+
 from repro.models.common import dense_init
 from repro.models.gnn.common import GNNConfig, GraphBatch, edge_mask
 from repro.relational.segment import segment_sum
@@ -112,7 +114,7 @@ def forward_halo(
 
     n_layers = len(params)
     ws = tuple(params[f"w{i}"] for i in range(n_layers))
-    return jax.shard_map(
+    return shard_map(
         local,
         mesh=mesh,
         in_specs=(

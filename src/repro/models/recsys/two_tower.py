@@ -14,6 +14,8 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.compat import shard_map
+
 from repro.models.common import mlp_apply, mlp_init
 from repro.relational.embedding import embedding_bag, sampled_softmax_loss
 
@@ -124,7 +126,7 @@ def sharded_bags(
         return out.astype(table_l.dtype)
 
     out_batch = (tuple(dp_axes) + (tp,)) if scatter else tuple(dp_axes)
-    return jax.shard_map(
+    return shard_map(
         local,
         mesh=mesh,
         in_specs=(P(tp, None), P(dp_axes, None, None)),

@@ -5,6 +5,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.compat import shard_map
+
 from repro.models.common import dense_init, rmsnorm, rmsnorm_init, rope
 from repro.models.transformer.config import TransformerConfig
 
@@ -398,7 +400,7 @@ def _moe_apply_ep(p, x, cfg: TransformerConfig):
         aux = jax.lax.pmean(jax.lax.pmean(aux_l, "model"), dp[-1])
         return out.reshape(bl, sl, d), aux
 
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         local,
         mesh=mesh,
         in_specs=(

@@ -1,0 +1,52 @@
+"""Incremental Datalog serving: delta-ingest, view maintenance, batched queries.
+
+Architecture note — delta-seeding vs. FlowLog-style full IVM
+------------------------------------------------------------
+
+RecStep's semi-naïve machinery already *is* an incremental engine within one
+evaluation: each iteration derives only from ΔR.  This package extends that
+observation across evaluations (FlowLog, arXiv 2511.00865): a batch of newly
+arrived EDB facts is treated as an externally-seeded Δ, and the fixpoint is
+*resumed* rather than recomputed —
+
+1. :class:`~repro.serve_datalog.instance.MaterializedInstance` keeps the
+   stratification plus fixpointed relations device-resident (EOST applied to
+   serving).  ``insert_facts`` runs *ingest variants* (one rule variant per
+   occurrence of a changed relation, reading that atom from Δ), set-differences
+   the result against the stored IDB to seed ΔR, and re-enters the engine's
+   resumable ``_seminaive_loop`` from iteration 1.  PBME strata stay resident
+   as packed bit matrices and use the incremental frontier
+   (``tc_increment``/``sg_increment``) with row-block compaction.
+2. The *scope* is insert-only (growth) maintenance: stratified negation or
+   tuple-path aggregates over a changed relation are non-monotone under
+   insertion, so those strata fall back to full recomputation — and if the
+   recompute retracts facts, the taint propagates to downstream strata.  A
+   FlowLog-style full IVM would instead track support counts and propagate
+   retractions rule-by-rule (DRed/counting); delta-seeding trades that
+   bookkeeping for a coarser but allocation-free fallback, which fits the
+   append-mostly serving workload this layer targets.  Updates that introduce
+   new constants rebuild the instance (dense state is domain-sized).
+3. :class:`~repro.serve_datalog.plan_cache.PlanCache` memoizes parsed
+   programs/stratifications by fingerprint and pre-traces the hot jitted
+   kernels per (fingerprint, capacity bucket) so steady-state traffic never
+   re-traces (Adaptive Recursive Query Optimization, arXiv 2312.04282).
+4. :class:`~repro.serve_datalog.server.DatalogServer` fronts an instance with
+   a request queue and admission batching (modeled on ``train/serve.py``):
+   same-relation insert runs coalesce into one delta batch; queries hit warm
+   selection executables.  Per-request queue/service latencies are recorded.
+"""
+
+from repro.serve_datalog.instance import MaterializedInstance, UpdateStats
+from repro.serve_datalog.plan_cache import CompiledPlan, PlanCache, default_cache
+from repro.serve_datalog.server import DatalogServer, RequestError, ServerStats
+
+__all__ = [
+    "MaterializedInstance",
+    "UpdateStats",
+    "CompiledPlan",
+    "PlanCache",
+    "default_cache",
+    "DatalogServer",
+    "RequestError",
+    "ServerStats",
+]

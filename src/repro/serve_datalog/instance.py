@@ -1,0 +1,479 @@
+"""MaterializedInstance: a fixpointed Datalog program that accepts deltas.
+
+``insert_facts(rel, rows)`` treats a batch of new EDB tuples as ΔR and
+resumes semi-naïve iteration from the first affected stratum onward instead
+of recomputing from scratch.  Per affected stratum one of three update modes
+applies (recorded in :class:`UpdateStats.modes`):
+
+* ``bitmatrix`` — the stratum matched PBME at materialization time; the
+  packed closure and arc matrices persist here and the update runs the
+  incremental frontier (``tc_increment`` / ``sg_increment``) with row-block
+  compaction.
+* ``delta`` — ingest variants (one per occurrence of a changed relation)
+  evaluate with the changed atom read from the external Δ, the results are
+  set-differenced against the stored IDB to seed ΔR, and the engine's
+  resumable ``_seminaive_loop`` runs from iteration 1 (base rules never
+  re-fire).  Sound because insertion is monotone for positive bodies — every
+  new derivation uses ≥ 1 new fact and is covered by the variant reading
+  that fact from Δ.
+* ``full`` — monotonicity is lost: a rule negates a changed relation, a
+  non-dense aggregate must be recomputed in place, or an upstream stratum
+  was itself recomputed with retractions.  The stratum is dropped and
+  re-evaluated from scratch (and if the recompute retracted facts, the
+  non-monotone taint propagates downstream).
+
+Updates that introduce constants outside the materialized active domain
+rebuild the whole instance (dense arrays and bit matrices are sized by the
+domain); the common serving case — new facts over known entities — stays
+incremental.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.analyzer import Stratum
+from repro.core.ast import Program
+from repro.core.engine import Engine, EngineConfig, TupleView
+from repro.core.relation import (
+    DenseAggRelation,
+    DenseSetRelation,
+    TupleRelation,
+    _sort_pad,
+    next_bucket,
+)
+from repro.core.seminaive import ingest_variants
+from repro.core.setdiff import DSDState, set_difference
+from repro.relational.sort import SENTINEL
+from repro.serve_datalog.plan_cache import CompiledPlan, PlanCache, default_cache
+
+
+@dataclass
+class UpdateStats:
+    """What one ``insert_facts`` batch did, per stratum."""
+
+    relation: str
+    requested: int                       # rows in the batch
+    inserted: int = 0                    # genuinely-new EDB tuples
+    derived: int = 0                     # new IDB tuples across all strata
+    seconds: float = 0.0
+    full_rebuild: bool = False
+    modes: dict[int, str] = field(default_factory=dict)      # stratum → mode
+    iterations: dict[int, int] = field(default_factory=dict)  # stratum → iters
+
+
+class MaterializedInstance:
+    """A program's stratification + fixpointed relations, open for updates."""
+
+    def __init__(
+        self,
+        program: Program | str,
+        edb: dict[str, np.ndarray],
+        config: EngineConfig | None = None,
+        cache: PlanCache | None = None,
+    ):
+        self.cache = cache or default_cache()
+        self.plan: CompiledPlan = self.cache.get(program)
+        self.engine = Engine(config)
+        self.engine.run(self.plan.program, edb, strat=self.plan.strat)
+        self.strat = self.plan.strat
+        self.store = self.engine.store
+        self.domain = self.engine.domain
+        self.cache.warm(self.plan, self.domain, buckets=self._hot_buckets())
+        self.update_log: list[UpdateStats] = []
+        self._bm: dict[int, dict] = {}
+        self._init_bitmatrix_state()
+
+    def _hot_buckets(self) -> tuple[int, ...]:
+        """Warm the *actual* materialized capacities, not just defaults."""
+        caps = {self.engine.config.capacity_min, 2 * self.engine.config.capacity_min}
+        for h in self.store.values():
+            if isinstance(h, TupleRelation):
+                caps.add(h.capacity)
+        return tuple(sorted(caps))
+
+    # -- bitmatrix residency -------------------------------------------------
+
+    def _bm_eligible(self, stratum: Stratum):
+        from repro.core.bitmatrix import eligible_plan
+
+        return eligible_plan(stratum, self.domain, self.engine.config)
+
+    def _init_bitmatrix_state(self) -> None:
+        """Keep PBME strata resident as packed matrices between updates."""
+        from repro.core.bitmatrix import edges_to_bitmatrix
+
+        self._bm.clear()
+        for stratum in self.strat.strata:
+            plan = self._bm_eligible(stratum)
+            if plan is None or plan.edb not in self.store:
+                continue
+            arc = edges_to_bitmatrix(self.store[plan.edb].to_numpy(), self.domain)
+            m = edges_to_bitmatrix(self.store[plan.idb].to_numpy(), self.domain)
+            self._bm[stratum.index] = {"plan": plan, "arc": arc, "m": m}
+
+    # -- reads ---------------------------------------------------------------
+
+    _ALIASES = {"src": 0, "x": 0, "key": 0, "dst": 1, "y": 1, "val": 1, "z": 2}
+
+    def relation(self, rel: str) -> np.ndarray:
+        """Full contents of one relation (EDB or IDB) as numpy rows."""
+        h = self.store.get(rel)
+        if h is None:
+            return np.zeros((0, self.plan.program.arity_of(rel)), np.int32)
+        return h.to_numpy()
+
+    def query(self, rel: str, *, where: dict | None = None, **kw) -> np.ndarray:
+        """Point/range selection, e.g. ``query("tc", src=3)`` or
+        ``query("sssp", val=(0, 10))``; column indices also work via
+        ``where={0: 3, 1: (lo, hi)}``."""
+        bounds: dict[int, int | tuple[int, int]] = dict(where or {})
+        for name, v in kw.items():
+            if name not in self._ALIASES:
+                raise KeyError(
+                    f"unknown query column {name!r}; use {sorted(self._ALIASES)}"
+                    " or where={col_index: bound}"
+                )
+            bounds[self._ALIASES[name]] = v
+        rows = self._tuple_rows(rel)
+        if rows is None:
+            return np.zeros((0, self.plan.program.arity_of(rel)), np.int32)
+        if set(bounds) == {0}:
+            # tables are sorted by column 0 (pads last): binary search + slice
+            lo, hi = (
+                bounds[0] if isinstance(bounds[0], tuple) else (bounds[0], bounds[0])
+            )
+            col = rows[:, 0]
+            l = int(jnp.searchsorted(col, lo, side="left"))
+            h = int(jnp.searchsorted(col, hi, side="right"))
+            return np.asarray(rows[l:h])
+        out, count = self.cache.select(rows, bounds)
+        return np.asarray(out[:count])
+
+    def _tuple_rows(self, rel: str):
+        h = self.store.get(rel)
+        if h is None:
+            return None
+        if isinstance(h, TupleRelation):
+            return h.rows
+        cap = next_bucket(max(h.count, 1), self.engine.config.capacity_min)
+        if isinstance(h, DenseSetRelation):
+            rows, _count = Engine._dense_set_full(h, cap)
+            return rows
+        if isinstance(h, DenseAggRelation):
+            rows, _count = h.full_tuples(cap)
+            return rows
+        raise TypeError(type(h))
+
+    # -- writes --------------------------------------------------------------
+
+    _MAX_LOG = 1024          # bounded: serving runs forever
+
+    def insert_facts(self, rel: str, rows: np.ndarray) -> UpdateStats:
+        """Apply a batch of new EDB facts and restore the fixpoint."""
+        t0 = time.perf_counter()
+        # per-update engine diagnostics only — unbounded growth otherwise
+        self.engine.stats.records = self.engine.stats.records[-self._MAX_LOG:]
+        del self.update_log[: -self._MAX_LOG]
+        if rel not in self.strat.edb:
+            raise KeyError(f"{rel!r} is not an EDB relation of this program")
+        arity = self.plan.program.arity_of(rel)
+        rows = np.asarray(rows, np.int32).reshape(-1, arity)
+        stats = UpdateStats(relation=rel, requested=len(rows))
+        if len(rows) == 0:
+            stats.seconds = time.perf_counter() - t0
+            self.update_log.append(stats)
+            return stats
+        if int(rows.min()) < 0:
+            # negative ids would wrap through dense scatters → silent corruption
+            raise ValueError(
+                f"negative constants in {rel!r} insert batch (ids must be ≥ 0)"
+            )
+
+        # Transactional: handles are immutable, so shallow snapshots suffice.
+        # A failure mid-update (max_iters, OOM) must not leave the EDB merged
+        # with the fixpoint unrestored — that would silently corrupt every
+        # later read AND make retries no-ops (delta already "inserted").
+        store_backup = dict(self.store)
+        bm_backup = {k: dict(v) for k, v in self._bm.items()}
+        domain_backup = self.domain
+        try:
+            return self._apply_insert(rel, rows, stats, t0)
+        except Exception:
+            self.store = store_backup
+            self.engine.store = store_backup
+            self._bm = bm_backup
+            self.domain = domain_backup
+            self.engine.domain = domain_backup
+            raise
+
+    def _apply_insert(
+        self, rel: str, rows: np.ndarray, stats: UpdateStats, t0: float
+    ) -> UpdateStats:
+        if int(rows.max()) >= self.domain:
+            self._full_rebuild(rel, rows, stats)
+            stats.seconds = time.perf_counter() - t0
+            self.update_log.append(stats)
+            return stats
+
+        handle: TupleRelation = self.store[rel]
+        new_handle, delta_rows, delta_count = handle.insert(rows)
+        stats.inserted = delta_count
+        if delta_count == 0:
+            stats.seconds = time.perf_counter() - t0
+            self.update_log.append(stats)
+            return stats
+        self.store[rel] = new_handle
+        dcap = next_bucket(max(delta_count, 1), self.engine.config.capacity_min)
+        changed: dict[str, TupleView] = {
+            rel: TupleView(delta_rows[:dcap], delta_count, self.domain)
+        }
+        nonmono: set[str] = set()
+
+        for stratum in self.strat.strata:
+            mode, kinds = self._update_mode(stratum, changed, nonmono)
+            if mode == "skip":
+                continue
+            if mode == "delta" and stratum.index in self._bm and self._bm_applies(
+                stratum, changed
+            ):
+                iters, derived = self._bitmatrix_delta(stratum, changed)
+                stats.modes[stratum.index] = "bitmatrix"
+            elif mode == "delta":
+                iters, derived = self._delta_stratum(stratum, changed, nonmono, kinds)
+                stats.modes[stratum.index] = "delta"
+            else:
+                iters, derived = self._full_stratum(stratum, changed, nonmono)
+                stats.modes[stratum.index] = "full"
+            stats.iterations[stratum.index] = iters
+            stats.derived += derived
+
+        stats.seconds = time.perf_counter() - t0
+        self.update_log.append(stats)
+        return stats
+
+    # -- update-mode selection ----------------------------------------------
+
+    def _update_mode(
+        self, stratum: Stratum, changed: dict[str, TupleView], nonmono: set[str]
+    ) -> tuple[str, dict[str, str] | None]:
+        """(mode, handle kinds) — kinds computed once here, reused by the
+        delta path so `_init_handles` runs a single time per stratum."""
+        refs = {a.pred for r in stratum.rules for a in r.atoms}
+        if not refs & (set(changed) | nonmono):
+            return "skip", None
+        if refs & nonmono:
+            return "full", None   # upstream retractions: deltas unavailable
+        if any(
+            a.negated and a.pred in changed
+            for r in stratum.rules
+            for a in r.atoms
+        ):
+            return "full", None   # growth of a negated relation retracts facts
+        kinds = self.engine._init_handles(self.strat, stratum, self.store, fresh=False)
+        if any(
+            r.has_aggregate and kinds.get(r.head_pred) != "dense_agg"
+            for r in stratum.rules
+        ):
+            return "full", None   # tuple-path aggregates overwrite group values
+        return "delta", kinds
+
+    def _bm_applies(self, stratum: Stratum, changed: dict[str, TupleView]) -> bool:
+        refs = {a.pred for r in stratum.rules for a in r.atoms}
+        return refs & set(changed) == {self._bm[stratum.index]["plan"].edb}
+
+    # -- the three update paths ----------------------------------------------
+
+    def _bitmatrix_delta(self, stratum: Stratum, changed: dict[str, TupleView]):
+        from repro.core.bitmatrix import (
+            bitmatrix_to_edges,
+            edges_to_bitmatrix,
+            popcount,
+            sg_increment,
+            tc_increment,
+        )
+
+        st = self._bm[stratum.index]
+        plan = st["plan"]
+        view = changed[plan.edb]
+        d_edges = np.asarray(view.rows[: max(view.count, 1)])[: view.count]
+        d_arc = edges_to_bitmatrix(d_edges, self.domain)
+        st["arc"] = st["arc"] | d_arc
+        m_old = st["m"]
+        fix = tc_increment if plan.kind == "tc" else sg_increment
+        m_new, iters = fix(
+            m_old, st["arc"], d_arc, self.domain, use_pallas=plan.use_pallas
+        )
+        st["m"] = m_new
+        new_pairs = m_new & ~m_old
+        count = int(popcount(new_pairs))
+        if count:
+            rows_np = bitmatrix_to_edges(new_pairs, self.domain)
+            cap = next_bucket(len(rows_np), self.engine.config.capacity_min)
+            dr = _sort_pad(jnp.asarray(rows_np), cap, self.domain)
+            self.store[plan.idb] = self.store[plan.idb].merge(dr, len(rows_np))
+            changed[plan.idb] = TupleView(dr, len(rows_np), self.domain)
+        return iters, count
+
+    def _delta_stratum(
+        self,
+        stratum: Stratum,
+        changed: dict[str, TupleView],
+        nonmono: set[str],
+        handles: dict[str, str],
+    ):
+        eng = self.engine
+        dsd_state = {p: DSDState(alpha=eng.config.alpha) for p in stratum.preds}
+        deltas: dict[str, TupleView | None] = {p: None for p in stratum.preds}
+        deltas.update(changed)          # external Δ views, read by ingest variants
+        snapshots = {p: self._snapshot(p) for p in stratum.preds}
+
+        groups = ingest_variants(stratum, set(changed))
+        for pred in stratum.preds:
+            rec = eng._eval_idb_iteration(
+                self.strat, stratum, self.store, handles, deltas, dsd_state,
+                pred, groups[pred], 0,
+            )
+            eng.stats.records.append(rec)
+        if stratum.recursive:
+            eng._seminaive_loop(
+                self.strat, stratum, self.store, handles, deltas, dsd_state,
+                self.plan.groups_for(stratum.index), start_iteration=1,
+            )
+        iters = eng.stats.iterations.get(stratum.index, 1) if stratum.recursive else 1
+
+        derived = 0
+        for pred in stratum.preds:
+            snap = snapshots[pred]
+            if snap[0] == "dense_agg":
+                # A MIN/MAX value *improvement* on an already-present key is a
+                # logical retraction of the old (key, value) tuple at the
+                # relational level — downstream consumers holding the old
+                # tuple must recompute, exactly like the negation fallback.
+                h = self.store[pred]
+                improved = h.values != snap[1]
+                overwritten = improved & (snap[1] != h.absent)
+                if bool(overwritten.any()):
+                    nonmono.add(pred)
+                    derived += int(improved.sum())
+                    continue
+            view = self._delta_since(pred, snap)
+            if view is not None:
+                changed[pred] = view
+                derived += view.count
+        return iters, derived
+
+    def _full_stratum(
+        self, stratum: Stratum, changed: dict[str, TupleView], nonmono: set[str]
+    ):
+        old = {p: self.relation(p) for p in stratum.preds}
+        for p in stratum.preds:
+            self.store.pop(p, None)
+        self.engine._eval_stratum(self.strat, stratum, self.store)
+        derived = 0
+        for p in stratum.preds:
+            new_np = self.relation(p)
+            old_set = set(map(tuple, old[p].tolist()))
+            new_set = set(map(tuple, new_np.tolist()))
+            fresh = new_set - old_set
+            derived += len(fresh)
+            if old_set <= new_set:
+                if fresh:
+                    changed[p] = self._view_from_numpy(np.array(sorted(fresh)))
+            else:
+                nonmono.add(p)      # retractions: taint downstream strata
+            if stratum.index in self._bm and self._bm[stratum.index]["plan"].idb == p:
+                self._refresh_bitmatrix(stratum.index)
+        return self.engine.stats.iterations.get(stratum.index, 1), derived
+
+    def _full_rebuild(self, rel: str, rows: np.ndarray, stats: UpdateStats) -> None:
+        """Domain growth: dense state is sized by the active domain → rebuild."""
+        stats.full_rebuild = True
+        old_counts = {
+            p: getattr(self.store.get(p), "count", 0) for p in self.strat.idb
+        }
+        edb = {name: self.relation(name) for name in self.strat.edb}
+        before = len(np.unique(np.concatenate([edb[rel], rows]), axis=0))
+        stats.inserted = before - len(edb[rel])
+        edb[rel] = np.concatenate([edb[rel], rows])
+        self.engine.run(self.plan.program, edb, strat=self.plan.strat)
+        self.store = self.engine.store
+        self.domain = self.engine.domain
+        # executables are per-domain: re-warm for the grown domain
+        self.cache.warm(self.plan, self.domain, buckets=self._hot_buckets())
+        self._init_bitmatrix_state()
+        for p in self.strat.idb:
+            stats.derived += max(
+                getattr(self.store.get(p), "count", 0) - old_counts[p], 0
+            )
+
+    # -- delta bookkeeping -----------------------------------------------------
+
+    def _snapshot(self, pred: str):
+        h = self.store.get(pred)
+        if isinstance(h, TupleRelation):
+            return ("tuple", h.rows, h.count)
+        if isinstance(h, DenseSetRelation):
+            return ("dense_set", h.member)
+        if isinstance(h, DenseAggRelation):
+            return ("dense_agg", h.values)
+        return ("absent",)
+
+    def _delta_since(self, pred: str, snap) -> TupleView | None:
+        h = self.store.get(pred)
+        cap_min = self.engine.config.capacity_min
+        if snap[0] == "tuple":
+            _, old_rows, old_count = snap
+            if h.count == old_count:
+                return None
+            rows, count, _ = set_difference(
+                h.rows, h.count, old_rows, old_count, self.domain, DSDState()
+            )
+            if count == 0:
+                return None
+            return TupleView(
+                rows[: next_bucket(max(count, 1), cap_min)], count, self.domain
+            )
+        if snap[0] == "dense_set":
+            mask = h.member & ~snap[1]
+            count = int(mask.sum())
+            if count == 0:
+                return None
+            view = DenseSetRelation(h.name, h.n, h.member, mask, h.count, count)
+            rows, _ = view.delta_tuples(next_bucket(count, cap_min))
+            return TupleView(rows, count, self.domain)
+        if snap[0] == "dense_agg":
+            mask = h.values != snap[1]
+            count = int(mask.sum())
+            if count == 0:
+                return None
+            view = DenseAggRelation(
+                h.name, h.n, h.op, h.values, mask, h.count, count
+            )
+            rows, _ = view.delta_tuples(next_bucket(count, cap_min))
+            return TupleView(rows, count, self.domain)
+        # pred absent before this stratum ran: everything it now holds is new
+        if h is None:
+            return None
+        data = h.to_numpy()
+        return self._view_from_numpy(data) if len(data) else None
+
+    def _view_from_numpy(self, data: np.ndarray) -> TupleView:
+        cap = next_bucket(len(data), self.engine.config.capacity_min)
+        rows = _sort_pad(jnp.asarray(data.astype(np.int32)), cap, self.domain)
+        return TupleView(rows, len(data), self.domain)
+
+    def _refresh_bitmatrix(self, stratum_index: int) -> None:
+        from repro.core.bitmatrix import edges_to_bitmatrix
+
+        st = self._bm[stratum_index]
+        st["arc"] = edges_to_bitmatrix(
+            self.store[st["plan"].edb].to_numpy(), self.domain
+        )
+        st["m"] = edges_to_bitmatrix(
+            self.store[st["plan"].idb].to_numpy(), self.domain
+        )

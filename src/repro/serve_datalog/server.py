@@ -1,0 +1,184 @@
+"""DatalogServer: a batched request loop over a MaterializedInstance.
+
+Modeled on ``train/serve.py``'s ``BatchedServer`` (queue → admission batch →
+serve → per-request stats), with Datalog request kinds instead of decode
+slots:
+
+* *fact-insert batches* — consecutive inserts into the same relation are
+  coalesced into ONE ``insert_facts`` call (one delta-ingest pass amortizes
+  the per-iteration fixed costs over the whole admission batch);
+* *point/range queries* — answered against the materialized store through
+  the plan cache's warm selection executables.
+
+The loop preserves submission order across kinds (a query submitted after an
+insert sees its derived facts), which is why only *runs* of same-relation
+inserts coalesce — never across an intervening query.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.serve_datalog.instance import MaterializedInstance, UpdateStats
+
+
+@dataclass
+class _Request:
+    rid: int
+    kind: str                    # "query" | "insert"
+    rel: str
+    payload: dict | np.ndarray
+    submitted: float
+
+
+@dataclass
+class RequestError:
+    """Terminal per-request failure — delivered in ``done`` like a result."""
+
+    rid: int
+    error: str
+
+
+@dataclass
+class RequestRecord:
+    rid: int
+    kind: str
+    rel: str
+    batch_size: int              # admission-batch size this request rode in
+    queued_seconds: float
+    service_seconds: float
+
+
+@dataclass
+class ServerStats:
+    # bounded: long-lived servers must not accumulate per-request state
+    records: deque = field(default_factory=lambda: deque(maxlen=65536))
+
+    def latency(self, kind: str | None = None, include_queue: bool = True) -> dict:
+        lats = sorted(
+            (r.queued_seconds if include_queue else 0.0) + r.service_seconds
+            for r in self.records
+            if kind is None or r.kind == kind
+        )
+        if not lats:
+            return {"count": 0}
+        pick = lambda q: lats[min(int(q * len(lats)), len(lats) - 1)]
+        return {
+            "count": len(lats),
+            "p50_ms": pick(0.50) * 1e3,
+            "p95_ms": pick(0.95) * 1e3,
+            "max_ms": lats[-1] * 1e3,
+        }
+
+
+class DatalogServer:
+    """Queue + admission batching over one materialized instance."""
+
+    def __init__(
+        self,
+        instance: MaterializedInstance,
+        max_batch: int = 64,
+        history: int = 4096,
+    ):
+        self.instance = instance
+        self.max_batch = max_batch
+        self.history = history       # completed results retained for pickup
+        self.queue: deque[_Request] = deque()
+        self.done: dict[int, np.ndarray | UpdateStats] = {}
+        self.stats = ServerStats()
+        self._next_id = 0
+
+    # -- submission ----------------------------------------------------------
+
+    def submit_query(self, rel: str, *, where: dict | None = None, **kw) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append(
+            _Request(rid, "query", rel, {"where": where, "kw": kw}, time.perf_counter())
+        )
+        return rid
+
+    def submit_insert(self, rel: str, rows: np.ndarray) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append(
+            _Request(rid, "insert", rel, np.asarray(rows, np.int32), time.perf_counter())
+        )
+        return rid
+
+    # -- the serving loop ----------------------------------------------------
+
+    def run(self) -> dict[int, np.ndarray | UpdateStats | RequestError]:
+        """Drain the queue; returns rid → query rows, UpdateStats, or
+        RequestError.  Failures are isolated per request: a bad insert in a
+        coalesced batch falls back to per-request application so its valid
+        neighbors still land, and never stalls the requests behind it."""
+        while self.queue:
+            group = self._admit()
+            t0 = time.perf_counter()
+            if group[0].kind == "insert":
+                try:
+                    rows = np.concatenate(
+                        [np.atleast_2d(r.payload) for r in group]
+                    )
+                    result = self.instance.insert_facts(group[0].rel, rows)
+                    results = {r.rid: result for r in group}
+                except Exception:
+                    results = {
+                        r.rid: self._apply(
+                            lambda r=r: self.instance.insert_facts(
+                                r.rel, np.atleast_2d(r.payload)
+                            ),
+                            r.rid,
+                        )
+                        for r in group
+                    }
+            else:
+                results = {
+                    r.rid: self._apply(
+                        lambda r=r: self.instance.query(
+                            r.rel, where=r.payload["where"], **r.payload["kw"]
+                        ),
+                        r.rid,
+                    )
+                    for r in group
+                }
+            t1 = time.perf_counter()
+            per_req = (t1 - t0) / len(group)
+            for r in group:
+                self.done[r.rid] = results[r.rid]
+                self.stats.records.append(
+                    RequestRecord(
+                        r.rid, r.kind, r.rel, len(group),
+                        t0 - r.submitted, per_req,
+                    )
+                )
+            while len(self.done) > self.history:     # evict oldest results
+                self.done.pop(next(iter(self.done)))
+        return self.done
+
+    @staticmethod
+    def _apply(fn, rid: int):
+        try:
+            return fn()
+        except Exception as e:                     # noqa: BLE001 — serving loop
+            return RequestError(rid, f"{type(e).__name__}: {e}")
+
+    def _admit(self) -> list[_Request]:
+        """Admission batch: the longest same-kind run at the queue head —
+        same-relation runs for inserts (they coalesce into one delta batch),
+        any run of queries (they share the warm executables)."""
+        head = self.queue.popleft()
+        group = [head]
+        while self.queue and len(group) < self.max_batch:
+            nxt = self.queue[0]
+            if nxt.kind != head.kind:
+                break
+            if head.kind == "insert" and nxt.rel != head.rel:
+                break
+            group.append(self.queue.popleft())
+        return group

@@ -19,6 +19,8 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.distributed.compat import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.optim.adamw import adamw_update
@@ -121,7 +123,7 @@ def make_compressed_dp_step(
         batch_specs = jax.tree.map(
             lambda x: P(dp_axis, *([None] * (x.ndim - 1))), batch
         )
-        f = jax.shard_map(
+        f = shard_map(
             inner,
             mesh=mesh,
             in_specs=(

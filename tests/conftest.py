@@ -1,5 +1,14 @@
-# NOTE: no XLA_FLAGS here — smoke tests must see the real single CPU device;
-# only launch/dryrun.py forces 512 placeholder devices (in its own process).
+# Give the main pytest process 8 virtual CPU devices (before jax import) so
+# tests exercising sharding have a mesh to build; launch/dryrun.py still
+# forces its own 512 placeholder devices in a separate process.
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8"
+    ).strip()
+
 import numpy as np
 import pytest
 

@@ -11,10 +11,10 @@ import pytest
 _SCRIPT = r"""
 import json
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+from repro.distributed.compat import make_mesh
 
 out = {}
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ("data", "model"))
 
 # --- sharded PBME TC equals the oracle ---
 from repro.core.distributed import tc_fixpoint_sharded
@@ -75,7 +75,7 @@ pm = init_params(jax.random.PRNGKey(7), cfg_m)
 from repro.models.transformer import forward
 tm = jax.random.randint(jax.random.PRNGKey(8), (4, 8), 0, cfg_m.vocab)
 dense_out, _ = forward(pm, tm, cfg_m)
-mesh2 = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh2 = make_mesh((2, 4), ("data", "model"))
 with mesh_context(mesh2, ("data",)):
     ep_out, _ = jax.jit(lambda p, t: forward(p, t, cfg_m))(pm, tm)
 out["ep_moe_err"] = float(jnp.abs(dense_out - ep_out).max())
@@ -152,12 +152,12 @@ def test_collective_bytes_parser():
 
 
 def test_param_sharding_rules():
-    import jax
     import jax.numpy as jnp
-    from jax.sharding import AxisType, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.compat import make_mesh
     from repro.distributed.sharding import param_sharding
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     params = {
         "embed": jnp.zeros((16, 8)),
         "layers": {"attn": {"wq": jnp.zeros((2, 8, 8)), "wo": jnp.zeros((2, 8, 8))},

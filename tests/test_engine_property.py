@@ -9,6 +9,9 @@ Invariants checked on random graphs:
 """
 
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from conftest import adj_of, tc_oracle

@@ -1,0 +1,463 @@
+"""Incremental serving subsystem tests.
+
+The central invariant (property-style, over seeded random graphs/batches):
+``insert_facts`` followed by reads is tuple-for-tuple identical to a
+from-scratch ``Engine.run`` on the unioned EDB — across TC, SG, program
+analyses, dense-backend workloads, and stratified negation (where the
+affected strata must fall back to full recomputation).
+"""
+
+import numpy as np
+import pytest
+
+from conftest import adj_of, random_edges, tc_oracle
+from repro.configs.datalog_workloads import ALL as WORKLOADS
+from repro.core import Engine, EngineConfig
+from repro.data.program_facts import andersen_facts
+from repro.serve_datalog import (
+    DatalogServer,
+    MaterializedInstance,
+    PlanCache,
+)
+
+TC = WORKLOADS["tc"].program
+NEG_PROG = """
+tc(x,y) :- arc(x,y).
+tc(x,y) :- tc(x,z), arc(z,y).
+node(x) :- arc(x,y).
+node(y) :- arc(x,y).
+ntc(x,y) :- node(x), node(y), !tc(x,y).
+"""
+
+
+def _as_set(rows):
+    return set(map(tuple, np.asarray(rows).tolist()))
+
+
+def _check_incremental(prog, edb_full, rel, k, config=None, n_batches=1):
+    """insert_facts(…) == from-scratch run on the unioned EDB, per relation."""
+    config = config or EngineConfig()
+    oracle = Engine(EngineConfig(**vars(config))).run(prog, edb_full)
+    base = dict(edb_full)
+    held = base[rel][-k:]
+    base[rel] = base[rel][:-k]
+    inst = MaterializedInstance(prog, base, EngineConfig(**vars(config)))
+    stats = [
+        inst.insert_facts(rel, part)
+        for part in np.array_split(held, n_batches)
+    ]
+    for name, want in oracle.items():
+        assert _as_set(inst.relation(name)) == _as_set(want), name
+    return inst, stats
+
+
+# --------------------------------------------------------------------------
+# property-style equality across workloads and random instances
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("backend", ["tuple", "auto"])
+def test_tc_incremental_matches_scratch(seed, backend):
+    rng = np.random.default_rng(seed)
+    n = 25 + 5 * seed
+    edges = random_edges(rng, n, 4 * n)
+    inst, stats = _check_incremental(
+        TC, {"arc": edges}, "arc", max(len(edges) // 10, 1),
+        EngineConfig(backend=backend), n_batches=2,
+    )
+    assert sum(s.inserted for s in stats) >= 1
+    expected_mode = "bitmatrix" if backend == "auto" else "delta"
+    assert all(s.modes.get(0, "skip") in (expected_mode, "skip") for s in stats)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_sg_incremental_matches_scratch(seed):
+    rng = np.random.default_rng(100 + seed)
+    edges = random_edges(rng, 20, 55)
+    for backend in ("tuple", "auto"):
+        _check_incremental(
+            WORKLOADS["sg"].program, {"arc": edges}, "arc", 6,
+            EngineConfig(backend=backend),
+        )
+
+
+@pytest.mark.parametrize("rel", ["assign", "addressOf", "load", "store"])
+def test_andersen_incremental_matches_scratch(rel):
+    edb, _ = andersen_facts(1, seed=7)
+    _check_incremental(
+        WORKLOADS["andersen"].program, edb, rel,
+        max(len(edb[rel]) // 8, 1), n_batches=2,
+    )
+
+
+def test_cspa_incremental_matches_scratch():
+    from repro.data.program_facts import cspa_facts
+
+    _check_incremental(WORKLOADS["cspa"].program, cspa_facts(35, seed=2), "assign", 5)
+
+
+def test_csda_incremental_matches_scratch():
+    from repro.data.program_facts import csda_facts
+
+    edb = csda_facts(600, seed=0)
+    _check_incremental(WORKLOADS["csda"].program, edb, "nullEdge", 1)
+    _check_incremental(WORKLOADS["csda"].program, edb, "arc", 20)
+
+
+def test_dense_backends_incremental():
+    """REACH (dense bit-vector) and CC/SSSP (dense MIN tables) stay exact —
+    recursive MIN/MAX is monotone under insertion, so the dense strata update
+    in place; the non-dense aggregate strata downstream recompute."""
+    rng = np.random.default_rng(5)
+    edges = random_edges(rng, 24, 70)
+    ids = np.array([[0]], np.int32)
+    _check_incremental(WORKLOADS["reach"].program, {"arc": edges, "id": ids}, "arc", 8)
+    _check_incremental(WORKLOADS["reach"].program, {"arc": edges, "id": ids}, "id", 1)
+    _check_incremental(WORKLOADS["cc"].program, {"arc": edges}, "arc", 8)
+    w = np.concatenate(
+        [edges, rng.integers(1, 30, size=(len(edges), 1)).astype(np.int32)], axis=1
+    )
+    inst, stats = _check_incremental(
+        WORKLOADS["sssp"].program, {"arc": w, "id": ids}, "arc", 8
+    )
+    # the recursive sssp2 stratum is dense-agg (delta); the final projection
+    # stratum is a tuple-path MIN and must have recomputed in full
+    modes = stats[-1].modes
+    assert any(m == "full" for m in modes.values())
+
+
+def test_dense_agg_overwrite_retracts_downstream():
+    """A MIN improvement retracts the old (key, value) tuple: downstream
+    non-aggregate consumers must not keep it (regression: the improvement was
+    once propagated as a pure insertion delta, leaving the stale tuple)."""
+    prog = """
+    sssp2(y, MIN(0)) :- id(y).
+    sssp2(y, MIN(d1+d2)) :- sssp2(x,d1), arc(x,y,d2).
+    copy(x,d) :- sssp2(x,d).
+    """
+    edb = {"id": np.array([[0]], np.int32), "arc": np.array([[0, 1, 5]], np.int32)}
+    inst = MaterializedInstance(prog, edb)
+    st = inst.insert_facts("arc", np.array([[0, 1, 2]], np.int32))   # shortcut
+    want = Engine().run(
+        prog, {"id": edb["id"], "arc": np.array([[0, 1, 5], [0, 1, 2]], np.int32)}
+    )
+    assert _as_set(inst.relation("copy")) == _as_set(want["copy"])
+    copy_stratum = next(s.index for s in inst.strat.strata if "copy" in s.preds)
+    assert st.modes[copy_stratum] == "full"
+
+
+# --------------------------------------------------------------------------
+# stratified negation: the documented full-recompute fallback
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_negation_forces_full_recompute(seed):
+    rng = np.random.default_rng(40 + seed)
+    edges = random_edges(rng, 14, 30)
+    inst, stats = _check_incremental(
+        NEG_PROG, {"arc": edges}, "arc", 4, EngineConfig(backend="tuple")
+    )
+    strat = inst.strat
+    ntc_stratum = next(s.index for s in strat.strata if "ntc" in s.preds)
+    tc_stratum = next(s.index for s in strat.strata if "tc" in s.preds)
+    modes = stats[-1].modes
+    # tc itself grows monotonically (delta path); ntc negates a changed
+    # relation and must recompute in full — the documented fallback
+    assert modes.get(ntc_stratum) == "full"
+    assert modes.get(tc_stratum) == "delta"
+
+
+def test_insert_into_negated_edb_forces_full():
+    prog = """
+    lit(x) :- cand(x), !blocked(x).
+    """
+    cand = np.arange(10, dtype=np.int32)[:, None]
+    blocked = np.array([[2], [3]], np.int32)
+    inst = MaterializedInstance(prog, {"cand": cand, "blocked": blocked})
+    st = inst.insert_facts("blocked", np.array([[5]], np.int32))
+    assert list(st.modes.values()) == ["full"]
+    assert _as_set(inst.relation("lit")) == {(i,) for i in range(10) if i not in (2, 3, 5)}
+
+
+# --------------------------------------------------------------------------
+# edge cases: no-ops, duplicates, domain growth, repeated batches
+# --------------------------------------------------------------------------
+
+
+def test_duplicate_and_empty_inserts_are_noops():
+    rng = np.random.default_rng(3)
+    edges = random_edges(rng, 20, 50)
+    inst = MaterializedInstance(TC, {"arc": edges})
+    before = _as_set(inst.relation("tc"))
+    st = inst.insert_facts("arc", edges[:10])          # all duplicates
+    assert st.inserted == 0 and st.derived == 0 and not st.modes
+    st = inst.insert_facts("arc", np.zeros((0, 2), np.int32))
+    assert st.requested == 0
+    assert _as_set(inst.relation("tc")) == before
+
+
+def test_domain_growth_triggers_full_rebuild():
+    rng = np.random.default_rng(9)
+    n = 18
+    edges = random_edges(rng, n, 40)
+    inst = MaterializedInstance(TC, {"arc": edges})
+    new = np.array([[n + 3, 0], [1, n + 7]], np.int32)
+    st = inst.insert_facts("arc", new)
+    assert st.full_rebuild
+    want = tc_oracle(adj_of(np.concatenate([edges, new]), n + 8))
+    assert _as_set(inst.relation("tc")) == set(zip(*np.nonzero(want)))
+    # instance stays serviceable (and incremental) after the rebuild
+    st2 = inst.insert_facts("arc", np.array([[0, n + 3]], np.int32))
+    assert not st2.full_rebuild
+
+
+def test_many_small_batches_converge(rng):
+    n = 22
+    edges = random_edges(rng, n, 60)
+    inst = MaterializedInstance(TC, {"arc": edges[:20]})
+    for i in range(20, len(edges), 5):
+        inst.insert_facts("arc", edges[i : i + 5])
+    want = tc_oracle(adj_of(edges, n))
+    assert _as_set(inst.relation("tc")) == set(zip(*np.nonzero(want)))
+
+
+def test_insert_rejects_unknown_and_idb_relations():
+    inst = MaterializedInstance(TC, {"arc": np.array([[0, 1]], np.int32)})
+    with pytest.raises(KeyError):
+        inst.insert_facts("tc", np.array([[0, 1]], np.int32))
+    with pytest.raises(KeyError):
+        inst.insert_facts("nope", np.array([[0, 1]], np.int32))
+
+
+def test_insert_rejects_negative_ids():
+    """Negative ids would wrap through dense scatters (silent corruption)."""
+    inst = MaterializedInstance(TC, {"arc": np.array([[0, 1], [1, 2]], np.int32)})
+    with pytest.raises(ValueError, match="negative"):
+        inst.insert_facts("arc", np.array([[-1, 0]], np.int32))
+    assert _as_set(inst.relation("tc")) == {(0, 1), (0, 2), (1, 2)}
+
+
+# --------------------------------------------------------------------------
+# relation-level delta append
+# --------------------------------------------------------------------------
+
+
+def test_tuple_relation_insert_delta_append():
+    from repro.core.relation import TupleRelation
+    from repro.relational.sort import SENTINEL
+
+    r = TupleRelation.from_numpy("r", np.array([[0, 1], [2, 3]]), domain=10)
+    r2, delta, count = r.insert(np.array([[2, 3], [4, 5], [4, 5], [0, 9]]))
+    assert count == 2
+    assert _as_set(np.asarray(delta[:count])) == {(4, 5), (0, 9)}
+    assert r2.count == 4
+    assert _as_set(r2.to_numpy()) == {(0, 1), (2, 3), (4, 5), (0, 9)}
+    # original handle untouched (snapshots stay valid)
+    assert r.count == 2
+    r3, _, c3 = r2.insert(np.zeros((0, 2), np.int32))
+    assert c3 == 0 and r3 is r2
+
+
+# --------------------------------------------------------------------------
+# bitmatrix incremental frontier
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_bitmatrix_increments_match_fixpoint(seed):
+    from repro.core.bitmatrix import (
+        edges_to_bitmatrix,
+        popcount,
+        sg_fixpoint,
+        sg_increment,
+        tc_fixpoint,
+        tc_increment,
+    )
+
+    rng = np.random.default_rng(seed)
+    n = 36
+    e = random_edges(rng, n, 90)
+    base, extra = e[:-8], e[-8:]
+    arc0, arc1 = edges_to_bitmatrix(base, n), edges_to_bitmatrix(e, n)
+    d = arc1 & ~arc0
+    m0, _ = tc_fixpoint(arc0, n)
+    m_inc, _ = tc_increment(m0, arc1, d, n)
+    m_full, _ = tc_fixpoint(arc1, n)
+    assert int(popcount(m_inc ^ m_full)) == 0
+    sg0, _ = sg_fixpoint(arc0, n)
+    sg_inc, _ = sg_increment(sg0, arc1, d, n)
+    sg_full, _ = sg_fixpoint(arc1, n)
+    assert int(popcount(sg_inc ^ sg_full)) == 0
+    # empty delta: both increments are exact no-ops
+    zero = arc1 & ~arc1
+    assert int(popcount(tc_increment(m_full, arc1, zero, n)[0] ^ m_full)) == 0
+    assert int(popcount(sg_increment(sg_full, arc1, zero, n)[0] ^ sg_full)) == 0
+
+
+def test_bitmm_rows_matches_full():
+    from repro.core.bitmatrix import bitmm_ref, bitmm_rows, edges_to_bitmatrix, popcount
+
+    rng = np.random.default_rng(2)
+    n = 40
+    a = edges_to_bitmatrix(random_edges(rng, n, 60), n)
+    b = edges_to_bitmatrix(random_edges(rng, n, 80), n)
+    full = bitmm_ref(a, b, n)
+    rows = np.flatnonzero(np.asarray(a).any(axis=1))
+    compact = bitmm_rows(a, b, n, rows)
+    assert int(popcount(full ^ compact)) == 0
+
+
+# --------------------------------------------------------------------------
+# queries & plan cache
+# --------------------------------------------------------------------------
+
+
+def test_query_point_and_range(rng):
+    n = 20
+    edges = random_edges(rng, n, 50)
+    inst = MaterializedInstance(TC, {"arc": edges})
+    tc = _as_set(inst.relation("tc"))
+    src = int(edges[0, 0])
+    assert _as_set(inst.query("tc", src=src)) == {t for t in tc if t[0] == src}
+    assert _as_set(inst.query("tc", src=src, dst=(0, n // 2))) == {
+        t for t in tc if t[0] == src and 0 <= t[1] <= n // 2
+    }
+    assert _as_set(inst.query("tc", where={1: src})) == {t for t in tc if t[1] == src}
+    with pytest.raises(KeyError):
+        inst.query("tc", bogus=1)
+
+
+def test_query_dense_relations(rng):
+    edges = random_edges(rng, 18, 40)
+    ids = np.array([[0]], np.int32)
+    inst = MaterializedInstance(WORKLOADS["reach"].program, {"arc": edges, "id": ids})
+    reach = _as_set(inst.relation("reach"))
+    some = int(next(iter(reach))[0])
+    assert _as_set(inst.query("reach", key=some)) == {(some,)}
+
+
+def test_plan_cache_hits_and_warm():
+    cache = PlanCache()
+    p1 = cache.get(TC)
+    p2 = cache.get("tc(x,y) :- arc(x,y).\n   tc(x,y) :- tc(x,z), arc(z,y).")
+    assert p1 is p2                      # whitespace-insensitive fingerprint
+    from repro.core.parser import parse
+
+    assert cache.get(parse(TC)) is p1    # parsed form collides with text form
+    assert cache.stats()["hits"] == 2 and cache.stats()["misses"] == 1
+    traced = cache.warm(p1, domain=64)
+    assert traced > 0
+    assert cache.warm(p1, domain=64) == 0          # second warm is free
+    e = np.array([[0, 1], [1, 2]], np.int32)
+    i1 = MaterializedInstance(TC, {"arc": e}, cache=cache)
+    i2 = MaterializedInstance(TC, {"arc": e}, cache=cache)
+    assert cache.stats()["hits"] >= 3
+    assert i1.plan is i2.plan
+
+
+# --------------------------------------------------------------------------
+# the batched server
+# --------------------------------------------------------------------------
+
+
+def test_server_mixed_workload(rng):
+    n = 20
+    edges = random_edges(rng, n, 50)
+    base, extra = edges[:-10], edges[-10:]
+    inst = MaterializedInstance(TC, {"arc": base})
+    srv = DatalogServer(inst, max_batch=8)
+
+    q0 = srv.submit_query("tc", src=int(edges[0, 0]))
+    ins = [srv.submit_insert("arc", extra[i : i + 2]) for i in range(0, 10, 2)]
+    q1 = srv.submit_query("tc", src=int(edges[0, 0]))
+    done = srv.run()
+
+    # queries see the state as of their queue position
+    want_final = tc_oracle(adj_of(edges, n))
+    src = int(edges[0, 0])
+    assert _as_set(done[q1]) == {
+        (src, v) for v in np.nonzero(want_final[src])[0]
+    }
+    # consecutive same-relation inserts coalesced into ONE update batch
+    assert all(done[r] is done[ins[0]] for r in ins)
+    assert done[ins[0]].inserted == len(_as_set(extra) - _as_set(base))
+    recs = srv.stats.records
+    assert {r.kind for r in recs} == {"query", "insert"}
+    assert max(r.batch_size for r in recs if r.kind == "insert") == len(ins)
+    lat = srv.stats.latency()
+    assert lat["count"] == len(recs) and lat["p95_ms"] >= 0.0
+    assert srv.stats.latency("query")["count"] == 2
+
+
+def test_insert_facts_is_atomic_on_failure(rng, monkeypatch):
+    """A failure mid-update must roll the EDB merge back — otherwise retries
+    see delta_count == 0 and silently skip restoring the fixpoint."""
+    edges = random_edges(rng, 16, 36)
+    inst = MaterializedInstance(
+        TC, {"arc": edges[:-4]}, EngineConfig(backend="tuple")
+    )
+    before_tc = _as_set(inst.relation("tc"))
+    before_arc = _as_set(inst.relation("arc"))
+
+    def boom(*a, **k):
+        raise RuntimeError("simulated mid-update failure")
+
+    monkeypatch.setattr(inst, "_delta_stratum", boom)
+    with pytest.raises(RuntimeError, match="simulated"):
+        inst.insert_facts("arc", edges[-4:])
+    assert _as_set(inst.relation("arc")) == before_arc     # rolled back
+    assert _as_set(inst.relation("tc")) == before_tc
+    monkeypatch.undo()
+    st = inst.insert_facts("arc", edges[-4:])              # retry lands fully
+    assert st.inserted == 4
+    want = tc_oracle(adj_of(edges, 16))
+    assert _as_set(inst.relation("tc")) == set(zip(*np.nonzero(want)))
+
+
+def test_server_isolates_failing_requests(rng):
+    """One bad request must not lose its admission batch or stall the queue."""
+    from repro.serve_datalog import RequestError
+
+    edges = random_edges(rng, 14, 30)
+    inst = MaterializedInstance(TC, {"arc": edges[:-4]})
+    srv = DatalogServer(inst)
+    good1 = srv.submit_insert("arc", edges[-4:-2])
+    bad = srv.submit_insert("arc", np.array([[-1, 0]], np.int32))
+    good2 = srv.submit_insert("arc", edges[-2:])
+    q = srv.submit_query("tc")
+    done = srv.run()
+    assert isinstance(done[bad], RequestError) and "negative" in done[bad].error
+    assert done[good1].inserted + done[good2].inserted == 4   # neighbors landed
+    assert _as_set(done[q]) == set(
+        zip(*np.nonzero(tc_oracle(adj_of(edges, 14))))
+    )
+    bad_q = srv.submit_query("tc", src=-5)      # absent key: empty, not error
+    assert len(srv.run()[bad_q]) == 0
+
+
+def test_server_history_is_bounded(rng):
+    edges = random_edges(rng, 14, 30)
+    inst = MaterializedInstance(TC, {"arc": edges})
+    srv = DatalogServer(inst, history=8)
+    rids = [srv.submit_query("tc", src=int(edges[i % len(edges), 0])) for i in range(20)]
+    done = srv.run()
+    assert len(srv.done) == 8                      # oldest results evicted
+    assert rids[-1] in srv.done and rids[0] not in srv.done
+    assert len(done) == 8
+
+
+def test_server_preserves_order_across_kinds(rng):
+    n = 16
+    edges = random_edges(rng, n, 36)
+    inst = MaterializedInstance(TC, {"arc": edges[:-4]})
+    srv = DatalogServer(inst)
+    pre = srv.submit_query("tc")
+    srv.submit_insert("arc", edges[-4:])
+    post = srv.submit_query("tc")
+    done = srv.run()
+    assert len(done[pre]) <= len(done[post])
+    assert _as_set(done[post]) == set(
+        zip(*np.nonzero(tc_oracle(adj_of(edges, n))))
+    )
