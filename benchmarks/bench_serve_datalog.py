@@ -9,6 +9,11 @@ EDB.  Rows:
     serve_<wl>_full_recompute — seconds of the from-scratch fixpoint
     serve_<wl>_update_batch   — seconds of the incremental batch
                                 (derived: speedup + result equality)
+    serve_<wl>_delete_full_recompute / serve_<wl>_delete_batch
+                              — same pair for a 1% DELETE batch: DRed
+                                retraction vs. re-materializing the shrunken
+                                EDB from scratch (derived: speedup + exact
+                                result equality)
     serve_query_p50/p95       — batched-server point-query latency
 """
 
@@ -63,6 +68,46 @@ def _bench_update(name, prog, edb_full, rel, config, warm_k=None):
     return inst
 
 
+def _bench_delete(name, prog, edb_full, rel, config):
+    """Emit re-materialization vs. DRed-retraction rows for a 1% delete batch.
+
+    Mirrors ``_bench_update``: the from-scratch row evaluates the shrunken
+    EDB with a fresh engine (what serving without retraction support would
+    have to do on every delete); the incremental row retracts the same batch
+    from a warm ``MaterializedInstance`` (warm-up delete/re-insert round
+    trips take jit tracing off the steady-state path — the round trip is
+    exact, so the timed batch starts from the original fixpoint).
+    """
+    edb_full = {k: np.asarray(v, np.int32) for k, v in edb_full.items()}
+    k = max(len(edb_full[rel]) // 100, 1)          # the 1% delete batch
+    held = edb_full[rel][-k:]
+    shrunk = dict(edb_full)
+    shrunk[rel] = edb_full[rel][:-k]
+    with timer() as t_full:
+        oracle = Engine(EngineConfig(**vars(config))).run(prog, shrunk)
+    emit(f"serve_{name}_delete_full_recompute", t_full.seconds)
+
+    inst = MaterializedInstance(prog, edb_full, EngineConfig(**vars(config)))
+    for b in range(3):                             # steady state: traces warm
+        wb = edb_full[rel][b * k : (b + 1) * k]
+        inst.retract_facts(rel, wb)
+        inst.insert_facts(rel, wb)
+    with timer() as t_inc:
+        stats = inst.retract_facts(rel, held)
+    match = all(
+        set(map(tuple, inst.relation(r))) == set(map(tuple, v))
+        for r, v in oracle.items()
+    )
+    speedup = t_full.seconds / max(t_inc.seconds, 1e-9)
+    emit(
+        f"serve_{name}_delete_batch",
+        t_inc.seconds,
+        f"speedup={speedup:.1f}x match={match} "
+        f"modes={sorted(set(stats.modes.values()))} retracted={stats.retracted}",
+    )
+    return inst
+
+
 def run() -> None:
     # TC on the paper's Gn-p benchmark graph — PBME-resident incremental
     arc = gnp_graph(1024, p=0.003, seed=0)
@@ -84,6 +129,15 @@ def run() -> None:
     # per-iteration overhead hurts a from-scratch run most
     _bench_update(
         "csda", WORKLOADS["csda"].program, csda_facts(3000, seed=0), "arc",
+        EngineConfig(backend="tuple"),
+    )
+
+    # DRed retraction: a 1% TC delete batch vs. re-materializing from
+    # scratch (the tuple backend is the DRed path; PBME strata recompute —
+    # decremental closure is gated off in eligible_plan)
+    _bench_delete(
+        "tc", WORKLOADS["tc"].program,
+        {"arc": gnp_graph(256, p=0.008, seed=1)}, "arc",
         EngineConfig(backend="tuple"),
     )
 

@@ -392,13 +392,23 @@ def _is_var(t, name=None):
     return isinstance(t, Var) and (name is None or t.name == name)
 
 
-def eligible_plan(stratum: Stratum, domain: int, config) -> BitmatrixPlan | None:
+def eligible_plan(
+    stratum: Stratum, domain: int, config, *, deleting: bool = False
+) -> BitmatrixPlan | None:
     """The full PBME gate: shape match + backend/memory policy.
 
     Single source of truth shared by the engine's fast path and the serving
     layer's bit-matrix residency — they must agree on which strata are
     bitmatrix-evaluated or incremental updates would diverge from full runs.
+
+    ``deleting=True`` asks for a plan that can apply *edge deletions*
+    incrementally.  Decremental closure (maintaining TC/SG under arc removal
+    without recomputing — e.g. Even–Shiloach-style bookkeeping) is out of
+    scope, so no plan qualifies and the serving layer recomputes the stratum
+    from scratch; growing support starts by returning a plan here.
     """
+    if deleting:
+        return None
     if config.backend not in ("auto", "bitmatrix") or stratum.has_recursive_agg:
         return None
     plan = match_bitmatrix_stratum(stratum, domain, config)

@@ -48,7 +48,14 @@ from repro.core.relation import (
     _sort_pad,
     next_bucket,
 )
-from repro.core.seminaive import RuleVariant, delta_variants
+from repro.core.seminaive import (
+    NABLA,
+    RuleVariant,
+    delta_variants,
+    deletion_variants,
+    ingest_variants,
+    rederive_rule,
+)
 from repro.core.setdiff import DSDState, set_difference
 from repro.relational.sort import SENTINEL
 
@@ -463,6 +470,153 @@ class Engine:
         deltas[pred] = TupleView(delta_rows[:dcap], delta_count, self.domain)
         return rec
 
+    # -- DRed retraction: the over-delete / re-derive driver -------------------
+
+    def dred_stratum(
+        self,
+        strat: Stratification,
+        stratum: Stratum,
+        store: dict[str, Any],
+        store_old: dict[str, Any],
+        deleted: dict[str, "TupleView"],
+        changed: dict[str, "TupleView"],
+        handles: dict[str, str],
+        loop_groups: dict[str, list[RuleVariant]] | None = None,
+    ) -> tuple[int, dict[str, "TupleView"], dict[str, "TupleView"]]:
+        """Delete-and-rederive for one tuple-backed stratum (DRed).
+
+        ``deleted`` maps externally-shrunk relations (EDB or upstream IDBs) to
+        their ∇ views; ``changed`` maps externally-grown ones to Δ views;
+        ``store_old`` is the pre-update state of every relation (immutable
+        handles — a shallow snapshot).  Three passes:
+
+        1. **Over-delete** — propagate ∇ through the stratum's rules with the
+           non-∇ atoms read from ``store_old`` (a derivation is counted in the
+           state it was made in), removing derived heads from the live store;
+           the removed tuples are the next round's frontier, until empty.
+        2. **Re-derive + ingest** — for every over-deleted tuple, a
+           ∇-guarded variant of each rule re-checks derivability against the
+           post-deletion state; together with ingest variants for upstream
+           insertions these seed ΔR, and the resumable semi-naïve loop runs
+           from iteration 1 to the new fixpoint.
+        3. **Net diff** — old vs. new per predicate, returned as
+           ``(iterations, net_deleted, net_added)`` views for downstream
+           strata.  The result is bit-for-bit the from-scratch fixpoint:
+           over-deletion removes a superset of the unsupported tuples and
+           re-derivation restores exactly the derivable ones.
+        """
+        cfg = self.config
+        self._kinds = handles
+
+        # -- pass 1: over-delete to a fixpoint of the deletion frontier ----
+        nabla: dict[str, TupleRelation] = {}
+        frontier: dict[str, TupleView] = dict(deleted)
+        rounds = 0
+        while frontier:
+            rounds += 1
+            groups_del = deletion_variants(stratum, set(frontier))
+            next_frontier: dict[str, TupleView] = {}
+            for pred in stratum.preds:
+                bufs = []
+                for var in groups_del[pred]:
+                    res = self._eval_variant(strat, stratum, store_old, frontier, var)
+                    if res is not None:
+                        bufs.append(res)
+                if not bufs:
+                    continue
+                cand = jnp.concatenate([b[0] for b in bufs], axis=0)
+                cand = _sort_pad(
+                    cand, next_bucket(cand.shape[0], cfg.capacity_min), self.domain
+                )
+                cand, _ = _dedup_sorted(cand, self.domain)
+                new_h, removed, r_count = store[pred].delete_rows(cand)
+                if r_count == 0:
+                    continue
+                store[pred] = new_h
+                dcap = next_bucket(r_count, cfg.capacity_min)
+                next_frontier[pred] = TupleView(removed[:dcap], r_count, self.domain)
+                acc = nabla.get(pred) or TupleRelation.empty(
+                    pred, strat.pred_arity(pred), self.domain, cfg.capacity_min
+                )
+                nabla[pred] = acc.merge(removed, r_count)
+            frontier = next_frontier
+
+        # -- pass 2: ∇-guarded re-derivation + upstream-Δ ingest, then loop --
+        deltas: dict[str, TupleView | None] = {p: None for p in stratum.preds}
+        deltas.update(changed)
+        dsd_state = {p: DSDState(alpha=cfg.alpha) for p in stratum.preds}
+        seed_groups = (
+            ingest_variants(stratum, set(changed))
+            if changed
+            else {p: [] for p in stratum.preds}
+        )
+        for pred, acc in nabla.items():
+            deltas[NABLA + pred] = TupleView(acc.rows, acc.count, self.domain)
+            for rule in stratum.rules_for(pred):
+                seed_groups[pred].append(RuleVariant(rederive_rule(rule), 0))
+        for pred in stratum.preds:
+            if not seed_groups[pred]:
+                continue
+            rec = self._eval_idb_iteration(
+                strat, stratum, store, handles, deltas, dsd_state,
+                pred, seed_groups[pred], 0,
+            )
+            self.stats.records.append(rec)
+        if stratum.recursive:
+            self._seminaive_loop(
+                strat, stratum, store, handles, deltas, dsd_state,
+                loop_groups or delta_variants(stratum), start_iteration=1,
+            )
+
+        # -- pass 3: net old-vs-new diff for downstream strata -------------
+        net_deleted: dict[str, TupleView] = {}
+        net_added: dict[str, TupleView] = {}
+        for pred in stratum.preds:
+            old_h, new_h = store_old[pred], store[pred]
+            if new_h is old_h:
+                continue     # zero-delta merges return the same handle
+            acc = nabla.get(pred)
+            if not changed and acc is not None:
+                # Pure retraction: positive programs are monotone, so the new
+                # fixpoint ⊆ the old one — nothing was net-added, and the net
+                # deletions are exactly the ∇ tuples that re-derivation did
+                # NOT restore.  Probe |∇| rows instead of the whole relation:
+                # steady-state delete latency stays delta-sized.
+                rows, count, _ = set_difference(
+                    acc.rows, acc.count, new_h.rows, new_h.count,
+                    self.domain, DSDState(),
+                )
+                if count:
+                    net_deleted[pred] = TupleView(
+                        rows[: next_bucket(count, cfg.capacity_min)],
+                        count,
+                        self.domain,
+                    )
+                continue
+            # Mixed upstream diff (deletions + insertions): the stratum can
+            # both shrink and grow — fall back to full both-way diffs.
+            for src, dst, out in (
+                (old_h, new_h, net_deleted),
+                (new_h, old_h, net_added),
+            ):
+                if src.count == 0:
+                    continue
+                rows, count, _ = set_difference(
+                    src.rows, src.count, dst.rows, dst.count,
+                    self.domain, DSDState(),
+                )
+                if count:
+                    out[pred] = TupleView(
+                        rows[: next_bucket(count, cfg.capacity_min)],
+                        count,
+                        self.domain,
+                    )
+        iters = rounds + (
+            self.stats.iterations.get(stratum.index, 0) if stratum.recursive else 0
+        )
+        self.stats.iterations[stratum.index] = iters
+        return iters, net_deleted, net_added
+
     # -- body evaluation ------------------------------------------------------
 
     def _view_for(
@@ -475,17 +629,18 @@ class Engine:
         use_delta: bool,
     ) -> TupleView:
         cfg = self.config
-        handle = store.get(atom.pred)
-        if handle is None:
-            return _empty_view(atom.arity, self.domain)
         if use_delta:
-            # An explicit Δ view wins for every handle kind: the incremental
-            # path (serve_datalog) seeds deltas for EDB and upstream-stratum
-            # preds here, which the normal loop never does (its dense preds
-            # keep ``deltas[pred] = None`` and fall through below).
+            # An explicit Δ view wins for every handle kind — checked before
+            # the store so pure delta views (the serve_datalog ingest seeds,
+            # DRed's ``__nabla__`` ∇ views) resolve even for predicates the
+            # store has never held.  The normal loop never hits this (its
+            # dense preds keep ``deltas[pred] = None`` and fall through).
             view = deltas.get(atom.pred)
             if view is not None:
                 return view
+        handle = store.get(atom.pred)
+        if handle is None:
+            return _empty_view(atom.arity, self.domain)
         if isinstance(handle, TupleRelation):
             if use_delta:
                 return _empty_view(atom.arity, self.domain)

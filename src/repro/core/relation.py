@@ -33,6 +33,19 @@ def next_bucket(n: int, minimum: int = 128) -> int:
     return max(minimum, 1 << int(np.ceil(np.log2(max(n, 1)))))
 
 
+def empty_delta(arity: int, minimum: int = 128) -> jax.Array:
+    """The normalized empty Δ/∇ view: a minimum-bucket SENTINEL table.
+
+    Every non-empty delta produced by ``insert``/``delete`` is a sorted,
+    SENTINEL-padded table at a power-of-two capacity bucket; the empty delta
+    uses the same shape family (the minimum bucket — ``minimum`` defaults to
+    ``next_bucket``'s floor, which every relation-level bucket here shares)
+    so downstream code can slice/merge it without special-casing
+    ``count == 0``.
+    """
+    return jnp.full((next_bucket(0, minimum), arity), SENTINEL, jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnames=("capacity", "domain"))
 def _sort_pad(rows: jax.Array, capacity: int, domain: int) -> jax.Array:
     pad = jnp.full((capacity - rows.shape[0], rows.shape[1]), SENTINEL, jnp.int32)
@@ -49,6 +62,29 @@ def _dedup_sorted(rows: jax.Array, domain: int) -> tuple[jax.Array, jax.Array]:
     kept = jnp.where(mask[:, None], rows, SENTINEL)
     order = jnp.argsort(~mask, stable=True)
     return kept[order], mask.sum()
+
+
+@functools.partial(jax.jit, static_argnames=("domain",))
+def _delete_sorted(
+    table: jax.Array, cand: jax.Array, domain: int
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Remove candidate rows from a sorted table.
+
+    ``cand`` is sorted + SENTINEL-padded.  Returns
+    ``(removed, removed_count, kept, kept_count)`` — ``removed`` is the
+    compacted intersection (the ∇R view, sorted), ``kept`` the table with
+    those rows punched out and re-compacted at the original capacity.
+    """
+    from repro.core.joins import membership
+
+    present = membership(cand, table, domain)
+    removed = jnp.where(present[:, None], cand, SENTINEL)
+    removed = removed[jnp.argsort(~present, stable=True)]   # compact, sorted
+    gone = membership(table, removed, domain)
+    keep = ~gone & (table[:, 0] != SENTINEL)
+    kept = jnp.where(keep[:, None], table, SENTINEL)
+    kept = kept[jnp.argsort(~keep, stable=True)]
+    return removed, present.sum(), kept, keep.sum()
 
 
 @functools.partial(jax.jit, static_argnames=("col",))
@@ -121,7 +157,7 @@ class TupleRelation:
 
         data = np.asarray(data, np.int32).reshape(-1, self.arity)
         if data.size == 0:
-            return self, jnp.full((1, self.arity), SENTINEL, jnp.int32), 0
+            return self, empty_delta(self.arity), 0
         data = np.unique(data, axis=0)
         cap = next_bucket(len(data))
         cand = _sort_pad(jnp.asarray(data), cap, self.domain)
@@ -130,6 +166,39 @@ class TupleRelation:
             DSDState(), mode="opsd",
         )
         return self.merge(delta_rows, delta_count), delta_rows, delta_count
+
+    def delete(self, data: np.ndarray) -> tuple["TupleRelation", jax.Array, int]:
+        """Remove a batch of rows (rows not present are ignored).
+
+        Returns ``(updated_relation, removed_rows, removed_count)`` where
+        ``removed_rows`` holds exactly the tuples that were present and are
+        now gone (sorted, SENTINEL padded) — the ∇R seed for DRed.  The
+        handle is immutable: the original relation is untouched, capacity is
+        preserved (no shrink — buckets bound recompilation, not memory).
+        """
+        data = np.asarray(data, np.int32).reshape(-1, self.arity)
+        # constants outside [0, domain) cannot be present (the table invariant
+        # behind compact keys) — drop them, or the base-``domain`` key packing
+        # would alias e.g. (a, domain) onto (a+1, 0) and delete a tuple the
+        # caller never named
+        if data.size:
+            data = data[((data >= 0) & (data < self.domain)).all(axis=1)]
+        if data.size == 0 or self.count == 0:
+            return self, empty_delta(self.arity), 0
+        data = np.unique(data, axis=0)
+        cap = next_bucket(len(data))
+        return self.delete_rows(_sort_pad(jnp.asarray(data), cap, self.domain))
+
+    def delete_rows(self, cand: jax.Array) -> tuple["TupleRelation", jax.Array, int]:
+        """Device-side delete: ``cand`` already sorted + SENTINEL padded."""
+        removed, r_count, kept, k_count = _delete_sorted(
+            self.rows, cand, self.domain
+        )
+        r_count = int(r_count)
+        if r_count == 0:
+            return self, empty_delta(self.arity), 0
+        new = TupleRelation(self.name, self.arity, kept, int(k_count), self.domain)
+        return new, removed, r_count
 
     def to_numpy(self) -> np.ndarray:
         return np.asarray(self.rows[: self.count])
@@ -196,6 +265,29 @@ class DenseSetRelation:
             int(delta.sum()),
         )
 
+    def delete(
+        self, candidate_keys: jax.Array, valid: jax.Array
+    ) -> "DenseSetRelation":
+        """Remove candidates; ``delta`` holds the keys actually removed (∇R).
+
+        The bit-vector has no derivation counts, so a dense-set deletion is
+        only sound as part of a full recompute or a DRed over-deletion pass —
+        the serving layer taints the stratum non-monotone and recomputes.
+        """
+        ok = valid & (candidate_keys >= 0) & (candidate_keys < self.n)
+        keys = jnp.where(ok, candidate_keys, 0)
+        hit = jnp.zeros((self.n,), bool).at[keys].max(ok)
+        removed = hit & self.member
+        member = self.member & ~removed
+        return DenseSetRelation(
+            self.name,
+            self.n,
+            member,
+            removed,
+            int(member.sum()),
+            int(removed.sum()),
+        )
+
     def delta_tuples(self, capacity: int) -> tuple[jax.Array, int]:
         """Materialize Δ as a (capacity, 1) tuple view for the join machinery."""
         keys = jnp.where(self.delta, jnp.arange(self.n), SENTINEL)
@@ -258,6 +350,35 @@ class DenseAggRelation:
             improved,
             int((values != self.absent).sum()),
             int(improved.sum()),
+        )
+
+    def delete(
+        self, candidate_keys: jax.Array, candidate_vals: jax.Array, valid: jax.Array
+    ) -> "DenseAggRelation":
+        """Remove ``(key, value)`` pairs whose value matches the stored best.
+
+        Dropping a MIN/MAX winner is non-monotone: the displaced runner-up is
+        not recoverable from the dense table (only the best value per key is
+        kept), so the serving layer treats any dense-agg deletion as tainting
+        the stratum — this method clears the keys and reports them in
+        ``delta`` (∇R) so the caller can recompute and re-derive.
+        """
+        # out-of-range keys cannot name a stored pair — mask them out rather
+        # than clip (clipping would let key n-1+k with a matching value
+        # silently clear key n-1)
+        ok = valid & (candidate_keys >= 0) & (candidate_keys < self.n)
+        keys = jnp.where(ok, candidate_keys, 0)
+        match = ok & (self.values[keys] == candidate_vals)
+        removed = jnp.zeros((self.n,), bool).at[keys].max(match)
+        values = jnp.where(removed, self.absent, self.values)
+        return DenseAggRelation(
+            self.name,
+            self.n,
+            self.op,
+            values,
+            removed,
+            int((values != self.absent).sum()),
+            int(removed.sum()),
         )
 
     def delta_tuples(self, capacity: int) -> tuple[jax.Array, int]:

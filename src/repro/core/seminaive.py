@@ -12,7 +12,12 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.core.analyzer import Stratum
-from repro.core.ast import Rule
+from repro.core.ast import Atom, Rule
+
+#: Prefix naming the ∇R (deleted-tuples) delta view of a relation.  Never a
+#: real predicate: rederive rules read it through the engine's explicit-Δ
+#: precedence in ``_view_for`` without the store ever holding such a relation.
+NABLA = "__nabla__"
 
 
 @dataclass(frozen=True)
@@ -61,3 +66,40 @@ def ingest_variants(stratum: Stratum, changed: set[str]) -> dict[str, list[RuleV
             if not atom.negated and atom.pred in changed:
                 groups[rule.head_pred].append(RuleVariant(rule, i))
     return groups
+
+
+def deletion_variants(
+    stratum: Stratum, deleted: set[str]
+) -> dict[str, list[RuleVariant]]:
+    """Delta rewriting for the DRed *over-deletion* pass.
+
+    ``deleted`` names relations (external ∇ seeds or stratum preds whose
+    tuples were over-deleted last round) that just *lost* facts.  For every
+    positive occurrence of a deleted relation, emit a variant reading that
+    atom from the ∇ view and every other atom from the full **pre-deletion**
+    relation: a derivation dies only if it used at least one deleted fact, and
+    every such derivation is covered by the variant whose ∇ atom is one of the
+    deleted facts it used.  The derived heads form the next over-deletion
+    frontier (an over-approximation — surviving alternate derivations are
+    restored by the re-derivation pass).
+
+    The variant *enumeration* is the same one-variant-per-occurrence rewrite
+    as :func:`ingest_variants` — only the Δ-view contents (∇ = deleted
+    tuples) and the evaluation state (pre-deletion ``store_old``) differ,
+    and both of those are the caller's choice.
+    """
+    return ingest_variants(stratum, deleted)
+
+
+def rederive_rule(rule: Rule) -> Rule:
+    """The DRed *re-derivation* variant of ``rule``.
+
+    Prepends a guard atom ``__nabla__head(head_terms)`` to the body: joined
+    first (the engine reads it from the ∇ delta view), it restricts the whole
+    evaluation to over-deleted head tuples, so re-derivation costs scale with
+    ``|∇R| × join fan-out`` instead of a full naive re-evaluation of the rule.
+    A tuple survives iff some rule body still derives it from the
+    post-deletion state — exactly what the guarded join produces.
+    """
+    guard = Atom(NABLA + rule.head_pred, rule.head_terms)
+    return Rule(rule.head_pred, rule.head_terms, (guard,) + rule.body)

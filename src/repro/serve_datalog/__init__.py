@@ -17,23 +17,31 @@ arrived EDB facts is treated as an externally-seeded Δ, and the fixpoint is
    resumable ``_seminaive_loop`` from iteration 1.  PBME strata stay resident
    as packed bit matrices and use the incremental frontier
    (``tc_increment``/``sg_increment``) with row-block compaction.
-2. The *scope* is insert-only (growth) maintenance: stratified negation or
-   tuple-path aggregates over a changed relation are non-monotone under
-   insertion, so those strata fall back to full recomputation — and if the
-   recompute retracts facts, the taint propagates to downstream strata.  A
-   FlowLog-style full IVM would instead track support counts and propagate
-   retractions rule-by-rule (DRed/counting); delta-seeding trades that
-   bookkeeping for a coarser but allocation-free fallback, which fits the
-   append-mostly serving workload this layer targets.  Updates that introduce
-   new constants rebuild the instance (dense state is domain-sized).
+2. Deletion is first-class via DRed (delete-and-rederive, the FlowLog
+   direction): ``retract_facts`` turns removed EDB tuples into ∇R and runs
+   the engine's over-delete/re-derive driver per tuple-backed stratum —
+   deletion rule variants propagate ∇ against the pre-update state, then
+   ∇-guarded re-derivation variants restore tuples with surviving alternate
+   derivations and the semi-naïve loop resumes.  Strata DRed cannot handle
+   (stratified negation over a touched relation, aggregates — a displaced
+   MIN/MAX winner has no recoverable runner-up —, dense handles, and
+   PBME-resident strata, where decremental closure is gated off in
+   ``eligible_plan``) recompute from scratch, and every stratum hands its
+   net old-vs-new diff downstream as explicit Δ/∇ views.  Updates that
+   introduce new constants rebuild the instance (dense state is
+   domain-sized).  Both update directions are transactional: failures
+   restore the exact pre-update handles.
 3. :class:`~repro.serve_datalog.plan_cache.PlanCache` memoizes parsed
    programs/stratifications by fingerprint and pre-traces the hot jitted
    kernels per (fingerprint, capacity bucket) so steady-state traffic never
    re-traces (Adaptive Recursive Query Optimization, arXiv 2312.04282).
 4. :class:`~repro.serve_datalog.server.DatalogServer` fronts an instance with
    a request queue and admission batching (modeled on ``train/serve.py``):
-   same-relation insert runs coalesce into one delta batch; queries hit warm
-   selection executables.  Per-request queue/service latencies are recorded.
+   same-relation insert runs and delete runs each coalesce into one update
+   batch; queries hit warm selection executables.  Payload shape/arity is
+   validated at submission, failed coalesced batches fall back per-request
+   behind a rollback-boundary check, and per-request queue/service latencies
+   are recorded with nearest-rank percentiles.
 """
 
 from repro.serve_datalog.instance import MaterializedInstance, UpdateStats

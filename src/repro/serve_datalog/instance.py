@@ -22,10 +22,20 @@ applies (recorded in :class:`UpdateStats.modes`):
   re-evaluated from scratch (and if the recompute retracted facts, the
   non-monotone taint propagates downstream).
 
+``retract_facts(rel, rows)`` is the deletion mirror (DRed, delete-and-
+rederive): the removed EDB tuples become ∇R and propagate stratum-by-stratum
+— tuple-backed strata run the engine's over-delete/re-derive driver
+(``Engine.dred_stratum``), while aggregate, negation, dense, and
+PBME-resident strata (``eligible_plan`` refuses decremental plans) recompute
+from scratch — and every stratum hands its net old-vs-new diff downstream as
+explicit Δ/∇ views.  Per-stratum modes are recorded as ``dred`` alongside
+the three insert modes.
+
 Updates that introduce constants outside the materialized active domain
 rebuild the whole instance (dense arrays and bit matrices are sized by the
 domain); the common serving case — new facts over known entities — stays
-incremental.
+incremental.  Both update directions are transactional: any failure restores
+every pre-update handle (observable by object identity).
 """
 
 from __future__ import annotations
@@ -54,12 +64,15 @@ from repro.serve_datalog.plan_cache import CompiledPlan, PlanCache, default_cach
 
 @dataclass
 class UpdateStats:
-    """What one ``insert_facts`` batch did, per stratum."""
+    """What one ``insert_facts`` / ``retract_facts`` batch did, per stratum."""
 
     relation: str
     requested: int                       # rows in the batch
+    kind: str = "insert"                 # "insert" | "delete"
     inserted: int = 0                    # genuinely-new EDB tuples
+    removed: int = 0                     # EDB tuples actually deleted
     derived: int = 0                     # new IDB tuples across all strata
+    retracted: int = 0                   # IDB tuples retracted across all strata
     seconds: float = 0.0
     full_rebuild: bool = False
     modes: dict[int, str] = field(default_factory=dict)      # stratum → mode
@@ -98,10 +111,12 @@ class MaterializedInstance:
 
     # -- bitmatrix residency -------------------------------------------------
 
-    def _bm_eligible(self, stratum: Stratum):
+    def _bm_eligible(self, stratum: Stratum, deleting: bool = False):
         from repro.core.bitmatrix import eligible_plan
 
-        return eligible_plan(stratum, self.domain, self.engine.config)
+        return eligible_plan(
+            stratum, self.domain, self.engine.config, deleting=deleting
+        )
 
     def _init_bitmatrix_state(self) -> None:
         """Keep PBME strata resident as packed matrices between updates."""
@@ -173,9 +188,8 @@ class MaterializedInstance:
 
     _MAX_LOG = 1024          # bounded: serving runs forever
 
-    def insert_facts(self, rel: str, rows: np.ndarray) -> UpdateStats:
-        """Apply a batch of new EDB facts and restore the fixpoint."""
-        t0 = time.perf_counter()
+    def _begin_update(self, rel: str, rows: np.ndarray, kind: str):
+        """Shared admission checks for insert/retract batches."""
         # per-update engine diagnostics only — unbounded growth otherwise
         self.engine.stats.records = self.engine.stats.records[-self._MAX_LOG:]
         del self.update_log[: -self._MAX_LOG]
@@ -183,26 +197,35 @@ class MaterializedInstance:
             raise KeyError(f"{rel!r} is not an EDB relation of this program")
         arity = self.plan.program.arity_of(rel)
         rows = np.asarray(rows, np.int32).reshape(-1, arity)
-        stats = UpdateStats(relation=rel, requested=len(rows))
-        if len(rows) == 0:
-            stats.seconds = time.perf_counter() - t0
-            self.update_log.append(stats)
-            return stats
-        if int(rows.min()) < 0:
+        stats = UpdateStats(relation=rel, requested=len(rows), kind=kind)
+        if len(rows) and int(rows.min()) < 0:
             # negative ids would wrap through dense scatters → silent corruption
             raise ValueError(
-                f"negative constants in {rel!r} insert batch (ids must be ≥ 0)"
+                f"negative constants in {rel!r} {kind} batch (ids must be ≥ 0)"
             )
+        return rows, stats
 
-        # Transactional: handles are immutable, so shallow snapshots suffice.
-        # A failure mid-update (max_iters, OOM) must not leave the EDB merged
-        # with the fixpoint unrestored — that would silently corrupt every
-        # later read AND make retries no-ops (delta already "inserted").
+    def _finish_update(self, stats: UpdateStats, t0: float) -> UpdateStats:
+        stats.seconds = time.perf_counter() - t0
+        self.update_log.append(stats)
+        return stats
+
+    def _transactional(self, apply_fn):
+        """Run one update atomically: all state restored on any failure.
+
+        Handles are immutable, so shallow snapshots suffice.  A failure
+        mid-update (max_iters, OOM) must not leave the EDB merged with the
+        fixpoint unrestored — that would silently corrupt every later read
+        AND make retries no-ops (delta already applied).  The rollback
+        boundary is observable from outside: on failure every ``store``
+        entry is the exact pre-update handle object (the server's coalesced
+        fallback relies on this identity check before re-applying).
+        """
         store_backup = dict(self.store)
         bm_backup = {k: dict(v) for k, v in self._bm.items()}
         domain_backup = self.domain
         try:
-            return self._apply_insert(rel, rows, stats, t0)
+            return apply_fn()
         except Exception:
             self.store = store_backup
             self.engine.store = store_backup
@@ -211,22 +234,26 @@ class MaterializedInstance:
             self.engine.domain = domain_backup
             raise
 
+    def insert_facts(self, rel: str, rows: np.ndarray) -> UpdateStats:
+        """Apply a batch of new EDB facts and restore the fixpoint."""
+        t0 = time.perf_counter()
+        rows, stats = self._begin_update(rel, rows, "insert")
+        if len(rows) == 0:
+            return self._finish_update(stats, t0)
+        return self._transactional(lambda: self._apply_insert(rel, rows, stats, t0))
+
     def _apply_insert(
         self, rel: str, rows: np.ndarray, stats: UpdateStats, t0: float
     ) -> UpdateStats:
         if int(rows.max()) >= self.domain:
             self._full_rebuild(rel, rows, stats)
-            stats.seconds = time.perf_counter() - t0
-            self.update_log.append(stats)
-            return stats
+            return self._finish_update(stats, t0)
 
         handle: TupleRelation = self.store[rel]
         new_handle, delta_rows, delta_count = handle.insert(rows)
         stats.inserted = delta_count
         if delta_count == 0:
-            stats.seconds = time.perf_counter() - t0
-            self.update_log.append(stats)
-            return stats
+            return self._finish_update(stats, t0)
         self.store[rel] = new_handle
         dcap = next_bucket(max(delta_count, 1), self.engine.config.capacity_min)
         changed: dict[str, TupleView] = {
@@ -252,9 +279,74 @@ class MaterializedInstance:
             stats.iterations[stratum.index] = iters
             stats.derived += derived
 
-        stats.seconds = time.perf_counter() - t0
-        self.update_log.append(stats)
-        return stats
+        return self._finish_update(stats, t0)
+
+    def retract_facts(self, rel: str, rows: np.ndarray) -> UpdateStats:
+        """Apply a batch of EDB deletions and restore the fixpoint (DRed).
+
+        Delete-and-rederive: the removed tuples become ∇R and propagate
+        stratum-by-stratum — tuple-backed strata run the engine's
+        over-delete/re-derive driver, PBME-resident and aggregate/negation
+        strata recompute from scratch, and each stratum hands its net
+        old-vs-new diff downstream.  Results are bit-for-bit identical to a
+        from-scratch evaluation of the shrunken EDB.  Rows not present are
+        ignored; the operation is transactional like ``insert_facts``.
+        """
+        t0 = time.perf_counter()
+        rows, stats = self._begin_update(rel, rows, "delete")
+        if len(rows) == 0:
+            return self._finish_update(stats, t0)
+        return self._transactional(lambda: self._apply_retract(rel, rows, stats, t0))
+
+    def _apply_retract(
+        self, rel: str, rows: np.ndarray, stats: UpdateStats, t0: float
+    ) -> UpdateStats:
+        store_old = dict(self.store)        # pre-update handles for DRed bodies
+        handle: TupleRelation = self.store[rel]
+        new_handle, removed_rows, removed_count = handle.delete(rows)
+        stats.removed = removed_count
+        if removed_count == 0:
+            return self._finish_update(stats, t0)
+        self.store[rel] = new_handle
+        dcap = next_bucket(max(removed_count, 1), self.engine.config.capacity_min)
+        deleted: dict[str, TupleView] = {
+            rel: TupleView(removed_rows[:dcap], removed_count, self.domain)
+        }
+        changed: dict[str, TupleView] = {}
+        nonmono: set[str] = set()
+
+        for stratum in self.strat.strata:
+            mode, kinds = self._retract_mode(stratum, deleted, changed, nonmono)
+            if mode == "skip":
+                continue
+            if mode == "delta" and stratum.index in self._bm and self._bm_applies(
+                stratum, changed
+            ):
+                iters, derived = self._bitmatrix_delta(stratum, changed)
+                stats.modes[stratum.index] = "bitmatrix"
+                stats.derived += derived
+            elif mode == "delta":
+                iters, derived = self._delta_stratum(stratum, changed, nonmono, kinds)
+                stats.modes[stratum.index] = "delta"
+                stats.derived += derived
+            elif mode == "dred":
+                iters, net_del, net_add = self.engine.dred_stratum(
+                    self.strat, stratum, self.store, store_old,
+                    deleted, changed, kinds, self.plan.groups_for(stratum.index),
+                )
+                deleted.update(net_del)
+                changed.update(net_add)
+                stats.modes[stratum.index] = "dred"
+                stats.retracted += sum(v.count for v in net_del.values())
+                stats.derived += sum(v.count for v in net_add.values())
+            else:
+                iters, n_add, n_del = self._full_stratum_diff(stratum, deleted, changed)
+                stats.modes[stratum.index] = "full"
+                stats.derived += n_add
+                stats.retracted += n_del
+            stats.iterations[stratum.index] = iters
+
+        return self._finish_update(stats, t0)
 
     # -- update-mode selection ----------------------------------------------
 
@@ -281,6 +373,56 @@ class MaterializedInstance:
         ):
             return "full", None   # tuple-path aggregates overwrite group values
         return "delta", kinds
+
+    def _retract_mode(
+        self,
+        stratum: Stratum,
+        deleted: dict[str, TupleView],
+        changed: dict[str, TupleView],
+        nonmono: set[str],
+    ) -> tuple[str, dict[str, str] | None]:
+        """Per-stratum dispatch for the retraction path.
+
+        ``dred`` — tuple-backed, aggregate-free, no negation over a touched
+        relation: the engine's over-delete/re-derive driver applies.
+        ``delta``/``bitmatrix`` — deletions died out upstream and only
+        insertions reach this stratum (e.g. re-derived upstream tuples): the
+        insert path's monotone machinery applies unchanged.
+        ``full`` — deletions reach an aggregate (a displaced MIN/MAX winner
+        has no recoverable runner-up), a dense handle (no derivation counts),
+        a negated relation (deletions there *grow* this stratum), or a
+        PBME-resident stratum (``eligible_plan`` refuses decremental plans):
+        recompute from scratch and diff.
+        """
+        refs = {a.pred for r in stratum.rules for a in r.atoms}
+        touched = set(deleted) | set(changed)
+        if not refs & (touched | nonmono):
+            return "skip", None
+        if refs & nonmono:
+            return "full", None
+        if any(
+            a.negated and a.pred in touched
+            for r in stratum.rules
+            for a in r.atoms
+        ):
+            return "full", None
+        kinds = self.engine._init_handles(self.strat, stratum, self.store, fresh=False)
+        if not refs & set(deleted):
+            if any(
+                r.has_aggregate and kinds.get(r.head_pred) != "dense_agg"
+                for r in stratum.rules
+            ):
+                return "full", None
+            return "delta", kinds
+        if any(r.has_aggregate for r in stratum.rules):
+            return "full", None
+        if any(kinds[p] != "tuple" for p in stratum.preds):
+            return "full", None
+        if stratum.index in self._bm and self._bm_eligible(
+            stratum, deleting=True
+        ) is None:
+            return "full", None
+        return "dred", kinds
 
     def _bm_applies(self, stratum: Stratum, changed: dict[str, TupleView]) -> bool:
         refs = {a.pred for r in stratum.rules for a in r.atoms}
@@ -370,25 +512,54 @@ class MaterializedInstance:
     def _full_stratum(
         self, stratum: Stratum, changed: dict[str, TupleView], nonmono: set[str]
     ):
+        iters, derived, _ = self._recompute_stratum(stratum, changed, nonmono=nonmono)
+        return iters, derived
+
+    def _full_stratum_diff(
+        self,
+        stratum: Stratum,
+        deleted: dict[str, TupleView],
+        changed: dict[str, TupleView],
+    ) -> tuple[int, int, int]:
+        return self._recompute_stratum(stratum, changed, deleted=deleted)
+
+    def _recompute_stratum(
+        self,
+        stratum: Stratum,
+        changed: dict[str, TupleView],
+        nonmono: set[str] | None = None,
+        deleted: dict[str, TupleView] | None = None,
+    ) -> tuple[int, int, int]:
+        """Recompute a stratum from scratch; propagate the old-vs-new diff.
+
+        Additions always become Δ views in ``changed``.  Retractions follow
+        the caller's policy: the insert path passes ``nonmono`` and taints
+        every downstream stratum (its monotone machinery has no ∇ notion);
+        the retraction path passes ``deleted`` and hands explicit ∇ views
+        downstream, where each stratum picks DRed, delta, or full itself.
+        Returns ``(iterations, n_added, n_removed)``.
+        """
         old = {p: self.relation(p) for p in stratum.preds}
         for p in stratum.preds:
             self.store.pop(p, None)
         self.engine._eval_stratum(self.strat, stratum, self.store)
-        derived = 0
+        n_add = n_del = 0
         for p in stratum.preds:
-            new_np = self.relation(p)
             old_set = set(map(tuple, old[p].tolist()))
-            new_set = set(map(tuple, new_np.tolist()))
-            fresh = new_set - old_set
-            derived += len(fresh)
-            if old_set <= new_set:
-                if fresh:
-                    changed[p] = self._view_from_numpy(np.array(sorted(fresh)))
-            else:
+            new_set = set(map(tuple, self.relation(p).tolist()))
+            fresh = sorted(new_set - old_set)
+            gone = sorted(old_set - new_set)
+            n_add += len(fresh)
+            n_del += len(gone)
+            if gone and deleted is not None:
+                deleted[p] = self._view_from_numpy(np.array(gone, np.int32))
+            if gone and nonmono is not None:
                 nonmono.add(p)      # retractions: taint downstream strata
+            elif fresh:
+                changed[p] = self._view_from_numpy(np.array(fresh, np.int32))
             if stratum.index in self._bm and self._bm[stratum.index]["plan"].idb == p:
                 self._refresh_bitmatrix(stratum.index)
-        return self.engine.stats.iterations.get(stratum.index, 1), derived
+        return self.engine.stats.iterations.get(stratum.index, 1), n_add, n_del
 
     def _full_rebuild(self, rel: str, rows: np.ndarray, stats: UpdateStats) -> None:
         """Domain growth: dense state is sized by the active domain → rebuild."""

@@ -4,22 +4,31 @@ Modeled on ``train/serve.py``'s ``BatchedServer`` (queue → admission batch →
 serve → per-request stats), with Datalog request kinds instead of decode
 slots:
 
-* *fact-insert batches* — consecutive inserts into the same relation are
-  coalesced into ONE ``insert_facts`` call (one delta-ingest pass amortizes
-  the per-iteration fixed costs over the whole admission batch);
+* *fact-insert / fact-delete batches* — consecutive same-kind requests into
+  the same relation are coalesced into ONE ``insert_facts`` /
+  ``retract_facts`` call (one delta-ingest or DRed pass amortizes the
+  per-iteration fixed costs over the whole admission batch);
 * *point/range queries* — answered against the materialized store through
   the plan cache's warm selection executables.
 
 The loop preserves submission order across kinds (a query submitted after an
-insert sees its derived facts), which is why only *runs* of same-relation
-inserts coalesce — never across an intervening query.
+insert or delete sees its effects), which is why only *runs* of same-relation
+same-kind updates coalesce — never across an intervening query or across an
+insert/delete boundary.
+
+Malformed payloads (unknown relation, arity mismatch) are rejected at
+``submit_*`` time, so an admitted batch can always be concatenated; failures
+that only surface at apply time (e.g. negative ids) fall back to per-request
+application, guarded by a rollback-boundary check so a partially-committed
+coalesced batch is never double-applied.
 """
 
 from __future__ import annotations
 
+import math
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
@@ -29,7 +38,7 @@ from repro.serve_datalog.instance import MaterializedInstance, UpdateStats
 @dataclass
 class _Request:
     rid: int
-    kind: str                    # "query" | "insert"
+    kind: str                    # "query" | "insert" | "delete"
     rel: str
     payload: dict | np.ndarray
     submitted: float
@@ -66,7 +75,10 @@ class ServerStats:
         )
         if not lats:
             return {"count": 0}
-        pick = lambda q: lats[min(int(q * len(lats)), len(lats) - 1)]
+        # nearest-rank percentile: ceil(q·n)-1 is the smallest sample with at
+        # least q·n samples ≤ it (int(q·n) is biased high for small n — the
+        # p50 of 2 samples must be the lower one, not the max)
+        pick = lambda q: lats[max(math.ceil(q * len(lats)) - 1, 0)]
         return {
             "count": len(lats),
             "p50_ms": pick(0.50) * 1e3,
@@ -103,40 +115,52 @@ class DatalogServer:
         return rid
 
     def submit_insert(self, rel: str, rows: np.ndarray) -> int:
+        return self._submit_update("insert", rel, rows)
+
+    def submit_delete(self, rel: str, rows: np.ndarray) -> int:
+        return self._submit_update("delete", rel, rows)
+
+    def _submit_update(self, kind: str, rel: str, rows: np.ndarray) -> int:
+        """Admission-time validation: a malformed payload fails HERE, at its
+        submitter, instead of poisoning the coalesced batch it would ride in
+        (the bare ``np.concatenate`` in the serving loop needs every payload
+        already shaped ``(k, arity)``)."""
+        if rel not in self.instance.strat.edb:
+            raise KeyError(f"{rel!r} is not an EDB relation of this program")
+        arity = self.instance.plan.program.arity_of(rel)
+        rows = np.asarray(rows, np.int32)
+        # an nd payload must already have arity columns: reshape alone would
+        # silently scramble e.g. 2 three-column rows into 3 two-column tuples
+        # whenever the total size happens to divide
+        bad_shape = rows.ndim >= 2 and rows.size and rows.shape[-1] != arity
+        try:
+            if bad_shape:
+                raise ValueError("column count mismatch")
+            rows = rows.reshape(-1, arity) if rows.size else rows.reshape(0, arity)
+        except ValueError as e:
+            raise ValueError(
+                f"payload of shape {rows.shape} does not match "
+                f"{rel!r} arity {arity}"
+            ) from e
         rid = self._next_id
         self._next_id += 1
-        self.queue.append(
-            _Request(rid, "insert", rel, np.asarray(rows, np.int32), time.perf_counter())
-        )
+        self.queue.append(_Request(rid, kind, rel, rows, time.perf_counter()))
         return rid
 
     # -- the serving loop ----------------------------------------------------
 
+    _UPDATE_FNS = {"insert": "insert_facts", "delete": "retract_facts"}
+
     def run(self) -> dict[int, np.ndarray | UpdateStats | RequestError]:
         """Drain the queue; returns rid → query rows, UpdateStats, or
-        RequestError.  Failures are isolated per request: a bad insert in a
+        RequestError.  Failures are isolated per request: a bad update in a
         coalesced batch falls back to per-request application so its valid
         neighbors still land, and never stalls the requests behind it."""
         while self.queue:
             group = self._admit()
             t0 = time.perf_counter()
-            if group[0].kind == "insert":
-                try:
-                    rows = np.concatenate(
-                        [np.atleast_2d(r.payload) for r in group]
-                    )
-                    result = self.instance.insert_facts(group[0].rel, rows)
-                    results = {r.rid: result for r in group}
-                except Exception:
-                    results = {
-                        r.rid: self._apply(
-                            lambda r=r: self.instance.insert_facts(
-                                r.rel, np.atleast_2d(r.payload)
-                            ),
-                            r.rid,
-                        )
-                        for r in group
-                    }
+            if group[0].kind in self._UPDATE_FNS:
+                results = self._apply_update_group(group)
             else:
                 results = {
                     r.rid: self._apply(
@@ -161,6 +185,47 @@ class DatalogServer:
                 self.done.pop(next(iter(self.done)))
         return self.done
 
+    def _apply_update_group(self, group: list[_Request]):
+        """One coalesced insert/delete batch, with isolated fallback.
+
+        Each rid gets its OWN stats slice (``requested`` is the request's row
+        count; batch-level fields are copies, not aliases — mutating one
+        result must never bleed into its batch neighbors').  The fallback
+        re-applies per request only after verifying the instance rolled the
+        coalesced attempt back (handle identity — handles are immutable), so
+        a partial commit can never be double-applied.
+        """
+        fn = getattr(self.instance, self._UPDATE_FNS[group[0].kind])
+        before = self.instance.store.get(group[0].rel)
+        try:
+            rows = np.concatenate([r.payload for r in group])
+            batch = fn(group[0].rel, rows)
+            return {
+                r.rid: replace(
+                    batch,
+                    requested=len(r.payload),
+                    modes=dict(batch.modes),
+                    iterations=dict(batch.iterations),
+                )
+                for r in group
+            }
+        except Exception:
+            if self.instance.store.get(group[0].rel) is not before:
+                # rollback boundary violated: the coalesced attempt left
+                # partial state — re-applying would double-apply rows
+                return {
+                    r.rid: RequestError(
+                        r.rid,
+                        "RollbackError: coalesced batch left partial state; "
+                        "refusing per-request replay",
+                    )
+                    for r in group
+                }
+            return {
+                r.rid: self._apply(lambda r=r: fn(r.rel, r.payload), r.rid)
+                for r in group
+            }
+
     @staticmethod
     def _apply(fn, rid: int):
         try:
@@ -170,15 +235,15 @@ class DatalogServer:
 
     def _admit(self) -> list[_Request]:
         """Admission batch: the longest same-kind run at the queue head —
-        same-relation runs for inserts (they coalesce into one delta batch),
-        any run of queries (they share the warm executables)."""
+        same-relation runs for inserts/deletes (they coalesce into one update
+        batch), any run of queries (they share the warm executables)."""
         head = self.queue.popleft()
         group = [head]
         while self.queue and len(group) < self.max_batch:
             nxt = self.queue[0]
             if nxt.kind != head.kind:
                 break
-            if head.kind == "insert" and nxt.rel != head.rel:
+            if head.kind in self._UPDATE_FNS and nxt.rel != head.rel:
                 break
             group.append(self.queue.popleft())
         return group

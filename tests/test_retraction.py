@@ -1,0 +1,489 @@
+"""Retraction (DRed delete-and-rederive) tests.
+
+Central invariant: ``retract_facts`` — and any interleaving of inserts and
+retracts — leaves every relation bit-for-bit identical to a from-scratch
+``Engine.run`` on the final EDB, across TC/SG/program-analysis workloads,
+dense backends, stratified negation, and aggregates (where the affected
+strata fall back to full recomputation and hand their net diff downstream).
+"""
+
+import numpy as np
+import pytest
+
+from conftest import adj_of, random_edges, tc_oracle
+from repro.configs.datalog_workloads import ALL as WORKLOADS
+from repro.core import Engine, EngineConfig
+from repro.serve_datalog import DatalogServer, MaterializedInstance, RequestError
+
+TC = WORKLOADS["tc"].program
+NEG_PROG = """
+tc(x,y) :- arc(x,y).
+tc(x,y) :- tc(x,z), arc(z,y).
+node(x) :- arc(x,y).
+node(y) :- arc(x,y).
+ntc(x,y) :- node(x), node(y), !tc(x,y).
+"""
+
+
+def _as_set(rows):
+    return set(map(tuple, np.asarray(rows).tolist()))
+
+
+def _check_retract(prog, edb_full, rel, k, config=None, n_batches=1):
+    """retract_facts(…) == from-scratch run on the shrunken EDB, per relation."""
+    config = config or EngineConfig()
+    edb_full = {kk: np.asarray(v, np.int32) for kk, v in edb_full.items()}
+    inst = MaterializedInstance(prog, edb_full, EngineConfig(**vars(config)))
+    held = edb_full[rel][-k:]
+    stats = [
+        inst.retract_facts(rel, part)
+        for part in np.array_split(held, n_batches)
+    ]
+    shrunk = dict(edb_full)
+    shrunk[rel] = edb_full[rel][:-k]
+    oracle = Engine(EngineConfig(**vars(config))).run(prog, shrunk)
+    for name, want in oracle.items():
+        assert _as_set(inst.relation(name)) == _as_set(want), name
+    assert _as_set(inst.relation(rel)) == _as_set(shrunk[rel])
+    return inst, stats
+
+
+# --------------------------------------------------------------------------
+# equality with from-scratch evaluation across workloads
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(3))
+@pytest.mark.parametrize("backend", ["tuple", "auto"])
+def test_tc_retract_matches_scratch(seed, backend):
+    rng = np.random.default_rng(seed)
+    n = 22 + 4 * seed
+    edges = random_edges(rng, n, 4 * n)
+    inst, stats = _check_retract(
+        TC, {"arc": edges}, "arc", max(len(edges) // 10, 1),
+        EngineConfig(backend=backend), n_batches=2,
+    )
+    assert sum(s.removed for s in stats) == max(len(edges) // 10, 1)
+    # tuple strata run DRed; PBME-resident strata recompute (decremental
+    # closure is gated off in eligible_plan)
+    expected = "dred" if backend == "tuple" else "full"
+    assert all(s.modes.get(0, "skip") in (expected, "skip") for s in stats)
+
+
+@pytest.mark.parametrize("backend", ["tuple", "auto"])
+def test_sg_retract_matches_scratch(backend):
+    rng = np.random.default_rng(11)
+    edges = random_edges(rng, 20, 55)
+    _check_retract(
+        WORKLOADS["sg"].program, {"arc": edges}, "arc", 6,
+        EngineConfig(backend=backend),
+    )
+
+
+@pytest.mark.parametrize("rel", ["assign", "addressOf", "load"])
+def test_andersen_retract_matches_scratch(rel):
+    from repro.data.program_facts import andersen_facts
+
+    edb, _ = andersen_facts(1, seed=7)
+    inst, stats = _check_retract(
+        WORKLOADS["andersen"].program, edb, rel,
+        max(len(edb[rel]) // 8, 1), n_batches=2,
+    )
+    assert all(m == "dred" for s in stats for m in s.modes.values())
+
+
+def test_csda_retract_matches_scratch():
+    from repro.data.program_facts import csda_facts
+
+    edb = csda_facts(600, seed=0)
+    _check_retract(WORKLOADS["csda"].program, edb, "arc", 15)
+
+
+def test_negation_stratum_gains_facts_on_retract():
+    """Deleting tc pairs *grows* ntc: the negation stratum must recompute in
+    full while the tc stratum itself runs DRed."""
+    rng = np.random.default_rng(42)
+    edges = random_edges(rng, 14, 30)
+    inst, stats = _check_retract(
+        NEG_PROG, {"arc": edges}, "arc", 4, EngineConfig(backend="tuple")
+    )
+    ntc_stratum = next(s.index for s in inst.strat.strata if "ntc" in s.preds)
+    tc_stratum = next(s.index for s in inst.strat.strata if "tc" in s.preds)
+    modes = stats[-1].modes
+    assert modes.get(ntc_stratum) == "full"
+    assert modes.get(tc_stratum) == "dred"
+    assert stats[-1].derived > 0          # ntc gained facts from the deletion
+
+
+def test_dense_and_aggregate_strata_fall_back_to_full():
+    """Dense MIN/MAX tables keep only the best value per key — a deleted
+    winner's runner-up is unrecoverable, so those strata recompute; their net
+    diff still propagates downstream incrementally."""
+    rng = np.random.default_rng(5)
+    edges = random_edges(rng, 24, 70)
+    ids = np.array([[0]], np.int32)
+    inst, stats = _check_retract(
+        WORKLOADS["reach"].program, {"arc": edges, "id": ids}, "arc", 8
+    )
+    assert all(m == "full" for s in stats for m in s.modes.values())
+    _check_retract(WORKLOADS["cc"].program, {"arc": edges}, "arc", 8)
+    w = np.concatenate(
+        [edges, rng.integers(1, 30, size=(len(edges), 1)).astype(np.int32)], axis=1
+    )
+    inst, stats = _check_retract(
+        WORKLOADS["sssp"].program, {"arc": w, "id": ids}, "arc", 8
+    )
+    assert any(m == "full" for s in stats for m in s.modes.values())
+
+
+def test_retract_then_insert_roundtrip():
+    """Deleting a batch and re-inserting it restores the exact fixpoint."""
+    rng = np.random.default_rng(3)
+    edges = random_edges(rng, 20, 60)
+    for backend in ("tuple", "auto"):
+        inst = MaterializedInstance(
+            TC, {"arc": edges}, EngineConfig(backend=backend)
+        )
+        before = _as_set(inst.relation("tc"))
+        inst.retract_facts("arc", edges[-6:])
+        inst.insert_facts("arc", edges[-6:])
+        assert _as_set(inst.relation("tc")) == before
+        assert _as_set(inst.relation("arc")) == _as_set(edges)
+
+
+# --------------------------------------------------------------------------
+# edge cases: no-ops, absent rows, validation, atomicity
+# --------------------------------------------------------------------------
+
+
+def test_retract_absent_and_empty_batches_are_noops():
+    rng = np.random.default_rng(8)
+    edges = random_edges(rng, 18, 40)
+    inst = MaterializedInstance(TC, {"arc": edges})
+    before = _as_set(inst.relation("tc"))
+    st = inst.retract_facts("arc", np.array([[97, 99]], np.int32))  # absent
+    assert st.removed == 0 and st.retracted == 0 and not st.modes
+    st = inst.retract_facts("arc", np.zeros((0, 2), np.int32))
+    assert st.requested == 0 and st.kind == "delete"
+    assert _as_set(inst.relation("tc")) == before
+
+
+def test_retract_everything_leaves_empty_idb():
+    edges = np.array([[0, 1], [1, 2]], np.int32)
+    inst = MaterializedInstance(TC, {"arc": edges}, EngineConfig(backend="tuple"))
+    st = inst.retract_facts("arc", edges)
+    assert st.removed == 2
+    assert len(inst.relation("tc")) == 0 and len(inst.relation("arc")) == 0
+    # instance stays serviceable after full drain
+    inst.insert_facts("arc", np.array([[0, 2]], np.int32))
+    assert _as_set(inst.relation("tc")) == {(0, 2)}
+
+
+def test_retract_out_of_domain_rows_are_noops():
+    """A delete row with a constant outside the active domain cannot be
+    present, so it must be ignored — NOT aliased onto a colliding in-domain
+    tuple through the base-domain compact key (regression: with domain 3,
+    retracting (0, 3) once deleted arc(1, 0) — both pack to key 3 — and DRed
+    then retracted every tc tuple derived through it)."""
+    edges = np.array([[0, 1], [1, 0], [1, 2]], np.int32)       # domain = 3
+    inst = MaterializedInstance(TC, {"arc": edges}, EngineConfig(backend="tuple"))
+    before = _as_set(inst.relation("tc"))
+    st = inst.retract_facts("arc", np.array([[0, 3]], np.int32))
+    assert st.removed == 0 and not st.modes
+    assert _as_set(inst.relation("arc")) == _as_set(edges)
+    assert _as_set(inst.relation("tc")) == before
+
+
+def test_retract_rejects_unknown_idb_and_negative():
+    inst = MaterializedInstance(TC, {"arc": np.array([[0, 1]], np.int32)})
+    with pytest.raises(KeyError):
+        inst.retract_facts("tc", np.array([[0, 1]], np.int32))
+    with pytest.raises(ValueError, match="negative"):
+        inst.retract_facts("arc", np.array([[-1, 0]], np.int32))
+    assert _as_set(inst.relation("tc")) == {(0, 1)}
+
+
+def test_retract_is_atomic_on_failure(rng, monkeypatch):
+    """A failure mid-retraction must restore every pre-update handle —
+    otherwise retries see removed == 0 and silently skip the fixpoint."""
+    edges = random_edges(rng, 16, 36)
+    inst = MaterializedInstance(TC, {"arc": edges}, EngineConfig(backend="tuple"))
+    before_tc = _as_set(inst.relation("tc"))
+    before_arc_handle = inst.store["arc"]
+
+    def boom(*a, **k):
+        raise RuntimeError("simulated mid-retraction failure")
+
+    monkeypatch.setattr(inst.engine, "dred_stratum", boom)
+    with pytest.raises(RuntimeError, match="simulated"):
+        inst.retract_facts("arc", edges[-4:])
+    # rollback boundary: the exact pre-update handle objects are restored
+    assert inst.store["arc"] is before_arc_handle
+    assert _as_set(inst.relation("tc")) == before_tc
+    monkeypatch.undo()
+    st = inst.retract_facts("arc", edges[-4:])             # retry lands fully
+    assert st.removed == 4
+    want = tc_oracle(adj_of(edges[:-4], 16))
+    assert _as_set(inst.relation("tc")) == set(zip(*np.nonzero(want)))
+
+
+# --------------------------------------------------------------------------
+# relation-level deletes (incl. the normalized empty-delta shape)
+# --------------------------------------------------------------------------
+
+
+def test_tuple_relation_delete():
+    from repro.core.relation import TupleRelation
+
+    r = TupleRelation.from_numpy(
+        "r", np.array([[0, 1], [2, 3], [4, 5]]), domain=10
+    )
+    r2, removed, count = r.delete(np.array([[2, 3], [7, 7], [2, 3]]))
+    assert count == 1
+    assert _as_set(np.asarray(removed[:count])) == {(2, 3)}
+    assert r2.count == 2 and _as_set(r2.to_numpy()) == {(0, 1), (4, 5)}
+    assert r2.capacity == r.capacity        # no shrink: buckets stay stable
+    assert r.count == 3                     # original handle untouched
+    r3, _, c3 = r2.delete(np.array([[9, 9]]))     # nothing present
+    assert c3 == 0 and r3 is r2
+    # out-of-domain constants can't be present and must NOT alias through the
+    # base-domain compact key: (3, 15) packs to 3·10+15 == 4·10+5 == (4, 5)
+    r4, _, c4 = r2.delete(np.array([[3, 15], [-2, 25]]))
+    assert c4 == 0 and r4 is r2
+    assert _as_set(r2.to_numpy()) == {(0, 1), (4, 5)}
+
+
+def test_empty_delta_shape_is_normalized():
+    """Empty insert/delete deltas share the minimum-bucket padded shape —
+    downstream code can slice/merge them without count==0 special-casing."""
+    from repro.core.relation import TupleRelation, empty_delta, next_bucket
+    from repro.relational.sort import SENTINEL
+
+    want_shape = (next_bucket(0), 2)
+    assert empty_delta(2).shape == want_shape
+    r = TupleRelation.from_numpy("r", np.array([[0, 1]]), domain=10)
+    for delta, count in (
+        r.insert(np.zeros((0, 2), np.int32))[1:],
+        r.insert(np.array([[0, 1]]))[1:],      # all duplicates → empty Δ
+        r.delete(np.zeros((0, 2), np.int32))[1:],
+        r.delete(np.array([[5, 5]]))[1:],      # nothing present → empty ∇
+    ):
+        if count == 0 and delta.shape[0] == want_shape[0]:
+            assert bool((delta == SENTINEL).all())
+        assert count == 0
+
+
+def test_dense_relation_deletes():
+    import jax.numpy as jnp
+
+    from repro.core.relation import DenseAggRelation, DenseSetRelation
+
+    s = DenseSetRelation.empty("s", 8)
+    s = s.update(jnp.array([1, 3, 5]), jnp.array([True, True, True]))
+    s2 = s.delete(jnp.array([3, 6]), jnp.array([True, True]))
+    assert s2.count == 2 and s2.delta_count == 1     # only 3 was a member
+    assert _as_set(s2.to_numpy()) == {(1,), (5,)}
+
+    s3 = s2.delete(jnp.array([99, -1]), jnp.array([True, True]))
+    assert s3.count == 2 and s3.delta_count == 0     # out-of-range: no-op
+
+    a = DenseAggRelation.empty("a", 8, "MIN")
+    a = a.update(jnp.array([2, 4]), jnp.array([10, 20]), jnp.array([True, True]))
+    a2 = a.delete(jnp.array([2, 4]), jnp.array([10, 99]), jnp.array([True, True]))
+    assert a2.count == 1 and a2.delta_count == 1     # (4, 99) doesn't match 20
+    assert _as_set(a2.to_numpy()) == {(4, 20)}
+    # an out-of-range key must not clip onto key n-1 and clear it
+    a = DenseAggRelation.empty("a", 8, "MIN")
+    a = a.update(jnp.array([7]), jnp.array([5]), jnp.array([True]))
+    a3 = a.delete(jnp.array([9]), jnp.array([5]), jnp.array([True]))
+    assert a3.count == 1 and a3.delta_count == 0
+    assert _as_set(a3.to_numpy()) == {(7, 5)}
+
+
+# --------------------------------------------------------------------------
+# property test: interleaved insert/retract sequences == from-scratch
+# (hypothesis-driven where available; seeded-random fallback otherwise)
+# --------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAS_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAS_HYPOTHESIS = False
+
+PROGRAMS = {
+    "tc/tuple": (TC, EngineConfig(backend="tuple")),
+    "tc/auto": (TC, EngineConfig(backend="auto")),
+    "sg": (WORKLOADS["sg"].program, EngineConfig(backend="tuple")),
+    "neg": (NEG_PROG, EngineConfig(backend="tuple")),
+    "sssp": (WORKLOADS["sssp"].program, EngineConfig()),
+}
+
+
+def _interleave_property(key, seed, ops):
+    prog, config = PROGRAMS[key]
+    rng = np.random.default_rng(seed)
+    arity = 3 if key == "sssp" else 2
+    base = np.unique(rng.integers(0, 12, size=(30, 2)), axis=0).astype(np.int32)
+    if arity == 3:
+        base = np.concatenate(
+            [base, rng.integers(1, 9, size=(len(base), 1)).astype(np.int32)], axis=1
+        )
+    edb = {"arc": base}
+    if key == "sssp":
+        edb["id"] = np.array([[0]], np.int32)
+    inst = MaterializedInstance(prog, edb, EngineConfig(**vars(config)))
+    cur = _as_set(base)
+    for op, pairs in ops:
+        rows = np.array(pairs, np.int32)
+        if arity == 3:
+            rows = np.concatenate(
+                [rows, (1 + rows.sum(axis=1, keepdims=True) % 8).astype(np.int32)],
+                axis=1,
+            )
+        if op == "insert":
+            # stay inside the materialized domain: growth is the separate
+            # full-rebuild path (covered by test_serve_datalog)
+            inst.insert_facts("arc", rows)
+            cur |= _as_set(rows)
+        else:
+            inst.retract_facts("arc", rows)
+            cur -= _as_set(rows)
+    final = dict(edb)
+    final["arc"] = (
+        np.array(sorted(cur), np.int32) if cur else np.zeros((0, arity), np.int32)
+    )
+    oracle = Engine(EngineConfig(**vars(config))).run(prog, final)
+    for name, want in oracle.items():
+        assert _as_set(inst.relation(name)) == _as_set(want), (key, name)
+
+
+if HAS_HYPOTHESIS:
+    ops_strategy = st.lists(
+        st.tuples(
+            st.sampled_from(["insert", "delete"]),
+            st.lists(
+                st.tuples(st.integers(0, 11), st.integers(0, 11)),
+                min_size=1,
+                max_size=4,
+            ),
+        ),
+        min_size=2,
+        max_size=6,
+    )
+
+    @settings(deadline=None, max_examples=8)
+    @given(
+        key=st.sampled_from(sorted(PROGRAMS)),
+        seed=st.integers(0, 3),
+        ops=ops_strategy,
+    )
+    def test_interleaved_insert_retract_matches_scratch(key, seed, ops):
+        _interleave_property(key, seed, ops)
+
+else:
+
+    @pytest.mark.parametrize("key", sorted(PROGRAMS))
+    def test_interleaved_insert_retract_matches_scratch(key):
+        rng = np.random.default_rng(hash(key) % (1 << 16))
+        for seed in range(2):
+            ops = [
+                (
+                    rng.choice(["insert", "delete"]),
+                    [tuple(p) for p in rng.integers(0, 12, size=(3, 2))],
+                )
+                for _ in range(4)
+            ]
+            _interleave_property(key, seed, ops)
+
+
+# --------------------------------------------------------------------------
+# the batched server: submit_delete, coalescing, ordering
+# --------------------------------------------------------------------------
+
+
+def test_server_delete_coalescing_and_ordering(rng):
+    n = 16
+    edges = random_edges(rng, n, 40)
+    inst = MaterializedInstance(TC, {"arc": edges}, EngineConfig(backend="tuple"))
+    srv = DatalogServer(inst, max_batch=8)
+    pre = srv.submit_query("tc")
+    dels = [srv.submit_delete("arc", edges[-4 + i : -3 + i]) for i in range(3)]
+    post = srv.submit_query("tc")
+    ins = srv.submit_insert("arc", edges[-4:-1])
+    done = srv.run()
+    # deletes coalesced into one DRed batch with per-rid stats slices
+    assert max(
+        r.batch_size for r in srv.stats.records if r.kind == "delete"
+    ) == len(dels)
+    assert len({id(done[d]) for d in dels}) == len(dels)
+    assert all(done[d].kind == "delete" and done[d].requested == 1 for d in dels)
+    assert sum(done[d].removed for d in dels) / len(dels) == 3  # batch total
+    # queries see the state as of their queue position
+    want_shrunk = tc_oracle(adj_of(np.concatenate([edges[:-4], edges[-1:]]), n))
+    assert _as_set(done[post]) == set(zip(*np.nonzero(want_shrunk)))
+    assert len(done[pre]) >= len(done[post])
+    # the trailing insert restored the full graph
+    want_full = tc_oracle(adj_of(edges, n))
+    assert _as_set(inst.relation("tc")) == set(zip(*np.nonzero(want_full)))
+
+
+def test_server_validates_payloads_at_submission():
+    inst = MaterializedInstance(TC, {"arc": np.array([[0, 1]], np.int32)})
+    srv = DatalogServer(inst)
+    with pytest.raises(ValueError, match="arity"):
+        srv.submit_insert("arc", np.array([1, 2, 3], np.int32))
+    with pytest.raises(ValueError, match="arity"):
+        srv.submit_delete("arc", np.array([[1, 2, 3]], np.int32))
+    with pytest.raises(ValueError, match="arity"):
+        # wrong column count with a divisible total size must NOT be
+        # reshape-scrambled into tuples the client never sent
+        srv.submit_insert("arc", np.array([[0, 2, 1], [3, 0, 2]], np.int32))
+    with pytest.raises(KeyError):
+        srv.submit_delete("nope", np.array([[1, 2]], np.int32))
+    with pytest.raises(KeyError):
+        srv.submit_insert("tc", np.array([[1, 2]], np.int32))  # IDB, not EDB
+    assert not srv.queue                       # nothing malformed was admitted
+    ok = srv.submit_insert("arc", [2, 3])      # 1-D row of the right arity
+    done = srv.run()
+    assert done[ok].inserted == 1
+
+
+def test_server_refuses_replay_after_rollback_violation(rng, monkeypatch):
+    """If a failed coalesced batch left partial state (rollback boundary
+    violated), the per-request fallback must NOT re-apply — that would
+    double-apply the rows that did land."""
+    edges = random_edges(rng, 14, 30)
+    inst = MaterializedInstance(TC, {"arc": edges[:-2]})
+    srv = DatalogServer(inst)
+
+    real_insert = inst.insert_facts
+
+    def partial_commit(rel, rows):
+        real_insert(rel, np.asarray(rows)[:1])   # half the batch lands...
+        raise RuntimeError("crash after partial commit")
+
+    monkeypatch.setattr(inst, "insert_facts", partial_commit)
+    r1 = srv.submit_insert("arc", edges[-2:-1])
+    r2 = srv.submit_insert("arc", edges[-1:])
+    done = srv.run()
+    assert isinstance(done[r1], RequestError) and isinstance(done[r2], RequestError)
+    assert "partial state" in done[r1].error
+
+
+def test_latency_percentiles_nearest_rank():
+    """int(q·n) is biased high for small samples: p50 of 2 must be the lower
+    sample (nearest-rank ceil(q·n)-1), not the max."""
+    from repro.serve_datalog.server import RequestRecord, ServerStats
+
+    stats = ServerStats()
+    for i, s in enumerate([0.010, 0.100]):
+        stats.records.append(RequestRecord(i, "query", "tc", 1, 0.0, s))
+    lat = stats.latency()
+    assert lat["p50_ms"] == pytest.approx(10.0)
+    assert lat["p95_ms"] == pytest.approx(100.0)
+    assert lat["max_ms"] == pytest.approx(100.0)
+    stats.records.append(RequestRecord(2, "query", "tc", 1, 0.0, 0.050))
+    assert stats.latency()["p50_ms"] == pytest.approx(50.0)  # true median of 3
+    assert stats.latency(kind="insert") == {"count": 0}

@@ -380,9 +380,14 @@ def test_server_mixed_workload(rng):
     assert _as_set(done[q1]) == {
         (src, v) for v in np.nonzero(want_final[src])[0]
     }
-    # consecutive same-relation inserts coalesced into ONE update batch
-    assert all(done[r] is done[ins[0]] for r in ins)
-    assert done[ins[0]].inserted == len(_as_set(extra) - _as_set(base))
+    # consecutive same-relation inserts coalesced into ONE update batch —
+    # but each rid owns its stats slice: requested is per-request, and no
+    # two results alias (mutating one must not bleed into its neighbors)
+    assert len({id(done[r]) for r in ins}) == len(ins)
+    assert all(done[r].requested == 2 for r in ins)
+    assert all(
+        done[r].inserted == len(_as_set(extra) - _as_set(base)) for r in ins
+    )
     recs = srv.stats.records
     assert {r.kind for r in recs} == {"query", "insert"}
     assert max(r.batch_size for r in recs if r.kind == "insert") == len(ins)
