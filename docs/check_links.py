@@ -1,0 +1,78 @@
+"""Docs link checker: every relative markdown link must resolve.
+
+    python docs/check_links.py
+
+Scans README.md, ROADMAP.md, PAPER.md, and docs/*.md for inline markdown
+links/images and verifies that
+
+* relative targets exist on disk (anchors are checked against the target
+  file's headings), and
+* the required documentation surface (README.md, docs/architecture.md,
+  docs/serving_api.md) is present.
+
+External (http/https/mailto) links are not fetched.  Exits non-zero with a
+report of every broken link — CI runs this in the docs job.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+REQUIRED = ["README.md", "docs/architecture.md", "docs/serving_api.md"]
+SCAN = ["README.md", "ROADMAP.md", "PAPER.md", "PAPERS.md", "CHANGES.md"]
+
+# inline links/images: [text](target) — code spans are stripped first
+LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+CODE = re.compile(r"`[^`]*`")
+
+
+def heading_anchors(path: Path) -> set[str]:
+    """GitHub-style anchors for every markdown heading in ``path``."""
+    anchors = set()
+    for line in path.read_text(encoding="utf-8").splitlines():
+        m = re.match(r"#+\s+(.*)", line)
+        if not m:
+            continue
+        slug = re.sub(r"[`*_]", "", m.group(1).strip().lower())
+        slug = re.sub(r"[^\w\- ]", "", slug).replace(" ", "-")
+        anchors.add(slug)
+    return anchors
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    text = CODE.sub("", md.read_text(encoding="utf-8"))
+    for target in LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        target, _, anchor = target.partition("#")
+        dest = (md.parent / target).resolve() if target else md.resolve()
+        if not dest.exists():
+            errors.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+            continue
+        if anchor and dest.suffix == ".md" and anchor not in heading_anchors(dest):
+            errors.append(
+                f"{md.relative_to(ROOT)}: missing anchor -> {target}#{anchor}"
+            )
+    return errors
+
+
+def main() -> int:
+    errors = [f"missing required doc: {p}" for p in REQUIRED if not (ROOT / p).exists()]
+    files = [ROOT / p for p in SCAN if (ROOT / p).exists()]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    for md in files:
+        errors.extend(check_file(md))
+    if errors:
+        print("\n".join(errors))
+        print(f"\n{len(errors)} broken link(s)")
+        return 1
+    print(f"checked {len(files)} file(s): all links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,21 @@
+"""Serving quickstart: materialize a program, update it, query it.
+
+    PYTHONPATH=src python examples/serve_quickstart.py
+
+This is the 10-line snippet from README.md; CI runs it and checks the
+output, so keep the two in sync.
+"""
+
+import numpy as np
+
+from repro.serve_datalog import DatalogServer, MaterializedInstance
+
+inst = MaterializedInstance(
+    "tc(x,y) :- arc(x,y).  tc(x,y) :- tc(x,z), arc(z,y).",
+    {"arc": np.array([[0, 1], [1, 2], [2, 3]], np.int32)},
+)
+srv = DatalogServer(inst)                                # MVCC snapshot reads
+srv.submit_insert("arc", np.array([[3, 0]], np.int32))   # close the cycle
+srv.run()                                                # drain: update publishes
+rows = inst.query("tc", src=0)                           # reads the latest epoch
+print("tc(0, y):", sorted(int(y) for _, y in rows), "| epoch", inst.epoch)

@@ -11,8 +11,11 @@ from repro.core.ast import Atom, Rule, Program, Var, Const, Agg, Cmp
 from repro.core.parser import parse
 from repro.core.analyzer import analyze, Stratification
 from repro.core.engine import Engine, EngineConfig, EvalStats
+from repro.core.versioned_store import Snapshot, VersionedStore
 
 __all__ = [
+    "Snapshot",
+    "VersionedStore",
     "Atom",
     "Rule",
     "Program",

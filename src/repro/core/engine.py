@@ -154,7 +154,15 @@ class Engine:
         edb: dict[str, np.ndarray],
         resume_from: str | None = None,
         strat: Stratification | None = None,
-    ) -> dict[str, np.ndarray]:
+        return_numpy: bool = True,
+    ) -> dict[str, np.ndarray] | None:
+        """Evaluate ``program`` over ``edb`` to a fixpoint.
+
+        Returns every IDB relation as numpy rows.  Callers that only want
+        the device-resident handle map (the serving layer, via
+        :meth:`take_store`) pass ``return_numpy=False`` to skip the full
+        device-to-host transfer of the fixpoint.
+        """
         if isinstance(program, str):
             from repro.core.parser import parse
 
@@ -192,6 +200,23 @@ class Engine:
         # expose materialized state for incremental maintenance (serve_datalog)
         self.strat = strat
         self.store = store
+        return self._to_numpy(strat, program, store) if return_numpy else None
+
+    def take_store(self) -> dict[str, Any]:
+        """Hand off the materialized handle map to the caller.
+
+        The serving layer installs the map as a ``VersionedStore`` epoch;
+        handing ownership over (and leaving the engine with empty scratch)
+        means the engine never keeps superseded handles alive, so epoch-based
+        reclamation can actually free their device buffers.
+        """
+        store, self.store = self.store, {}
+        return store
+
+    @staticmethod
+    def _to_numpy(
+        strat: Stratification, program: Program, store: dict[str, Any]
+    ) -> dict[str, np.ndarray]:
         out: dict[str, np.ndarray] = {}
         for name in strat.idb:
             out[name] = store[name].to_numpy() if name in store else np.zeros(

@@ -200,6 +200,16 @@ class TupleRelation:
         new = TupleRelation(self.name, self.arity, kept, int(k_count), self.domain)
         return new, removed, r_count
 
+    def device_buffers(self) -> tuple[jax.Array, ...]:
+        """Every device array this handle owns (reclamation accounting).
+
+        Includes the per-column sort copies cached by :meth:`sorted_by`.
+        Handles are immutable, so the buffer set only grows lazily via that
+        cache; the ``VersionedStore`` counts these when a superseded epoch
+        drops its last reference.
+        """
+        return (self.rows, *(a for pair in self._by_col.values() for a in pair))
+
     def to_numpy(self) -> np.ndarray:
         return np.asarray(self.rows[: self.count])
 
@@ -294,6 +304,10 @@ class DenseSetRelation:
         order = jnp.argsort(keys)
         rows = keys[order][:capacity, None].astype(jnp.int32)
         return rows, self.delta_count
+
+    def device_buffers(self) -> tuple[jax.Array, ...]:
+        """Device arrays owned by this handle (reclamation accounting)."""
+        return (self.member, self.delta)
 
     def to_numpy(self) -> np.ndarray:
         return np.flatnonzero(np.asarray(self.member)).astype(np.int32)[:, None]
@@ -399,6 +413,10 @@ class DenseAggRelation:
             srt != SENTINEL, self.values[jnp.minimum(srt, self.n - 1)], SENTINEL
         )
         return jnp.stack([srt, vals], axis=1), self.count
+
+    def device_buffers(self) -> tuple[jax.Array, ...]:
+        """Device arrays owned by this handle (reclamation accounting)."""
+        return (self.values, self.delta)
 
     def to_numpy(self) -> np.ndarray:
         vals = np.asarray(self.values)

@@ -1,0 +1,238 @@
+"""VersionedStore: MVCC-lite epochs over immutable relation handles.
+
+The relation handles in this codebase (:class:`~repro.core.relation.
+TupleRelation` and the dense specializations) are immutable: every update
+produces a *new* handle and leaves the old one untouched.  That makes
+snapshot isolation almost free — a consistent view of the database is just
+a handle map captured at one instant.  What this module adds on top is the
+bookkeeping that turns "copy the dict" into a real concurrency story:
+
+* **Epochs** — an append-only chain of published handle maps.  Epoch ``e``
+  is the complete database state (every EDB and IDB handle plus the active
+  domain) after the ``e``-th successful update.  A writer builds epoch
+  ``e+1`` in a *private* map and :meth:`VersionedStore.publish`-es it with
+  one pointer swap; readers pinned to ``e`` are never affected, and a failed
+  update simply never publishes (rollback is "the epoch never existed").
+* **Pins** — :meth:`VersionedStore.pin` returns a :class:`Snapshot` of the
+  latest published epoch and increments that epoch's reader count.  A
+  pinned snapshot stays readable — same handles, same domain — no matter
+  how many updates publish after it.  Snapshots are context managers;
+  :meth:`Snapshot.release` drops the pin.
+* **Epoch-based reclamation** — a superseded epoch (anything but the
+  latest) is retained only while readers pin it.  When its last pin drops,
+  the epoch is removed from the chain and every handle unique to it (by
+  object identity against all retained epochs) loses its last store
+  reference, returning its device buffers to the allocator.  ``stats()``
+  reports reclaimed epoch/handle/buffer counts so serving dashboards can
+  verify memory stays bounded under sustained update traffic.
+
+Reclamation deliberately drops references instead of calling
+``jax.Array.delete()``: handles may be aliased by in-flight views outside
+the store (a writer's base snapshot, debug captures), and Python refcounting
+frees an unreferenced device buffer just as promptly without the
+use-after-free hazard.
+
+Thread model: any number of reader threads (``pin``/``release``), one
+writer at a time (``publish``); all bookkeeping is behind one lock.  The
+serving layer (``repro.serve_datalog``) enforces the single writer.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from types import MappingProxyType
+from typing import Any, Mapping
+
+
+def handle_buffers(handle: Any) -> tuple:
+    """The device arrays owned by one relation handle.
+
+    Relation classes report their own buffers via ``device_buffers()`` (see
+    ``relation.py``); anything else counts as a single opaque buffer.  Used
+    only for reclamation accounting — the buffers themselves are freed by
+    the allocator once the handle loses its last reference.
+    """
+    fn = getattr(handle, "device_buffers", None)
+    return fn() if fn is not None else (handle,)
+
+
+class Snapshot:
+    """A pinned, immutable view of one published epoch.
+
+    ``handles`` is a read-only mapping of relation name → handle and
+    ``domain`` the active-domain size those handles were materialized
+    against.  The view is consistent: every handle belongs to the same
+    fixpoint, regardless of updates published after the pin.  Use as a
+    context manager, or call :meth:`release` explicitly; releasing twice is
+    a no-op.  Snapshots constructed without a store (``VersionedStore.
+    latest``) are unpinned peeks and ``release`` does nothing.
+    """
+
+    __slots__ = ("epoch", "handles", "domain", "_store")
+
+    def __init__(
+        self,
+        epoch: int,
+        handles: Mapping[str, Any],
+        domain: int,
+        store: "VersionedStore | None" = None,
+    ):
+        self.epoch = epoch
+        self.handles = handles
+        self.domain = domain
+        self._store = store
+
+    def release(self) -> None:
+        store, self._store = self._store, None
+        if store is not None:
+            store._release(self.epoch)
+
+    def __enter__(self) -> "Snapshot":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.release()
+        return False
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        state = "pinned" if self._store is not None else "released"
+        return f"Snapshot(epoch={self.epoch}, |handles|={len(self.handles)}, {state})"
+
+
+@dataclass
+class _Epoch:
+    handles: dict[str, Any]
+    domain: int
+    pins: int = 0
+
+
+@dataclass
+class StoreStats:
+    """Reclamation / pin counters (cumulative since construction)."""
+
+    pins_total: int = 0
+    reclaimed_epochs: int = 0
+    reclaimed_handles: int = 0
+    reclaimed_buffers: int = 0
+
+
+class VersionedStore:
+    """Append-only epoch → handle-map chain with pin-gated reclamation."""
+
+    def __init__(self, handles: Mapping[str, Any], domain: int):
+        self._lock = threading.Lock()
+        self._epochs: dict[int, _Epoch] = {0: _Epoch(dict(handles), domain)}
+        self._latest = 0
+        self._stats = StoreStats()
+
+    # -- read side -----------------------------------------------------------
+
+    @property
+    def epoch(self) -> int:
+        """Index of the latest published epoch."""
+        return self._latest
+
+    @property
+    def handles(self) -> Mapping[str, Any]:
+        """The latest epoch's handle map (read-only).
+
+        Wrapped in a :class:`MappingProxyType` like every snapshot view —
+        mutating a published epoch in place would corrupt pinned readers and
+        the identity-based reclamation accounting.  Writers copy
+        (``dict(handles)``) and publish instead.
+        """
+        with self._lock:
+            return MappingProxyType(self._epochs[self._latest].handles)
+
+    @property
+    def domain(self) -> int:
+        with self._lock:
+            return self._epochs[self._latest].domain
+
+    def latest(self) -> Snapshot:
+        """Unpinned peek at the latest epoch (no reclamation guarantee)."""
+        with self._lock:
+            e = self._epochs[self._latest]
+            return Snapshot(self._latest, MappingProxyType(e.handles), e.domain)
+
+    def pin(self) -> Snapshot:
+        """Pin the latest published epoch for reading.
+
+        The returned snapshot stays consistent across concurrent publishes;
+        its epoch is not reclaimed until :meth:`Snapshot.release`.
+        """
+        with self._lock:
+            e = self._epochs[self._latest]
+            e.pins += 1
+            self._stats.pins_total += 1
+            return Snapshot(self._latest, MappingProxyType(e.handles), e.domain, self)
+
+    def _release(self, epoch: int) -> None:
+        with self._lock:
+            e = self._epochs.get(epoch)
+            if e is None:  # epoch map already gone (shutdown paths)
+                return
+            e.pins -= 1
+            self._reclaim_locked()
+
+    # -- write side ----------------------------------------------------------
+
+    def publish(self, handles: Mapping[str, Any], domain: int) -> int:
+        """Atomically install a new latest epoch; returns its index.
+
+        The caller hands over a complete handle map built privately (never a
+        map readers could observe mid-mutation).  Superseded unpinned epochs
+        are reclaimed immediately.
+        """
+        with self._lock:
+            self._latest += 1
+            self._epochs[self._latest] = _Epoch(dict(handles), domain)
+            self._reclaim_locked()
+            return self._latest
+
+    def _reclaim_locked(self) -> None:
+        """Drop every superseded epoch no reader pins.
+
+        Each epoch's map is self-contained, so any unpinned non-latest epoch
+        can go independently of its neighbors.  Handles shared with a
+        retained epoch (by identity) survive; handles unique to the dead
+        epochs lose their store reference here, which frees their device
+        buffers once no outside view holds them.
+        """
+        dead = [
+            k for k, e in self._epochs.items() if k != self._latest and e.pins == 0
+        ]
+        if not dead:
+            return
+        kept_ids = {
+            id(h)
+            for k, e in self._epochs.items()
+            if k not in dead
+            for h in e.handles.values()
+        }
+        for k in dead:
+            e = self._epochs.pop(k)
+            self._stats.reclaimed_epochs += 1
+            for h in e.handles.values():
+                if id(h) not in kept_ids:
+                    self._stats.reclaimed_handles += 1
+                    self._stats.reclaimed_buffers += len(handle_buffers(h))
+
+    # -- observability -------------------------------------------------------
+
+    def active_pins(self) -> int:
+        with self._lock:
+            return sum(e.pins for e in self._epochs.values())
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "epoch": self._latest,
+                "live_epochs": len(self._epochs),
+                "active_pins": sum(e.pins for e in self._epochs.values()),
+                "pins_total": self._stats.pins_total,
+                "reclaimed_epochs": self._stats.reclaimed_epochs,
+                "reclaimed_handles": self._stats.reclaimed_handles,
+                "reclaimed_buffers": self._stats.reclaimed_buffers,
+            }

@@ -31,19 +31,34 @@ arrived EDB facts is treated as an externally-seeded Δ, and the fixpoint is
    introduce new constants rebuild the instance (dense state is
    domain-sized).  Both update directions are transactional: failures
    restore the exact pre-update handles.
-3. :class:`~repro.serve_datalog.plan_cache.PlanCache` memoizes parsed
+3. State is versioned, not mutated (MVCC-lite): every update builds the next
+   epoch of a :class:`~repro.core.versioned_store.VersionedStore` in a
+   private handle map and publishes it atomically.  Readers pin the latest
+   published epoch (:meth:`MaterializedInstance.pin`) and see a consistent
+   snapshot even while a DRed pass is mid-flight; a failed update publishes
+   nothing (rollback is "the epoch never existed"); superseded epochs are
+   reclaimed once their last reader pin drops, so device memory stays
+   bounded under sustained update traffic.
+4. :class:`~repro.serve_datalog.plan_cache.PlanCache` memoizes parsed
    programs/stratifications by fingerprint and pre-traces the hot jitted
    kernels per (fingerprint, capacity bucket) so steady-state traffic never
    re-traces (Adaptive Recursive Query Optimization, arXiv 2312.04282).
-4. :class:`~repro.serve_datalog.server.DatalogServer` fronts an instance with
+5. :class:`~repro.serve_datalog.server.DatalogServer` fronts an instance with
    a request queue and admission batching (modeled on ``train/serve.py``):
    same-relation insert runs and delete runs each coalesce into one update
-   batch; queries hit warm selection executables.  Payload shape/arity is
-   validated at submission, failed coalesced batches fall back per-request
-   behind a rollback-boundary check, and per-request queue/service latencies
-   are recorded with nearest-rank percentiles.
+   batch applied on a single background writer thread, while query batches
+   pin snapshots and are served concurrently — reads never queue behind
+   updates (pass ``snapshot_reads=False`` for the legacy serialized order).
+   Payload shape/arity is validated at submission, failed coalesced batches
+   fall back per-request behind an epoch-based partial-commit check, and
+   per-request queue/service latencies are recorded with nearest-rank
+   percentiles (split idle vs. concurrent-with-update).
+
+See ``docs/architecture.md`` for the layer map and the epoch/snapshot
+lifecycle, and ``docs/serving_api.md`` for the public API contract.
 """
 
+from repro.core.versioned_store import Snapshot, VersionedStore
 from repro.serve_datalog.instance import MaterializedInstance, UpdateStats
 from repro.serve_datalog.plan_cache import CompiledPlan, PlanCache, default_cache
 from repro.serve_datalog.server import DatalogServer, RequestError, ServerStats
@@ -57,4 +72,6 @@ __all__ = [
     "DatalogServer",
     "RequestError",
     "ServerStats",
+    "Snapshot",
+    "VersionedStore",
 ]

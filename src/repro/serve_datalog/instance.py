@@ -1,5 +1,16 @@
 """MaterializedInstance: a fixpointed Datalog program that accepts deltas.
 
+State lives in a :class:`~repro.core.versioned_store.VersionedStore` — an
+append-only chain of published epochs, each a complete immutable handle map.
+Reads (:meth:`MaterializedInstance.query`, :meth:`MaterializedInstance.
+relation`) pin the latest published epoch and see a consistent snapshot no
+matter what a concurrent writer does; writes (:meth:`MaterializedInstance.
+insert_facts`, :meth:`MaterializedInstance.retract_facts`) build the next
+epoch in a *private* handle map and publish it with one atomic pointer swap.
+A failed update publishes nothing — rollback is "the epoch never existed",
+with no backup/restore bookkeeping — and superseded epochs are reclaimed
+once their last reader pin drops (see ``versioned_store.py``).
+
 ``insert_facts(rel, rows)`` treats a batch of new EDB tuples as ΔR and
 resumes semi-naïve iteration from the first affected stratum onward instead
 of recomputing from scratch.  Per affected stratum one of three update modes
@@ -34,12 +45,20 @@ the three insert modes.
 Updates that introduce constants outside the materialized active domain
 rebuild the whole instance (dense arrays and bit matrices are sized by the
 domain); the common serving case — new facts over known entities — stays
-incremental.  Both update directions are transactional: any failure restores
-every pre-update handle (observable by object identity).
+incremental.
+
+Concurrency contract: any number of reader threads, one writer at a time
+(enforced by an internal lock; ``DatalogServer`` runs a single writer
+thread).  A reader holding a :class:`~repro.core.versioned_store.Snapshot`
+from :meth:`MaterializedInstance.pin` observes the pinned epoch bit-for-bit
+even while updates publish, and both update directions are atomic: readers
+see either the whole batch's fixpoint or none of it, never an intermediate
+state.
 """
 
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 
@@ -58,13 +77,20 @@ from repro.core.relation import (
 )
 from repro.core.seminaive import ingest_variants
 from repro.core.setdiff import DSDState, set_difference
+from repro.core.versioned_store import Snapshot, VersionedStore
 from repro.relational.sort import SENTINEL
 from repro.serve_datalog.plan_cache import CompiledPlan, PlanCache, default_cache
 
 
 @dataclass
 class UpdateStats:
-    """What one ``insert_facts`` / ``retract_facts`` batch did, per stratum."""
+    """What one ``insert_facts`` / ``retract_facts`` batch did, per stratum.
+
+    ``epoch`` is the epoch the batch published (the pre-update epoch for
+    no-op batches, which publish nothing).  ``modes`` maps stratum index to
+    the update mode that handled it (``bitmatrix`` / ``delta`` / ``dred`` /
+    ``full``); ``iterations`` to the semi-naïve iteration count.
+    """
 
     relation: str
     requested: int                       # rows in the batch
@@ -75,12 +101,37 @@ class UpdateStats:
     retracted: int = 0                   # IDB tuples retracted across all strata
     seconds: float = 0.0
     full_rebuild: bool = False
+    epoch: int = -1                      # epoch published by this batch
     modes: dict[int, str] = field(default_factory=dict)      # stratum → mode
     iterations: dict[int, int] = field(default_factory=dict)  # stratum → iters
 
 
+@dataclass
+class _WriteTxn:
+    """Private state of one in-flight MVCC write (the next epoch, unbuilt).
+
+    ``store`` starts as a shallow copy of the base epoch's handle map and is
+    mutated freely — handles are immutable, so the base epoch is untouched.
+    ``bm``/``domain`` mirror the bitmatrix residency state and active-domain
+    size the same way.  ``mutated`` gates publication: a no-op batch leaves
+    it False and no epoch is created.
+    """
+
+    base: Snapshot                  # pinned epoch the txn builds on
+    store: dict                     # private next-epoch handle map
+    bm: dict                        # private PBME residency state
+    domain: int                     # next-epoch active-domain size
+    mutated: bool = False
+
+
 class MaterializedInstance:
-    """A program's stratification + fixpointed relations, open for updates."""
+    """A program's stratification + fixpointed relations, open for updates.
+
+    Construction parses/stratifies via the :class:`PlanCache`, evaluates the
+    program to a fixpoint, and installs the result as epoch 0 of the
+    versioned store.  See the module docstring for the read/write model and
+    ``docs/serving_api.md`` for the full API contract.
+    """
 
     def __init__(
         self,
@@ -92,60 +143,112 @@ class MaterializedInstance:
         self.cache = cache or default_cache()
         self.plan: CompiledPlan = self.cache.get(program)
         self.engine = Engine(config)
-        self.engine.run(self.plan.program, edb, strat=self.plan.strat)
+        self.engine.run(self.plan.program, edb, strat=self.plan.strat,
+                        return_numpy=False)
         self.strat = self.plan.strat
-        self.store = self.engine.store
-        self.domain = self.engine.domain
-        self.cache.warm(self.plan, self.domain, buckets=self._hot_buckets())
+        # the engine hands the handle map over: epochs own all handles, so
+        # reclamation of superseded epochs actually frees device buffers
+        self.vstore = VersionedStore(self.engine.take_store(), self.engine.domain)
+        self.cache.warm(self.plan, self.domain, buckets=self._hot_buckets(self.store))
         self.update_log: list[UpdateStats] = []
-        self._bm: dict[int, dict] = {}
-        self._init_bitmatrix_state()
+        self._write_lock = threading.Lock()
+        self._bm: dict[int, dict] = self._init_bitmatrix_state(
+            self.store, self.domain
+        )
 
-    def _hot_buckets(self) -> tuple[int, ...]:
+    # -- the published view --------------------------------------------------
+
+    @property
+    def store(self):
+        """The latest *published* epoch's handle map (read-only view).
+
+        An in-flight update is invisible here until it publishes.
+        """
+        return self.vstore.handles
+
+    @property
+    def domain(self) -> int:
+        """Active-domain size of the latest published epoch."""
+        return self.vstore.domain
+
+    @property
+    def epoch(self) -> int:
+        """Index of the latest published epoch (0 = the initial fixpoint)."""
+        return self.vstore.epoch
+
+    def pin(self) -> Snapshot:
+        """Pin the latest published epoch for consistent reads.
+
+        Pass the snapshot to :meth:`query`/:meth:`relation` (or read
+        ``snapshot.handles`` directly); release it (or use ``with``) when
+        done so the epoch's buffers can be reclaimed.
+        """
+        return self.vstore.pin()
+
+    def _hot_buckets(self, handles: dict) -> tuple[int, ...]:
         """Warm the *actual* materialized capacities, not just defaults."""
         caps = {self.engine.config.capacity_min, 2 * self.engine.config.capacity_min}
-        for h in self.store.values():
+        for h in handles.values():
             if isinstance(h, TupleRelation):
                 caps.add(h.capacity)
         return tuple(sorted(caps))
 
     # -- bitmatrix residency -------------------------------------------------
 
-    def _bm_eligible(self, stratum: Stratum, deleting: bool = False):
+    def _bm_eligible(self, stratum: Stratum, domain: int, deleting: bool = False):
         from repro.core.bitmatrix import eligible_plan
 
-        return eligible_plan(
-            stratum, self.domain, self.engine.config, deleting=deleting
-        )
+        return eligible_plan(stratum, domain, self.engine.config, deleting=deleting)
 
-    def _init_bitmatrix_state(self) -> None:
+    def _init_bitmatrix_state(self, handles: dict, domain: int) -> dict[int, dict]:
         """Keep PBME strata resident as packed matrices between updates."""
         from repro.core.bitmatrix import edges_to_bitmatrix
 
-        self._bm.clear()
+        bm: dict[int, dict] = {}
         for stratum in self.strat.strata:
-            plan = self._bm_eligible(stratum)
-            if plan is None or plan.edb not in self.store:
+            plan = self._bm_eligible(stratum, domain)
+            if plan is None or plan.edb not in handles:
                 continue
-            arc = edges_to_bitmatrix(self.store[plan.edb].to_numpy(), self.domain)
-            m = edges_to_bitmatrix(self.store[plan.idb].to_numpy(), self.domain)
-            self._bm[stratum.index] = {"plan": plan, "arc": arc, "m": m}
+            arc = edges_to_bitmatrix(handles[plan.edb].to_numpy(), domain)
+            m = edges_to_bitmatrix(handles[plan.idb].to_numpy(), domain)
+            bm[stratum.index] = {"plan": plan, "arc": arc, "m": m}
+        return bm
 
     # -- reads ---------------------------------------------------------------
 
     _ALIASES = {"src": 0, "x": 0, "key": 0, "dst": 1, "y": 1, "val": 1, "z": 2}
 
-    def relation(self, rel: str) -> np.ndarray:
-        """Full contents of one relation (EDB or IDB) as numpy rows."""
-        h = self.store.get(rel)
+    def relation(self, rel: str, snapshot: Snapshot | None = None) -> np.ndarray:
+        """Full contents of one relation (EDB or IDB) as numpy rows.
+
+        Reads the latest published epoch, or the given pinned ``snapshot``.
+        """
+        handles = snapshot.handles if snapshot is not None else self.vstore.handles
+        return self._rows_of(handles, rel)
+
+    def _rows_of(self, handles, rel: str) -> np.ndarray:
+        h = handles.get(rel)
         if h is None:
             return np.zeros((0, self.plan.program.arity_of(rel)), np.int32)
         return h.to_numpy()
 
-    def query(self, rel: str, *, where: dict | None = None, **kw) -> np.ndarray:
+    def query(
+        self,
+        rel: str,
+        *,
+        where: dict | None = None,
+        snapshot: Snapshot | None = None,
+        **kw,
+    ) -> np.ndarray:
         """Point/range selection, e.g. ``query("tc", src=3)`` or
         ``query("sssp", val=(0, 10))``; column indices also work via
-        ``where={0: 3, 1: (lo, hi)}``."""
+        ``where={0: 3, 1: (lo, hi)}``.
+
+        Without ``snapshot``, the read pins the latest published epoch for
+        its duration (a consistent view even mid-update); with a pinned
+        :class:`Snapshot` from :meth:`pin`, repeated queries all observe
+        that same epoch.
+        """
         bounds: dict[int, int | tuple[int, int]] = dict(where or {})
         for name, v in kw.items():
             if name not in self._ALIASES:
@@ -154,7 +257,13 @@ class MaterializedInstance:
                     " or where={col_index: bound}"
                 )
             bounds[self._ALIASES[name]] = v
-        rows = self._tuple_rows(rel)
+        if snapshot is not None:
+            return self._query_in(snapshot.handles, rel, bounds)
+        with self.vstore.pin() as snap:
+            return self._query_in(snap.handles, rel, bounds)
+
+    def _query_in(self, handles, rel: str, bounds: dict) -> np.ndarray:
+        rows = self._tuple_rows(handles, rel)
         if rows is None:
             return np.zeros((0, self.plan.program.arity_of(rel)), np.int32)
         if set(bounds) == {0}:
@@ -169,8 +278,8 @@ class MaterializedInstance:
         out, count = self.cache.select(rows, bounds)
         return np.asarray(out[:count])
 
-    def _tuple_rows(self, rel: str):
-        h = self.store.get(rel)
+    def _tuple_rows(self, handles, rel: str):
+        h = handles.get(rel)
         if h is None:
             return None
         if isinstance(h, TupleRelation):
@@ -210,71 +319,93 @@ class MaterializedInstance:
         self.update_log.append(stats)
         return stats
 
-    def _transactional(self, apply_fn):
-        """Run one update atomically: all state restored on any failure.
+    def _transactional(self, stats: UpdateStats, apply_fn):
+        """Run one update as an MVCC write transaction.
 
-        Handles are immutable, so shallow snapshots suffice.  A failure
-        mid-update (max_iters, OOM) must not leave the EDB merged with the
-        fixpoint unrestored — that would silently corrupt every later read
-        AND make retries no-ops (delta already applied).  The rollback
-        boundary is observable from outside: on failure every ``store``
-        entry is the exact pre-update handle object (the server's coalesced
-        fallback relies on this identity check before re-applying).
+        The writer pins its base epoch, copies its handle map (handles are
+        immutable, so a shallow copy is a full private workspace), mutates
+        the copy, and — only on success — publishes it as the next epoch in
+        one atomic pointer swap.  Concurrent readers keep reading published
+        epochs throughout; they can never observe the transaction half-done.
+        On failure nothing is published: every later read still sees the
+        exact pre-update handles (observable by object identity), and a
+        retry starts from an untouched base.  One writer at a time; the
+        instance-level lock serializes accidental concurrent writers.
         """
-        store_backup = dict(self.store)
-        bm_backup = {k: dict(v) for k, v in self._bm.items()}
-        domain_backup = self.domain
-        try:
-            return apply_fn()
-        except Exception:
-            self.store = store_backup
-            self.engine.store = store_backup
-            self._bm = bm_backup
-            self.domain = domain_backup
-            self.engine.domain = domain_backup
-            raise
+        with self._write_lock:
+            base = self.vstore.pin()
+            domain0 = self.engine.domain
+            try:
+                txn = _WriteTxn(
+                    base=base,
+                    store=dict(base.handles),
+                    bm={k: dict(v) for k, v in self._bm.items()},
+                    domain=base.domain,
+                )
+                result = apply_fn(txn)
+                if txn.mutated:
+                    self._bm = txn.bm
+                    stats.epoch = self.vstore.publish(txn.store, txn.domain)
+                else:
+                    stats.epoch = base.epoch
+                return result
+            except Exception:
+                # publish never happened: readers never saw the txn.  The
+                # only engine-global scratch a failed rebuild can leave
+                # behind is the domain — restore it for the next writer.
+                self.engine.domain = domain0
+                raise
+            finally:
+                base.release()
 
     def insert_facts(self, rel: str, rows: np.ndarray) -> UpdateStats:
-        """Apply a batch of new EDB facts and restore the fixpoint."""
+        """Apply a batch of new EDB facts and publish the new fixpoint."""
         t0 = time.perf_counter()
         rows, stats = self._begin_update(rel, rows, "insert")
         if len(rows) == 0:
+            stats.epoch = self.epoch
             return self._finish_update(stats, t0)
-        return self._transactional(lambda: self._apply_insert(rel, rows, stats, t0))
+        return self._transactional(
+            stats, lambda txn: self._apply_insert(txn, rel, rows, stats, t0)
+        )
 
     def _apply_insert(
-        self, rel: str, rows: np.ndarray, stats: UpdateStats, t0: float
+        self, txn: _WriteTxn, rel: str, rows: np.ndarray, stats: UpdateStats,
+        t0: float,
     ) -> UpdateStats:
-        if int(rows.max()) >= self.domain:
-            self._full_rebuild(rel, rows, stats)
+        if int(rows.max()) >= txn.domain:
+            self._full_rebuild(txn, rel, rows, stats)
             return self._finish_update(stats, t0)
 
-        handle: TupleRelation = self.store[rel]
+        handle: TupleRelation = txn.store[rel]
         new_handle, delta_rows, delta_count = handle.insert(rows)
         stats.inserted = delta_count
         if delta_count == 0:
             return self._finish_update(stats, t0)
-        self.store[rel] = new_handle
+        txn.store[rel] = new_handle
+        txn.mutated = True
         dcap = next_bucket(max(delta_count, 1), self.engine.config.capacity_min)
         changed: dict[str, TupleView] = {
-            rel: TupleView(delta_rows[:dcap], delta_count, self.domain)
+            rel: TupleView(delta_rows[:dcap], delta_count, txn.domain)
         }
         nonmono: set[str] = set()
 
         for stratum in self.strat.strata:
-            mode, kinds = self._update_mode(stratum, changed, nonmono)
+            mode, kinds = self._update_mode(txn, stratum, changed, nonmono)
             if mode == "skip":
                 continue
-            if mode == "delta" and stratum.index in self._bm and self._bm_applies(
-                stratum, changed
+            if mode == "delta" and stratum.index in txn.bm and self._bm_applies(
+                txn, stratum, changed
             ):
-                iters, derived = self._bitmatrix_delta(stratum, changed)
+                iters, derived = self._bitmatrix_delta(txn, stratum, changed)
                 stats.modes[stratum.index] = "bitmatrix"
             elif mode == "delta":
-                iters, derived = self._delta_stratum(stratum, changed, nonmono, kinds)
+                iters, derived = self._delta_stratum(
+                    txn, stratum, changed, nonmono, kinds
+                )
                 stats.modes[stratum.index] = "delta"
             else:
-                iters, derived = self._full_stratum(stratum, changed, nonmono)
+                iters, derived = self._full_stratum(txn, stratum, changed, nonmono)
                 stats.modes[stratum.index] = "full"
             stats.iterations[stratum.index] = iters
             stats.derived += derived
@@ -282,7 +413,7 @@ class MaterializedInstance:
         return self._finish_update(stats, t0)
 
     def retract_facts(self, rel: str, rows: np.ndarray) -> UpdateStats:
-        """Apply a batch of EDB deletions and restore the fixpoint (DRed).
+        """Apply a batch of EDB deletions and publish the new fixpoint (DRed).
 
         Delete-and-rederive: the removed tuples become ∇R and propagate
         stratum-by-stratum — tuple-backed strata run the engine's
@@ -290,48 +421,56 @@ class MaterializedInstance:
         strata recompute from scratch, and each stratum hands its net
         old-vs-new diff downstream.  Results are bit-for-bit identical to a
         from-scratch evaluation of the shrunken EDB.  Rows not present are
-        ignored; the operation is transactional like ``insert_facts``.
+        ignored; the operation is atomic like ``insert_facts`` (a failure
+        publishes no epoch).
         """
         t0 = time.perf_counter()
         rows, stats = self._begin_update(rel, rows, "delete")
         if len(rows) == 0:
+            stats.epoch = self.epoch
             return self._finish_update(stats, t0)
-        return self._transactional(lambda: self._apply_retract(rel, rows, stats, t0))
+        return self._transactional(
+            stats, lambda txn: self._apply_retract(txn, rel, rows, stats, t0)
+        )
 
     def _apply_retract(
-        self, rel: str, rows: np.ndarray, stats: UpdateStats, t0: float
+        self, txn: _WriteTxn, rel: str, rows: np.ndarray, stats: UpdateStats,
+        t0: float,
     ) -> UpdateStats:
-        store_old = dict(self.store)        # pre-update handles for DRed bodies
-        handle: TupleRelation = self.store[rel]
+        store_old = dict(txn.base.handles)  # pre-update handles for DRed bodies
+        handle: TupleRelation = txn.store[rel]
         new_handle, removed_rows, removed_count = handle.delete(rows)
         stats.removed = removed_count
         if removed_count == 0:
             return self._finish_update(stats, t0)
-        self.store[rel] = new_handle
+        txn.store[rel] = new_handle
+        txn.mutated = True
         dcap = next_bucket(max(removed_count, 1), self.engine.config.capacity_min)
         deleted: dict[str, TupleView] = {
-            rel: TupleView(removed_rows[:dcap], removed_count, self.domain)
+            rel: TupleView(removed_rows[:dcap], removed_count, txn.domain)
         }
         changed: dict[str, TupleView] = {}
         nonmono: set[str] = set()
 
         for stratum in self.strat.strata:
-            mode, kinds = self._retract_mode(stratum, deleted, changed, nonmono)
+            mode, kinds = self._retract_mode(txn, stratum, deleted, changed, nonmono)
             if mode == "skip":
                 continue
-            if mode == "delta" and stratum.index in self._bm and self._bm_applies(
-                stratum, changed
+            if mode == "delta" and stratum.index in txn.bm and self._bm_applies(
+                txn, stratum, changed
             ):
-                iters, derived = self._bitmatrix_delta(stratum, changed)
+                iters, derived = self._bitmatrix_delta(txn, stratum, changed)
                 stats.modes[stratum.index] = "bitmatrix"
                 stats.derived += derived
             elif mode == "delta":
-                iters, derived = self._delta_stratum(stratum, changed, nonmono, kinds)
+                iters, derived = self._delta_stratum(
+                    txn, stratum, changed, nonmono, kinds
+                )
                 stats.modes[stratum.index] = "delta"
                 stats.derived += derived
             elif mode == "dred":
                 iters, net_del, net_add = self.engine.dred_stratum(
-                    self.strat, stratum, self.store, store_old,
+                    self.strat, stratum, txn.store, store_old,
                     deleted, changed, kinds, self.plan.groups_for(stratum.index),
                 )
                 deleted.update(net_del)
@@ -340,7 +479,9 @@ class MaterializedInstance:
                 stats.retracted += sum(v.count for v in net_del.values())
                 stats.derived += sum(v.count for v in net_add.values())
             else:
-                iters, n_add, n_del = self._full_stratum_diff(stratum, deleted, changed)
+                iters, n_add, n_del = self._full_stratum_diff(
+                    txn, stratum, deleted, changed
+                )
                 stats.modes[stratum.index] = "full"
                 stats.derived += n_add
                 stats.retracted += n_del
@@ -351,7 +492,11 @@ class MaterializedInstance:
     # -- update-mode selection ----------------------------------------------
 
     def _update_mode(
-        self, stratum: Stratum, changed: dict[str, TupleView], nonmono: set[str]
+        self,
+        txn: _WriteTxn,
+        stratum: Stratum,
+        changed: dict[str, TupleView],
+        nonmono: set[str],
     ) -> tuple[str, dict[str, str] | None]:
         """(mode, handle kinds) — kinds computed once here, reused by the
         delta path so `_init_handles` runs a single time per stratum."""
@@ -366,7 +511,7 @@ class MaterializedInstance:
             for a in r.atoms
         ):
             return "full", None   # growth of a negated relation retracts facts
-        kinds = self.engine._init_handles(self.strat, stratum, self.store, fresh=False)
+        kinds = self.engine._init_handles(self.strat, stratum, txn.store, fresh=False)
         if any(
             r.has_aggregate and kinds.get(r.head_pred) != "dense_agg"
             for r in stratum.rules
@@ -376,6 +521,7 @@ class MaterializedInstance:
 
     def _retract_mode(
         self,
+        txn: _WriteTxn,
         stratum: Stratum,
         deleted: dict[str, TupleView],
         changed: dict[str, TupleView],
@@ -406,7 +552,7 @@ class MaterializedInstance:
             for a in r.atoms
         ):
             return "full", None
-        kinds = self.engine._init_handles(self.strat, stratum, self.store, fresh=False)
+        kinds = self.engine._init_handles(self.strat, stratum, txn.store, fresh=False)
         if not refs & set(deleted):
             if any(
                 r.has_aggregate and kinds.get(r.head_pred) != "dense_agg"
@@ -418,19 +564,23 @@ class MaterializedInstance:
             return "full", None
         if any(kinds[p] != "tuple" for p in stratum.preds):
             return "full", None
-        if stratum.index in self._bm and self._bm_eligible(
-            stratum, deleting=True
+        if stratum.index in txn.bm and self._bm_eligible(
+            stratum, txn.domain, deleting=True
         ) is None:
             return "full", None
         return "dred", kinds
 
-    def _bm_applies(self, stratum: Stratum, changed: dict[str, TupleView]) -> bool:
+    def _bm_applies(
+        self, txn: _WriteTxn, stratum: Stratum, changed: dict[str, TupleView]
+    ) -> bool:
         refs = {a.pred for r in stratum.rules for a in r.atoms}
-        return refs & set(changed) == {self._bm[stratum.index]["plan"].edb}
+        return refs & set(changed) == {txn.bm[stratum.index]["plan"].edb}
 
     # -- the three update paths ----------------------------------------------
 
-    def _bitmatrix_delta(self, stratum: Stratum, changed: dict[str, TupleView]):
+    def _bitmatrix_delta(
+        self, txn: _WriteTxn, stratum: Stratum, changed: dict[str, TupleView]
+    ):
         from repro.core.bitmatrix import (
             bitmatrix_to_edges,
             edges_to_bitmatrix,
@@ -439,30 +589,31 @@ class MaterializedInstance:
             tc_increment,
         )
 
-        st = self._bm[stratum.index]
+        st = txn.bm[stratum.index]
         plan = st["plan"]
         view = changed[plan.edb]
         d_edges = np.asarray(view.rows[: max(view.count, 1)])[: view.count]
-        d_arc = edges_to_bitmatrix(d_edges, self.domain)
+        d_arc = edges_to_bitmatrix(d_edges, txn.domain)
         st["arc"] = st["arc"] | d_arc
         m_old = st["m"]
         fix = tc_increment if plan.kind == "tc" else sg_increment
         m_new, iters = fix(
-            m_old, st["arc"], d_arc, self.domain, use_pallas=plan.use_pallas
+            m_old, st["arc"], d_arc, txn.domain, use_pallas=plan.use_pallas
         )
         st["m"] = m_new
         new_pairs = m_new & ~m_old
         count = int(popcount(new_pairs))
         if count:
-            rows_np = bitmatrix_to_edges(new_pairs, self.domain)
+            rows_np = bitmatrix_to_edges(new_pairs, txn.domain)
             cap = next_bucket(len(rows_np), self.engine.config.capacity_min)
-            dr = _sort_pad(jnp.asarray(rows_np), cap, self.domain)
-            self.store[plan.idb] = self.store[plan.idb].merge(dr, len(rows_np))
-            changed[plan.idb] = TupleView(dr, len(rows_np), self.domain)
+            dr = _sort_pad(jnp.asarray(rows_np), cap, txn.domain)
+            txn.store[plan.idb] = txn.store[plan.idb].merge(dr, len(rows_np))
+            changed[plan.idb] = TupleView(dr, len(rows_np), txn.domain)
         return iters, count
 
     def _delta_stratum(
         self,
+        txn: _WriteTxn,
         stratum: Stratum,
         changed: dict[str, TupleView],
         nonmono: set[str],
@@ -472,18 +623,18 @@ class MaterializedInstance:
         dsd_state = {p: DSDState(alpha=eng.config.alpha) for p in stratum.preds}
         deltas: dict[str, TupleView | None] = {p: None for p in stratum.preds}
         deltas.update(changed)          # external Δ views, read by ingest variants
-        snapshots = {p: self._snapshot(p) for p in stratum.preds}
+        snapshots = {p: self._handle_snapshot(txn.store, p) for p in stratum.preds}
 
         groups = ingest_variants(stratum, set(changed))
         for pred in stratum.preds:
             rec = eng._eval_idb_iteration(
-                self.strat, stratum, self.store, handles, deltas, dsd_state,
+                self.strat, stratum, txn.store, handles, deltas, dsd_state,
                 pred, groups[pred], 0,
             )
             eng.stats.records.append(rec)
         if stratum.recursive:
             eng._seminaive_loop(
-                self.strat, stratum, self.store, handles, deltas, dsd_state,
+                self.strat, stratum, txn.store, handles, deltas, dsd_state,
                 self.plan.groups_for(stratum.index), start_iteration=1,
             )
         iters = eng.stats.iterations.get(stratum.index, 1) if stratum.recursive else 1
@@ -496,35 +647,43 @@ class MaterializedInstance:
                 # logical retraction of the old (key, value) tuple at the
                 # relational level — downstream consumers holding the old
                 # tuple must recompute, exactly like the negation fallback.
-                h = self.store[pred]
+                h = txn.store[pred]
                 improved = h.values != snap[1]
                 overwritten = improved & (snap[1] != h.absent)
                 if bool(overwritten.any()):
                     nonmono.add(pred)
                     derived += int(improved.sum())
                     continue
-            view = self._delta_since(pred, snap)
+            view = self._delta_since(txn, pred, snap)
             if view is not None:
                 changed[pred] = view
                 derived += view.count
         return iters, derived
 
     def _full_stratum(
-        self, stratum: Stratum, changed: dict[str, TupleView], nonmono: set[str]
+        self,
+        txn: _WriteTxn,
+        stratum: Stratum,
+        changed: dict[str, TupleView],
+        nonmono: set[str],
     ):
-        iters, derived, _ = self._recompute_stratum(stratum, changed, nonmono=nonmono)
+        iters, derived, _ = self._recompute_stratum(
+            txn, stratum, changed, nonmono=nonmono
+        )
         return iters, derived
 
     def _full_stratum_diff(
         self,
+        txn: _WriteTxn,
         stratum: Stratum,
         deleted: dict[str, TupleView],
         changed: dict[str, TupleView],
     ) -> tuple[int, int, int]:
-        return self._recompute_stratum(stratum, changed, deleted=deleted)
+        return self._recompute_stratum(txn, stratum, changed, deleted=deleted)
 
     def _recompute_stratum(
         self,
+        txn: _WriteTxn,
         stratum: Stratum,
         changed: dict[str, TupleView],
         nonmono: set[str] | None = None,
@@ -539,53 +698,66 @@ class MaterializedInstance:
         downstream, where each stratum picks DRed, delta, or full itself.
         Returns ``(iterations, n_added, n_removed)``.
         """
-        old = {p: self.relation(p) for p in stratum.preds}
+        old = {p: self._rows_of(txn.store, p) for p in stratum.preds}
         for p in stratum.preds:
-            self.store.pop(p, None)
-        self.engine._eval_stratum(self.strat, stratum, self.store)
+            txn.store.pop(p, None)
+        self.engine._eval_stratum(self.strat, stratum, txn.store)
         n_add = n_del = 0
         for p in stratum.preds:
             old_set = set(map(tuple, old[p].tolist()))
-            new_set = set(map(tuple, self.relation(p).tolist()))
+            new_set = set(map(tuple, self._rows_of(txn.store, p).tolist()))
             fresh = sorted(new_set - old_set)
             gone = sorted(old_set - new_set)
             n_add += len(fresh)
             n_del += len(gone)
             if gone and deleted is not None:
-                deleted[p] = self._view_from_numpy(np.array(gone, np.int32))
+                deleted[p] = self._view_from_numpy(
+                    np.array(gone, np.int32), txn.domain
+                )
             if gone and nonmono is not None:
                 nonmono.add(p)      # retractions: taint downstream strata
             elif fresh:
-                changed[p] = self._view_from_numpy(np.array(fresh, np.int32))
-            if stratum.index in self._bm and self._bm[stratum.index]["plan"].idb == p:
-                self._refresh_bitmatrix(stratum.index)
+                changed[p] = self._view_from_numpy(
+                    np.array(fresh, np.int32), txn.domain
+                )
+            if stratum.index in txn.bm and txn.bm[stratum.index]["plan"].idb == p:
+                self._refresh_bitmatrix(txn, stratum.index)
         return self.engine.stats.iterations.get(stratum.index, 1), n_add, n_del
 
-    def _full_rebuild(self, rel: str, rows: np.ndarray, stats: UpdateStats) -> None:
-        """Domain growth: dense state is sized by the active domain → rebuild."""
+    def _full_rebuild(
+        self, txn: _WriteTxn, rel: str, rows: np.ndarray, stats: UpdateStats
+    ) -> None:
+        """Domain growth: dense state is sized by the active domain → rebuild.
+
+        The rebuilt fixpoint becomes the transaction's next-epoch state just
+        like an incremental one — readers keep the old domain's epoch until
+        the rebuild publishes.
+        """
         stats.full_rebuild = True
         old_counts = {
-            p: getattr(self.store.get(p), "count", 0) for p in self.strat.idb
+            p: getattr(txn.store.get(p), "count", 0) for p in self.strat.idb
         }
-        edb = {name: self.relation(name) for name in self.strat.edb}
+        edb = {name: self._rows_of(txn.store, name) for name in self.strat.edb}
         before = len(np.unique(np.concatenate([edb[rel], rows]), axis=0))
         stats.inserted = before - len(edb[rel])
         edb[rel] = np.concatenate([edb[rel], rows])
-        self.engine.run(self.plan.program, edb, strat=self.plan.strat)
-        self.store = self.engine.store
-        self.domain = self.engine.domain
+        self.engine.run(self.plan.program, edb, strat=self.plan.strat,
+                        return_numpy=False)
+        txn.store = self.engine.take_store()
+        txn.domain = self.engine.domain
+        txn.mutated = True
         # executables are per-domain: re-warm for the grown domain
-        self.cache.warm(self.plan, self.domain, buckets=self._hot_buckets())
-        self._init_bitmatrix_state()
+        self.cache.warm(self.plan, txn.domain, buckets=self._hot_buckets(txn.store))
+        txn.bm = self._init_bitmatrix_state(txn.store, txn.domain)
         for p in self.strat.idb:
             stats.derived += max(
-                getattr(self.store.get(p), "count", 0) - old_counts[p], 0
+                getattr(txn.store.get(p), "count", 0) - old_counts[p], 0
             )
 
     # -- delta bookkeeping -----------------------------------------------------
 
-    def _snapshot(self, pred: str):
-        h = self.store.get(pred)
+    def _handle_snapshot(self, store: dict, pred: str):
+        h = store.get(pred)
         if isinstance(h, TupleRelation):
             return ("tuple", h.rows, h.count)
         if isinstance(h, DenseSetRelation):
@@ -594,20 +766,20 @@ class MaterializedInstance:
             return ("dense_agg", h.values)
         return ("absent",)
 
-    def _delta_since(self, pred: str, snap) -> TupleView | None:
-        h = self.store.get(pred)
+    def _delta_since(self, txn: _WriteTxn, pred: str, snap) -> TupleView | None:
+        h = txn.store.get(pred)
         cap_min = self.engine.config.capacity_min
         if snap[0] == "tuple":
             _, old_rows, old_count = snap
             if h.count == old_count:
                 return None
             rows, count, _ = set_difference(
-                h.rows, h.count, old_rows, old_count, self.domain, DSDState()
+                h.rows, h.count, old_rows, old_count, txn.domain, DSDState()
             )
             if count == 0:
                 return None
             return TupleView(
-                rows[: next_bucket(max(count, 1), cap_min)], count, self.domain
+                rows[: next_bucket(max(count, 1), cap_min)], count, txn.domain
             )
         if snap[0] == "dense_set":
             mask = h.member & ~snap[1]
@@ -616,7 +788,7 @@ class MaterializedInstance:
                 return None
             view = DenseSetRelation(h.name, h.n, h.member, mask, h.count, count)
             rows, _ = view.delta_tuples(next_bucket(count, cap_min))
-            return TupleView(rows, count, self.domain)
+            return TupleView(rows, count, txn.domain)
         if snap[0] == "dense_agg":
             mask = h.values != snap[1]
             count = int(mask.sum())
@@ -626,25 +798,25 @@ class MaterializedInstance:
                 h.name, h.n, h.op, h.values, mask, h.count, count
             )
             rows, _ = view.delta_tuples(next_bucket(count, cap_min))
-            return TupleView(rows, count, self.domain)
+            return TupleView(rows, count, txn.domain)
         # pred absent before this stratum ran: everything it now holds is new
         if h is None:
             return None
         data = h.to_numpy()
-        return self._view_from_numpy(data) if len(data) else None
+        return self._view_from_numpy(data, txn.domain) if len(data) else None
 
-    def _view_from_numpy(self, data: np.ndarray) -> TupleView:
+    def _view_from_numpy(self, data: np.ndarray, domain: int) -> TupleView:
         cap = next_bucket(len(data), self.engine.config.capacity_min)
-        rows = _sort_pad(jnp.asarray(data.astype(np.int32)), cap, self.domain)
-        return TupleView(rows, len(data), self.domain)
+        rows = _sort_pad(jnp.asarray(data.astype(np.int32)), cap, domain)
+        return TupleView(rows, len(data), domain)
 
-    def _refresh_bitmatrix(self, stratum_index: int) -> None:
+    def _refresh_bitmatrix(self, txn: _WriteTxn, stratum_index: int) -> None:
         from repro.core.bitmatrix import edges_to_bitmatrix
 
-        st = self._bm[stratum_index]
+        st = txn.bm[stratum_index]
         st["arc"] = edges_to_bitmatrix(
-            self.store[st["plan"].edb].to_numpy(), self.domain
+            txn.store[st["plan"].edb].to_numpy(), txn.domain
         )
         st["m"] = edges_to_bitmatrix(
-            self.store[st["plan"].idb].to_numpy(), self.domain
+            txn.store[st["plan"].idb].to_numpy(), txn.domain
         )

@@ -82,7 +82,14 @@ def _select_rows(rows: jax.Array, lov: jax.Array, hiv: jax.Array, mask: tuple):
 
 
 class PlanCache:
-    """LRU of :class:`CompiledPlan` + warmed-executable bookkeeping."""
+    """LRU of :class:`CompiledPlan` + warmed-executable bookkeeping.
+
+    One :func:`default_cache` instance is shared process-wide so every
+    instance/server reuses warm executables; pass a private ``PlanCache`` to
+    isolate tenants.  ``select`` is safe to call from reader threads while a
+    writer updates the instance — it touches only jitted pure functions and
+    the (GIL-guarded) warmth bookkeeping.
+    """
 
     def __init__(self, capacity: int = 32):
         self.capacity = capacity

@@ -8,24 +8,43 @@ slots:
   the same relation are coalesced into ONE ``insert_facts`` /
   ``retract_facts`` call (one delta-ingest or DRed pass amortizes the
   per-iteration fixed costs over the whole admission batch);
-* *point/range queries* — answered against the materialized store through
+* *point/range queries* — answered against a pinned epoch snapshot through
   the plan cache's warm selection executables.
 
-The loop preserves submission order across kinds (a query submitted after an
-insert or delete sees its effects), which is why only *runs* of same-relation
-same-kind updates coalesce — never across an intervening query or across an
-insert/delete boundary.
+Concurrency (MVCC-lite, the default)
+------------------------------------
+
+Updates run on a single background *writer thread*; query batches never
+queue behind them.  Each query batch pins the latest **published** epoch of
+the instance's :class:`~repro.core.versioned_store.VersionedStore` and reads
+a consistent snapshot even while an update is mid-flight — one slow DRed
+pass no longer stalls every reader.  The visibility contract is therefore
+*snapshot consistency*, not strict submission order: a query observes every
+update that **published** before the query batch pinned its epoch, and never
+observes a half-applied batch.  Updates still apply in submission order
+(there is exactly one in-flight writer), so once :meth:`DatalogServer.run`
+returns, reads reflect every submitted update bit-for-bit.
+
+Pass ``snapshot_reads=False`` for the legacy serialized loop: requests are
+then served strictly in submission order (a query sees the effects of every
+earlier update — read-your-writes at the cost of queueing behind them).
+
+Failure handling
+----------------
 
 Malformed payloads (unknown relation, arity mismatch) are rejected at
 ``submit_*`` time, so an admitted batch can always be concatenated; failures
 that only surface at apply time (e.g. negative ids) fall back to per-request
-application, guarded by a rollback-boundary check so a partially-committed
-coalesced batch is never double-applied.
+application.  A failed update publishes no epoch (MVCC rollback is "the
+epoch never existed"), so the fallback can never double-apply — the guard
+that verifies this checks the epoch counter, and refuses replay if a failed
+attempt somehow left published state behind.
 """
 
 from __future__ import annotations
 
 import math
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field, replace
@@ -60,18 +79,34 @@ class RequestRecord:
     batch_size: int              # admission-batch size this request rode in
     queued_seconds: float
     service_seconds: float
+    epoch: int = -1              # epoch read (queries) / published (updates)
+    concurrent: bool = False     # query served while an update was in flight
 
 
 @dataclass
 class ServerStats:
+    """Bounded per-request records + percentile helpers.
+
+    ``latency(kind=..., concurrent=...)`` filters by request kind and — for
+    queries — by whether the batch was served while a writer was in flight,
+    which is how the serving benchmark separates idle-read latency from
+    read-during-update latency.
+    """
+
     # bounded: long-lived servers must not accumulate per-request state
     records: deque = field(default_factory=lambda: deque(maxlen=65536))
 
-    def latency(self, kind: str | None = None, include_queue: bool = True) -> dict:
+    def latency(
+        self,
+        kind: str | None = None,
+        include_queue: bool = True,
+        concurrent: bool | None = None,
+    ) -> dict:
         lats = sorted(
             (r.queued_seconds if include_queue else 0.0) + r.service_seconds
             for r in self.records
-            if kind is None or r.kind == kind
+            if (kind is None or r.kind == kind)
+            and (concurrent is None or r.concurrent == concurrent)
         )
         if not lats:
             return {"count": 0}
@@ -88,21 +123,30 @@ class ServerStats:
 
 
 class DatalogServer:
-    """Queue + admission batching over one materialized instance."""
+    """Queue + admission batching over one materialized instance.
+
+    ``snapshot_reads=True`` (default) is the MVCC mode described in the
+    module docstring; ``snapshot_reads=False`` restores the legacy strictly
+    serialized loop.  Either way there is at most one in-flight update.
+    """
 
     def __init__(
         self,
         instance: MaterializedInstance,
         max_batch: int = 64,
         history: int = 4096,
+        snapshot_reads: bool = True,
     ):
         self.instance = instance
         self.max_batch = max_batch
         self.history = history       # completed results retained for pickup
+        self.snapshot_reads = snapshot_reads
         self.queue: deque[_Request] = deque()
-        self.done: dict[int, np.ndarray | UpdateStats] = {}
+        self.done: dict[int, np.ndarray | UpdateStats | RequestError] = {}
         self.stats = ServerStats()
         self._next_id = 0
+        # (thread, group, out, t0, base_epoch) of the one in-flight update
+        self._writer: tuple | None = None
 
     # -- submission ----------------------------------------------------------
 
@@ -153,50 +197,153 @@ class DatalogServer:
 
     def run(self) -> dict[int, np.ndarray | UpdateStats | RequestError]:
         """Drain the queue; returns rid → query rows, UpdateStats, or
-        RequestError.  Failures are isolated per request: a bad update in a
-        coalesced batch falls back to per-request application so its valid
-        neighbors still land, and never stalls the requests behind it."""
-        while self.queue:
+        RequestError.
+
+        Update batches run on the writer thread (one at a time, in
+        submission order); query batches are served immediately against a
+        pinned snapshot of the latest published epoch.  Failures are
+        isolated per request: a bad update in a coalesced batch falls back
+        to per-request application so its valid neighbors still land, and
+        never stalls the requests behind it.  On return every submitted
+        update has published (or failed) — subsequent reads see the final
+        fixpoint.
+        """
+        while self.queue or self._writer is not None:
+            if self.snapshot_reads:
+                qgroup = self._pop_query_run()
+                if qgroup:
+                    # MVCC read path: never wait on the in-flight writer
+                    self._serve_queries(qgroup)
+                    continue
+            if not self.queue:
+                self._reap_writer()
+                continue
+            # updates serialize behind the in-flight writer (and in legacy
+            # mode, queries do too)
+            self._reap_writer()
             group = self._admit()
-            t0 = time.perf_counter()
-            if group[0].kind in self._UPDATE_FNS:
-                results = self._apply_update_group(group)
+            if group[0].kind not in self._UPDATE_FNS:
+                self._serve_queries(group)
+            elif self.snapshot_reads:
+                self._start_writer(group)
             else:
-                results = {
-                    r.rid: self._apply(
-                        lambda r=r: self.instance.query(
-                            r.rel, where=r.payload["where"], **r.payload["kw"]
-                        ),
-                        r.rid,
-                    )
-                    for r in group
-                }
-            t1 = time.perf_counter()
-            per_req = (t1 - t0) / len(group)
-            for r in group:
-                self.done[r.rid] = results[r.rid]
-                self.stats.records.append(
-                    RequestRecord(
-                        r.rid, r.kind, r.rel, len(group),
-                        t0 - r.submitted, per_req,
-                    )
+                # legacy mode: apply inline — a thread would be join()ed
+                # immediately anyway
+                t0 = time.perf_counter()
+                results = self._apply_update_group(group)
+                self._record(
+                    group, results, t0, time.perf_counter(),
+                    self.instance.epoch, False,
                 )
-            while len(self.done) > self.history:     # evict oldest results
-                self.done.pop(next(iter(self.done)))
+        self._reap_writer()
         return self.done
+
+    def _pop_query_run(self) -> list[_Request] | None:
+        """The next query run the MVCC loop may serve right now.
+
+        Normally the run at the queue head.  When the head is an update that
+        cannot start yet (a writer is still in flight), queries deeper in
+        the queue would otherwise wait out the *current* update too — so the
+        first query run beyond the blocked head is served instead.  Under
+        snapshot visibility that reordering is sound: the overtaken updates
+        had not published, and the queries read a consistent earlier epoch.
+        """
+        if not self.queue:
+            return None
+        if self.queue[0].kind == "query":
+            return self._admit()
+        if self._writer is None or not self._writer[0].is_alive():
+            return None        # the head update can start (after a cheap reap)
+        idx = next(
+            (i for i, r in enumerate(self.queue) if r.kind == "query"), None
+        )
+        if idx is None:
+            return None
+        group: list[_Request] = []
+        while (
+            len(group) < self.max_batch
+            and idx < len(self.queue)
+            and self.queue[idx].kind == "query"
+        ):
+            group.append(self.queue[idx])
+            del self.queue[idx]
+        return group
+
+    # -- query batches (reader path) ------------------------------------------
+
+    def _serve_queries(self, group: list[_Request]) -> None:
+        t0 = time.perf_counter()
+        snap = self.instance.pin()
+        # "concurrent" = an update is genuinely mid-flight AND this batch
+        # pinned the writer's base epoch — a writer that already published
+        # (even if its thread hasn't exited) no longer affects this read,
+        # which must count as idle in the latency split
+        writer = self._writer
+        concurrent = (
+            writer is not None and writer[0].is_alive() and snap.epoch == writer[4]
+        )
+        try:
+            results = {
+                r.rid: self._apply(
+                    lambda r=r: self.instance.query(
+                        r.rel,
+                        where=r.payload["where"],
+                        snapshot=snap,
+                        **r.payload["kw"],
+                    ),
+                    r.rid,
+                )
+                for r in group
+            }
+        finally:
+            snap.release()
+        self._record(group, results, t0, time.perf_counter(), snap.epoch, concurrent)
+
+    # -- update batches (writer path) -----------------------------------------
+
+    def _start_writer(self, group: list[_Request]) -> None:
+        t0 = time.perf_counter()
+        out: dict = {}
+
+        def work() -> None:
+            try:
+                out["results"] = self._apply_update_group(group)
+            finally:
+                out["t1"] = time.perf_counter()
+                out["epoch"] = self.instance.epoch
+
+        th = threading.Thread(target=work, name="datalog-writer", daemon=True)
+        self._writer = (th, group, out, t0, self.instance.epoch)
+        th.start()
+
+    def _reap_writer(self) -> None:
+        """Join the in-flight update batch (if any) and record its results."""
+        if self._writer is None:
+            return
+        th, group, out, t0, _epoch0 = self._writer
+        th.join()
+        self._writer = None
+        results = out.get("results") or {
+            r.rid: RequestError(r.rid, "writer thread died before producing results")
+            for r in group
+        }
+        self._record(
+            group, results, t0, out.get("t1", time.perf_counter()),
+            out.get("epoch", -1), False,
+        )
 
     def _apply_update_group(self, group: list[_Request]):
         """One coalesced insert/delete batch, with isolated fallback.
 
         Each rid gets its OWN stats slice (``requested`` is the request's row
         count; batch-level fields are copies, not aliases — mutating one
-        result must never bleed into its batch neighbors').  The fallback
-        re-applies per request only after verifying the instance rolled the
-        coalesced attempt back (handle identity — handles are immutable), so
-        a partial commit can never be double-applied.
+        result must never bleed into its batch neighbors').  A failed
+        coalesced attempt publishes no epoch (MVCC rollback), so per-request
+        replay cannot double-apply; the epoch counter is checked anyway, and
+        replay is refused if a failure somehow left published state behind.
         """
         fn = getattr(self.instance, self._UPDATE_FNS[group[0].kind])
-        before = self.instance.store.get(group[0].rel)
+        epoch0 = self.instance.epoch
         try:
             rows = np.concatenate([r.payload for r in group])
             batch = fn(group[0].rel, rows)
@@ -210,9 +357,9 @@ class DatalogServer:
                 for r in group
             }
         except Exception:
-            if self.instance.store.get(group[0].rel) is not before:
-                # rollback boundary violated: the coalesced attempt left
-                # partial state — re-applying would double-apply rows
+            if self.instance.epoch != epoch0:
+                # a failed attempt must publish nothing — if an epoch landed
+                # anyway, re-applying would double-apply the committed rows
                 return {
                     r.rid: RequestError(
                         r.rid,
@@ -226,6 +373,29 @@ class DatalogServer:
                 for r in group
             }
 
+    # -- shared bookkeeping ---------------------------------------------------
+
+    def _record(
+        self,
+        group: list[_Request],
+        results: dict,
+        t0: float,
+        t1: float,
+        epoch: int,
+        concurrent: bool,
+    ) -> None:
+        per_req = (t1 - t0) / len(group)
+        for r in group:
+            self.done[r.rid] = results[r.rid]
+            self.stats.records.append(
+                RequestRecord(
+                    r.rid, r.kind, r.rel, len(group),
+                    t0 - r.submitted, per_req, epoch, concurrent,
+                )
+            )
+        while len(self.done) > self.history:     # evict oldest results
+            self.done.pop(next(iter(self.done)))
+
     @staticmethod
     def _apply(fn, rid: int):
         try:
@@ -236,7 +406,8 @@ class DatalogServer:
     def _admit(self) -> list[_Request]:
         """Admission batch: the longest same-kind run at the queue head —
         same-relation runs for inserts/deletes (they coalesce into one update
-        batch), any run of queries (they share the warm executables)."""
+        batch), any run of queries (they share the warm executables and one
+        pinned snapshot)."""
         head = self.queue.popleft()
         group = [head]
         while self.queue and len(group) < self.max_batch:
@@ -247,3 +418,13 @@ class DatalogServer:
                 break
             group.append(self.queue.popleft())
         return group
+
+    def mvcc_stats(self) -> dict:
+        """Epoch/pin/reclamation counters plus how many query *requests*
+        were served while an update was in flight (per-request, matching
+        ``ServerStats.latency(concurrent=True)['count']``)."""
+        s = self.instance.vstore.stats()
+        s["concurrent_reads"] = sum(
+            1 for r in self.stats.records if r.kind == "query" and r.concurrent
+        )
+        return s

@@ -404,10 +404,13 @@ else:
 
 
 def test_server_delete_coalescing_and_ordering(rng):
+    """Legacy serialized mode (snapshot_reads=False): queries see the state
+    as of their queue position; delete runs still coalesce into one DRed
+    batch.  MVCC-mode visibility is covered in test_snapshot_reads.py."""
     n = 16
     edges = random_edges(rng, n, 40)
     inst = MaterializedInstance(TC, {"arc": edges}, EngineConfig(backend="tuple"))
-    srv = DatalogServer(inst, max_batch=8)
+    srv = DatalogServer(inst, max_batch=8, snapshot_reads=False)
     pre = srv.submit_query("tc")
     dels = [srv.submit_delete("arc", edges[-4 + i : -3 + i]) for i in range(3)]
     post = srv.submit_query("tc")

@@ -367,19 +367,24 @@ def test_server_mixed_workload(rng):
     edges = random_edges(rng, n, 50)
     base, extra = edges[:-10], edges[-10:]
     inst = MaterializedInstance(TC, {"arc": base})
+    src = int(edges[0, 0])
+    pre_set = _as_set(inst.query("tc", src=src))
     srv = DatalogServer(inst, max_batch=8)
 
-    q0 = srv.submit_query("tc", src=int(edges[0, 0]))
+    q0 = srv.submit_query("tc", src=src)
     ins = [srv.submit_insert("arc", extra[i : i + 2]) for i in range(0, 10, 2)]
-    q1 = srv.submit_query("tc", src=int(edges[0, 0]))
+    q1 = srv.submit_query("tc", src=src)
     done = srv.run()
 
-    # queries see the state as of their queue position
+    # snapshot reads: q1 rides beside the coalesced insert batch and sees a
+    # consistent published epoch — the pre-update fixpoint if the writer is
+    # still in flight, the post-update one if it already published
     want_final = tc_oracle(adj_of(edges, n))
-    src = int(edges[0, 0])
-    assert _as_set(done[q1]) == {
-        (src, v) for v in np.nonzero(want_final[src])[0]
-    }
+    final_set = {(src, int(v)) for v in np.nonzero(want_final[src])[0]}
+    assert _as_set(done[q0]) == pre_set
+    assert _as_set(done[q1]) in (pre_set, final_set)
+    # once run() returns, every update has published: reads are exact
+    assert _as_set(inst.query("tc", src=src)) == final_set
     # consecutive same-relation inserts coalesced into ONE update batch —
     # but each rid owns its stats slice: requested is per-request, and no
     # two results alias (mutating one must not bleed into its neighbors)
@@ -431,10 +436,11 @@ def test_server_isolates_failing_requests(rng):
     good1 = srv.submit_insert("arc", edges[-4:-2])
     bad = srv.submit_insert("arc", np.array([[-1, 0]], np.int32))
     good2 = srv.submit_insert("arc", edges[-2:])
-    q = srv.submit_query("tc")
     done = srv.run()
     assert isinstance(done[bad], RequestError) and "negative" in done[bad].error
     assert done[good1].inserted + done[good2].inserted == 4   # neighbors landed
+    q = srv.submit_query("tc")      # after run(): every update has published
+    done = srv.run()
     assert _as_set(done[q]) == set(
         zip(*np.nonzero(tc_oracle(adj_of(edges, 14))))
     )
@@ -453,16 +459,23 @@ def test_server_history_is_bounded(rng):
     assert len(done) == 8
 
 
-def test_server_preserves_order_across_kinds(rng):
+def test_server_queries_observe_published_epochs_only(rng):
+    """Under snapshot reads a query returns some *published* fixpoint — the
+    pre-update one while the writer is in flight, the post-update one after
+    it publishes — never an intermediate state.  (Strict submission-order
+    visibility lives behind ``snapshot_reads=False``; see
+    test_snapshot_reads.py.)"""
     n = 16
     edges = random_edges(rng, n, 36)
     inst = MaterializedInstance(TC, {"arc": edges[:-4]})
+    pre_set = _as_set(inst.relation("tc"))
+    final_set = set(zip(*np.nonzero(tc_oracle(adj_of(edges, n)))))
     srv = DatalogServer(inst)
     pre = srv.submit_query("tc")
     srv.submit_insert("arc", edges[-4:])
     post = srv.submit_query("tc")
     done = srv.run()
+    assert _as_set(done[pre]) == pre_set
+    assert _as_set(done[post]) in (pre_set, final_set)
     assert len(done[pre]) <= len(done[post])
-    assert _as_set(done[post]) == set(
-        zip(*np.nonzero(tc_oracle(adj_of(edges, n))))
-    )
+    assert _as_set(inst.relation("tc")) == final_set

@@ -1,0 +1,425 @@
+"""MVCC-lite snapshot semantics for the serving stack.
+
+Three layers under test:
+
+* ``VersionedStore`` — epoch chain, pins, atomic publish, and pin-gated
+  reclamation of superseded handle maps.
+* ``MaterializedInstance`` — readers pinned mid-update see the old epoch, a
+  failed update publishes nothing, reclamation frees superseded handles only
+  after the last pin drops.
+* ``DatalogServer`` — a query admitted while an insert or DRed delete batch
+  is in flight returns the pre-update fixpoint, and post-publish reads are
+  bit-for-bit identical to serialized execution.
+"""
+
+import gc
+import threading
+import time
+import weakref
+
+import numpy as np
+import pytest
+
+from conftest import adj_of, random_edges, tc_oracle
+from repro.configs.datalog_workloads import ALL as WORKLOADS
+from repro.core import Engine, EngineConfig, VersionedStore
+from repro.core.relation import TupleRelation
+from repro.serve_datalog import DatalogServer, MaterializedInstance
+
+TC = WORKLOADS["tc"].program
+
+
+def _as_set(rows):
+    return set(map(tuple, np.asarray(rows).tolist()))
+
+
+# --------------------------------------------------------------------------
+# VersionedStore: epochs, pins, reclamation
+# --------------------------------------------------------------------------
+
+
+def _rel(name, rows, domain=32):
+    return TupleRelation.from_numpy(name, np.array(rows, np.int32), domain)
+
+
+def test_publish_is_atomic_and_latest_wins():
+    a0 = _rel("a", [[0, 1]])
+    vs = VersionedStore({"a": a0}, 32)
+    assert vs.epoch == 0 and vs.handles["a"] is a0
+    a1 = _rel("a", [[0, 1], [1, 2]])
+    assert vs.publish({"a": a1}, 32) == 1
+    assert vs.epoch == 1 and vs.handles["a"] is a1
+    # the unpinned peek tracks latest; its release is a no-op
+    snap = vs.latest()
+    assert snap.epoch == 1
+    snap.release()
+    assert vs.stats()["active_pins"] == 0
+
+
+def test_pinned_epoch_survives_publishes():
+    vs = VersionedStore({"a": _rel("a", [[0, 1]])}, 32)
+    with vs.pin() as snap:
+        for i in range(3):
+            vs.publish({"a": _rel("a", [[0, 1], [1, i + 2]])}, 32)
+        assert snap.epoch == 0
+        assert _as_set(snap.handles["a"].to_numpy()) == {(0, 1)}
+        assert vs.stats()["live_epochs"] == 2    # epoch 0 (pinned) + latest
+    assert vs.stats()["live_epochs"] == 1        # pin dropped → reclaimed
+
+
+def test_snapshot_handles_are_read_only():
+    vs = VersionedStore({"a": _rel("a", [[0, 1]])}, 32)
+    snap = vs.pin()
+    with pytest.raises(TypeError):
+        snap.handles["a"] = None
+    snap.release()
+    snap.release()                               # double release is a no-op
+    assert vs.stats()["active_pins"] == 0
+
+
+def test_reclamation_waits_for_last_pin_and_counts_unique_handles():
+    a0, b0 = _rel("a", [[0, 1]]), _rel("b", [[5, 5]])
+    vs = VersionedStore({"a": a0, "b": b0}, 32)
+    s1 = vs.pin()
+    s2 = vs.pin()
+    # epoch 1 replaces only "a"; "b" is shared with epoch 0 by identity
+    vs.publish({"a": _rel("a", [[0, 1], [1, 2]]), "b": b0}, 32)
+    assert vs.stats()["reclaimed_epochs"] == 0
+    s1.release()
+    assert vs.stats()["reclaimed_epochs"] == 0   # s2 still pins epoch 0
+    s2.release()
+    st = vs.stats()
+    assert st["reclaimed_epochs"] == 1
+    assert st["reclaimed_handles"] == 1          # only the superseded "a"
+    assert st["reclaimed_buffers"] >= 1
+    assert st["live_epochs"] == 1 and st["pins_total"] == 2
+
+
+def test_interior_unpinned_epoch_is_reclaimed_independently():
+    vs = VersionedStore({"a": _rel("a", [[0, 1]])}, 32)
+    pinned = vs.pin()                            # pins epoch 0
+    vs.publish({"a": _rel("a", [[1, 1]])}, 32)   # epoch 1, never pinned
+    vs.publish({"a": _rel("a", [[2, 2]])}, 32)   # epoch 2 (latest)
+    st = vs.stats()
+    assert st["reclaimed_epochs"] == 1           # epoch 1 went immediately
+    assert st["live_epochs"] == 2                # epoch 0 (pinned) + epoch 2
+    assert _as_set(pinned.handles["a"].to_numpy()) == {(0, 1)}
+    pinned.release()
+    assert vs.stats()["live_epochs"] == 1
+
+
+# --------------------------------------------------------------------------
+# MaterializedInstance: snapshot isolation of updates
+# --------------------------------------------------------------------------
+
+
+def test_pinned_reader_sees_old_epoch_across_updates(rng):
+    edges = random_edges(rng, 18, 40)
+    inst = MaterializedInstance(TC, {"arc": edges[:-6]}, EngineConfig(backend="tuple"))
+    old_tc = _as_set(inst.relation("tc"))
+    snap = inst.pin()
+    inst.insert_facts("arc", edges[-6:-3])
+    inst.retract_facts("arc", edges[:2])
+    inst.insert_facts("arc", edges[-3:])
+    # the pinned epoch is bit-for-bit the original fixpoint
+    assert snap.epoch == 0 and inst.epoch == 3
+    assert _as_set(inst.relation("tc", snapshot=snap)) == old_tc
+    assert _as_set(inst.relation("arc", snapshot=snap)) == _as_set(edges[:-6])
+    src = int(edges[0, 0])
+    assert _as_set(inst.query("tc", src=src, snapshot=snap)) == {
+        t for t in old_tc if t[0] == src
+    }
+    snap.release()
+    # unpinned reads track the latest epoch exactly
+    want = tc_oracle(adj_of(np.concatenate([edges[2:]]), 18))
+    assert _as_set(inst.relation("tc")) == set(zip(*np.nonzero(want)))
+
+
+def test_reader_mid_update_sees_pre_update_fixpoint(rng, monkeypatch):
+    """While insert_facts is between EDB merge and publish, every read still
+    returns the pre-update epoch — the MVCC replacement for read locking."""
+    edges = random_edges(rng, 16, 36)
+    inst = MaterializedInstance(TC, {"arc": edges[:-4]}, EngineConfig(backend="tuple"))
+    old_tc = _as_set(inst.relation("tc"))
+    old_arc = _as_set(inst.relation("arc"))
+
+    entered, release = threading.Event(), threading.Event()
+    orig = inst._delta_stratum
+
+    def paused(*a, **k):
+        entered.set()
+        assert release.wait(timeout=30)
+        return orig(*a, **k)
+
+    monkeypatch.setattr(inst, "_delta_stratum", paused)
+    t = threading.Thread(target=lambda: inst.insert_facts("arc", edges[-4:]))
+    t.start()
+    try:
+        assert entered.wait(timeout=30)
+        # mid-update: EDB handle already swapped in the txn's private map,
+        # but nothing published — readers see the old epoch
+        assert inst.epoch == 0
+        assert _as_set(inst.relation("arc")) == old_arc
+        assert _as_set(inst.relation("tc")) == old_tc
+    finally:
+        release.set()
+        t.join(timeout=60)
+    assert inst.epoch == 1
+    want = tc_oracle(adj_of(edges, 16))
+    assert _as_set(inst.relation("tc")) == set(zip(*np.nonzero(want)))
+
+
+def test_failed_update_publishes_nothing(rng, monkeypatch):
+    edges = random_edges(rng, 16, 36)
+    inst = MaterializedInstance(TC, {"arc": edges[:-4]}, EngineConfig(backend="tuple"))
+    before_arc_handle = inst.store["arc"]
+    epoch0, stats0 = inst.epoch, inst.vstore.stats()
+
+    def boom(*a, **k):
+        raise RuntimeError("simulated mid-update failure")
+
+    monkeypatch.setattr(inst, "_delta_stratum", boom)
+    with pytest.raises(RuntimeError, match="simulated"):
+        inst.insert_facts("arc", edges[-4:])
+    monkeypatch.setattr(inst.engine, "dred_stratum", boom)
+    with pytest.raises(RuntimeError, match="simulated"):
+        inst.retract_facts("arc", edges[:2])
+    # no epoch was created: the exact pre-update handle objects remain
+    assert inst.epoch == epoch0
+    assert inst.store["arc"] is before_arc_handle
+    assert inst.vstore.stats()["epoch"] == stats0["epoch"]
+    monkeypatch.undo()
+    st = inst.insert_facts("arc", edges[-4:])    # retry lands fully
+    assert st.inserted == 4 and st.epoch == epoch0 + 1
+
+
+def test_noop_updates_publish_no_epoch(rng):
+    edges = random_edges(rng, 14, 30)
+    inst = MaterializedInstance(TC, {"arc": edges}, EngineConfig(backend="tuple"))
+    st = inst.insert_facts("arc", edges[:5])            # all duplicates
+    assert st.inserted == 0 and st.epoch == 0
+    st = inst.retract_facts("arc", np.array([[90, 91]], np.int32))   # absent
+    assert st.removed == 0 and st.epoch == 0
+    assert inst.epoch == 0 and inst.vstore.stats()["live_epochs"] == 1
+
+
+def test_reclamation_frees_superseded_handles_after_last_pin(rng):
+    edges = random_edges(rng, 16, 36)
+    inst = MaterializedInstance(TC, {"arc": edges[:-4]}, EngineConfig(backend="tuple"))
+    ref = weakref.ref(inst.store["arc"])
+    snap = inst.pin()
+    inst.insert_facts("arc", edges[-4:])
+    # the superseded epoch is retained while pinned → old handle alive
+    assert inst.vstore.stats()["live_epochs"] == 2
+    gc.collect()
+    assert ref() is not None
+    reclaimed0 = inst.vstore.stats()["reclaimed_handles"]
+    snap.release()
+    st = inst.vstore.stats()
+    assert st["live_epochs"] == 1
+    assert st["reclaimed_handles"] > reclaimed0
+    # release() drops the STORE's references; the reader's own snapshot
+    # object still holds the map until it goes away too
+    del snap
+    gc.collect()
+    assert ref() is None      # last reference dropped → buffers freed
+
+
+def test_update_stats_report_epochs(rng):
+    edges = random_edges(rng, 14, 30)
+    inst = MaterializedInstance(TC, {"arc": edges[:-4]}, EngineConfig(backend="tuple"))
+    s1 = inst.insert_facts("arc", edges[-4:-2])
+    s2 = inst.retract_facts("arc", edges[-4:-2])
+    s3 = inst.insert_facts("arc", edges[-4:])
+    assert (s1.epoch, s2.epoch, s3.epoch) == (1, 2, 3)
+    assert inst.epoch == 3
+
+
+# --------------------------------------------------------------------------
+# DatalogServer: reads never queue behind updates
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["insert", "delete"])
+def test_query_during_inflight_update_returns_pre_update_fixpoint(
+    rng, monkeypatch, kind
+):
+    """The acceptance property: a query admitted while an insert or DRed
+    delete batch is in flight returns the pre-update fixpoint, and
+    post-publish reads are bit-for-bit identical to serialized execution."""
+    n = 16
+    edges = random_edges(rng, n, 36)
+    base = edges if kind == "delete" else edges[:-4]
+    inst = MaterializedInstance(TC, {"arc": base}, EngineConfig(backend="tuple"))
+    pre_tc = _as_set(inst.relation("tc"))
+    srv = DatalogServer(inst)
+
+    stage = "_delta_stratum" if kind == "insert" else "dred_stratum"
+    target = inst if kind == "insert" else inst.engine
+    entered, release = threading.Event(), threading.Event()
+    orig = getattr(target, stage)
+
+    def paused(*a, **k):
+        entered.set()
+        assert release.wait(timeout=60)
+        return orig(*a, **k)
+
+    monkeypatch.setattr(target, stage, paused)
+
+    if kind == "insert":
+        srv.submit_insert("arc", edges[-4:])
+    else:
+        srv.submit_delete("arc", edges[-4:])
+    q = srv.submit_query("tc")
+
+    def unblock():
+        assert entered.wait(timeout=60)
+        # hold the writer until the query (behind it in the queue) completes
+        deadline = time.monotonic() + 60
+        while q not in srv.done and time.monotonic() < deadline:
+            time.sleep(0.002)
+        release.set()
+
+    helper = threading.Thread(target=unblock)
+    helper.start()
+    done = srv.run()
+    helper.join(timeout=60)
+
+    # the query was admitted while the update was in flight...
+    rec = next(r for r in srv.stats.records if r.rid == q)
+    assert rec.concurrent and rec.epoch == 0
+    # ...and returned the pre-update fixpoint
+    assert _as_set(done[q]) == pre_tc
+    # post-publish state is bit-for-bit the serialized result
+    final_edb = np.concatenate([base, edges[-4:]]) if kind == "insert" else edges[:-4]
+    oracle = Engine(EngineConfig(backend="tuple")).run(TC, {"arc": final_edb})
+    assert _as_set(inst.relation("tc")) == _as_set(oracle["tc"])
+    assert srv.mvcc_stats()["concurrent_reads"] >= 1
+
+
+def test_queries_overtake_blocked_queued_updates(rng, monkeypatch):
+    """A query submitted behind a *queued* update — itself blocked behind the
+    in-flight writer — must still be served immediately against the pinned
+    epoch instead of waiting out both updates."""
+    n = 16
+    edges = random_edges(rng, n, 36)
+    inst = MaterializedInstance(TC, {"arc": edges[:-4]}, EngineConfig(backend="tuple"))
+    pre_tc = _as_set(inst.relation("tc"))
+    srv = DatalogServer(inst)
+
+    entered, release = threading.Event(), threading.Event()
+    orig = inst._delta_stratum
+
+    def paused(*a, **k):
+        entered.set()
+        assert release.wait(timeout=60)
+        return orig(*a, **k)
+
+    monkeypatch.setattr(inst, "_delta_stratum", paused)
+    srv.submit_insert("arc", edges[-4:-2])     # writer A (paused mid-apply)
+    b = srv.submit_delete("arc", edges[:2])    # queued update B, blocked by A
+    q = srv.submit_query("tc")                 # behind B in submission order
+
+    def unblock():
+        assert entered.wait(timeout=60)
+        deadline = time.monotonic() + 60
+        while q not in srv.done and time.monotonic() < deadline:
+            time.sleep(0.002)
+        release.set()
+
+    helper = threading.Thread(target=unblock)
+    helper.start()
+    done = srv.run()
+    helper.join(timeout=60)
+
+    rec = next(r for r in srv.stats.records if r.rid == q)
+    assert rec.concurrent and rec.epoch == 0
+    assert _as_set(done[q]) == pre_tc          # served before A published
+    # both updates still landed afterwards, in submission order
+    assert done[b].removed == 2
+    oracle = Engine(EngineConfig(backend="tuple")).run(TC, {"arc": edges[2:-2]})
+    assert _as_set(inst.relation("tc")) == _as_set(oracle["tc"])
+
+
+def test_server_snapshot_reads_drain_to_final_state(rng):
+    """Without pausing, interleaved updates+queries must still drain to the
+    exact serialized fixpoint, and every query must observe SOME published
+    epoch (pre or post), never a partial state."""
+    n = 18
+    edges = random_edges(rng, n, 44)
+    inst = MaterializedInstance(TC, {"arc": edges[:-8]}, EngineConfig(backend="tuple"))
+    batches = [edges[len(edges) - 8 + 2 * i:][:2] for i in range(4)]
+    states = {0: _as_set(inst.relation("tc"))}
+    oracle_inst = MaterializedInstance(
+        TC, {"arc": edges[:-8]}, EngineConfig(backend="tuple"),
+    )
+    for i, batch in enumerate(batches):
+        oracle_inst.insert_facts("arc", batch)
+        states[i + 1] = _as_set(oracle_inst.relation("tc"))
+
+    srv = DatalogServer(inst, max_batch=1)       # no coalescing: 4 epochs
+    qs = []
+    for batch in batches:
+        srv.submit_insert("arc", batch)
+        qs.append(srv.submit_query("tc"))
+    done = srv.run()
+    for q in qs:
+        rec = next(r for r in srv.stats.records if r.rid == q)
+        assert _as_set(done[q]) == states[rec.epoch]   # a consistent epoch
+    want = tc_oracle(adj_of(edges, n))
+    assert _as_set(inst.relation("tc")) == set(zip(*np.nonzero(want)))
+
+
+def test_server_serialized_mode_still_orders_reads_after_writes(rng):
+    n = 16
+    edges = random_edges(rng, n, 36)
+    inst = MaterializedInstance(TC, {"arc": edges[:-4]})
+    srv = DatalogServer(inst, snapshot_reads=False)
+    pre = srv.submit_query("tc")
+    srv.submit_insert("arc", edges[-4:])
+    post = srv.submit_query("tc")
+    done = srv.run()
+    assert len(done[pre]) <= len(done[post])
+    assert _as_set(done[post]) == set(
+        zip(*np.nonzero(tc_oracle(adj_of(edges, n))))
+    )
+    assert srv.mvcc_stats()["concurrent_reads"] == 0
+
+
+def test_concurrent_pins_from_many_reader_threads(rng):
+    """Hammer pin/query/release from several threads while a writer loops:
+    every read must match one of the published fixpoints."""
+    edges = random_edges(rng, 14, 32)
+    batches = [edges[len(edges) - 6 + 2 * i:][:2] for i in range(3)]
+    inst = MaterializedInstance(TC, {"arc": edges[:-6]}, EngineConfig(backend="tuple"))
+    valid = [_as_set(inst.relation("tc"))]
+    oracle = MaterializedInstance(
+        TC, {"arc": edges[:-6]}, EngineConfig(backend="tuple"),
+    )
+    for batch in batches:
+        oracle.insert_facts("arc", batch)
+        valid.append(_as_set(oracle.relation("tc")))
+
+    failures = []
+    stop = threading.Event()
+
+    def reader():
+        while not stop.is_set():
+            with inst.pin() as snap:
+                got = _as_set(inst.relation("tc", snapshot=snap))
+                if got not in valid:
+                    failures.append(got)
+
+    threads = [threading.Thread(target=reader) for _ in range(3)]
+    for t in threads:
+        t.start()
+    try:
+        for batch in batches:
+            inst.insert_facts("arc", batch)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=60)
+    assert not failures
+    assert inst.vstore.stats()["live_epochs"] == 1   # all pins drained
+    assert _as_set(inst.relation("tc")) == valid[-1]
