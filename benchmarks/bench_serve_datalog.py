@@ -21,11 +21,30 @@ EDB.  Rows:
                                 delete batch runs on the writer thread (MVCC
                                 snapshot reads; derived: ratio vs. idle,
                                 overlap fraction, exact post-publish results)
+    serve_warm_start_cold     — cold re-materialization of the final EDB
+    serve_warm_start          — snapshot load + WAL replay of the 1% tail
+                                (derived: speedup vs. cold + bit-for-bit
+                                match + replayed record count)
+    serve_read_during_checkpoint_p50
+                              — point-query latency while the background
+                                checkpointer serializes a pinned epoch
+                                (derived: ratio vs. idle, overlap count)
+
+Sections can be selected individually:
+
+    python -m benchmarks.run serve --sections insert,warm-start
+
+with sections ``insert`` (the four update workloads), ``delete``, ``query``,
+``concurrent``, and ``warm-start``.
 """
 
 from __future__ import annotations
 
 import math
+import shutil
+import tempfile
+import threading
+import time
 
 import numpy as np
 
@@ -34,7 +53,20 @@ from repro.configs.datalog_workloads import ALL as WORKLOADS
 from repro.core import Engine, EngineConfig
 from repro.data.graphs import gnp_graph
 from repro.data.program_facts import csda_facts
-from repro.serve_datalog import DatalogServer, MaterializedInstance
+from repro.persist import list_snapshots
+from repro.serve_datalog import (
+    DatalogServer,
+    DurabilityConfig,
+    MaterializedInstance,
+)
+
+SECTIONS = ("insert", "delete", "query", "concurrent", "warm-start")
+
+
+def _p50(lats: list[float]) -> float:
+    """Nearest-rank median (matches ``ServerStats.latency``'s convention)."""
+    lats = sorted(lats)
+    return lats[max(math.ceil(0.5 * len(lats)) - 1, 0)]
 
 
 def _bench_update(name, prog, edb_full, rel, config, warm_k=None):
@@ -159,10 +191,10 @@ def _bench_concurrent_reads() -> None:
         recs = [
             r for r in list(srv.stats.records)[n_before:] if r.kind == "query"
         ]
-        lats = sorted(r.service_seconds for r in recs if r.concurrent) or sorted(
+        lats = [r.service_seconds for r in recs if r.concurrent] or [
             r.service_seconds for r in recs
-        )
-        p50 = lats[max(math.ceil(0.5 * len(lats)) - 1, 0)]
+        ]
+        p50 = _p50(lats)
         overlap = sum(r.concurrent for r in recs)
         match = all(
             set(map(tuple, inst.relation(r).tolist()))
@@ -178,51 +210,175 @@ def _bench_concurrent_reads() -> None:
     emit("serve_read_during_delete_p50", p50, note)
 
 
-def run() -> None:
-    # TC on the paper's Gn-p benchmark graph — PBME-resident incremental
-    arc = gnp_graph(1024, p=0.003, seed=0)
-    inst = _bench_update(
-        "tc_pbme", WORKLOADS["tc"].program, {"arc": arc}, "arc",
-        EngineConfig(backend="auto"),
-    )
-    # same workload through the tuple backend (general-case path)
-    _bench_update(
-        "tc_tuple", WORKLOADS["tc"].program, {"arc": gnp_graph(512, p=0.004, seed=1)},
-        "arc", EngineConfig(backend="tuple"),
-    )
-    # SG (the paper's other PBME shape)
-    _bench_update(
-        "sg", WORKLOADS["sg"].program, {"arc": gnp_graph(192, p=0.01, seed=2)},
-        "arc", EngineConfig(backend="auto"),
-    )
-    # program analysis: CSDA — the many-iteration chain workload where
-    # per-iteration overhead hurts a from-scratch run most
-    _bench_update(
-        "csda", WORKLOADS["csda"].program, csda_facts(3000, seed=0), "arc",
-        EngineConfig(backend="tuple"),
-    )
+def _bench_warm_start() -> None:
+    """Crash-safe warm-start vs. cold re-materialization (1% WAL tail).
 
-    # DRed retraction: a 1% TC delete batch vs. re-materializing from
-    # scratch (the tuple backend is the DRed path; PBME strata recompute —
-    # decremental closure is gated off in eligible_plan)
-    _bench_delete(
-        "tc", WORKLOADS["tc"].program,
-        {"arc": gnp_graph(256, p=0.008, seed=1)}, "arc",
-        EngineConfig(backend="tuple"),
-    )
+    Materializes TC over all-but-1% of a Gn-p graph behind a durable
+    server: the base fixpoint lands in an epoch snapshot and the held-out
+    1% arrives afterwards, so it exists only as a WAL tail.  The timed pair
+    is then (a) cold: re-materialize the full EDB from scratch, and
+    (b) warm: ``MaterializedInstance.restore`` — snapshot straight onto
+    device plus incremental replay of the tail.  Also measures point-query
+    p50 while the background checkpointer serializes a pinned epoch, which
+    must stay near idle latency (checkpoints are read-side only).
+    """
+    prog = WORKLOADS["csda"].program               # many-iteration chain
+    edb_full = {k: np.asarray(v, np.int32) for k, v in csda_facts(3000, seed=5).items()}
+    rel = "arc"
+    k = max(len(edb_full[rel]) // 100, 1)          # the 1% WAL tail
+    base = dict(edb_full)
+    # the tail stays inside the materialized active domain (domain growth is
+    # the separate full-rebuild path), mirroring _bench_update's hold-out
+    vals = base[rel].max(axis=1)
+    cand = np.flatnonzero(vals < vals.max())[-k:]
+    mask = np.ones(len(base[rel]), bool)
+    mask[cand] = False
+    tail = base[rel][cand]
+    base[rel] = base[rel][mask]
+    config = EngineConfig(backend="tuple")
+    root = tempfile.mkdtemp(prefix="repro_warm_start_")
+    ckpt_root = tempfile.mkdtemp(prefix="repro_ckpt_reads_")
+    try:
+        inst = MaterializedInstance(prog, base, EngineConfig(**vars(config)))
+        srv = DatalogServer(
+            inst,
+            durability=DurabilityConfig(
+                root=root, checkpoint_every_epochs=0, checkpoint_wal_bytes=0
+            ),
+        )
+        srv.submit_insert(rel, tail)               # logged, never snapshotted
+        srv.run()
+        srv.close()
 
-    # batched point-query latency against the warm TC instance
-    srv = DatalogServer(inst, max_batch=32)
-    rng = np.random.default_rng(0)
-    for src in rng.integers(0, 1024, size=64):
-        srv.submit_query("tc", src=int(src))
-    srv.run()
-    lat = srv.stats.latency("query", include_queue=False)
-    emit("serve_query_p50", lat["p50_ms"] / 1e3, f"n={lat['count']}")
-    emit("serve_query_p95", lat["p95_ms"] / 1e3)
+        with timer() as t_cold:
+            cold = MaterializedInstance(
+                prog, edb_full, EngineConfig(**vars(config))
+            )
+        emit("serve_warm_start_cold", t_cold.seconds)
+        with timer() as t_warm:
+            restored = MaterializedInstance.restore(
+                root, config=EngineConfig(**vars(config))
+            )
+        match = all(
+            np.array_equal(restored.relation(r), cold.relation(r))
+            for r in set(cold.strat.edb) | set(cold.strat.idb)
+        )
+        speedup = t_cold.seconds / max(t_warm.seconds, 1e-9)
+        emit(
+            "serve_warm_start", t_warm.seconds,
+            f"speedup={speedup:.1f}x match={match} "
+            f"replayed={restored.restore_stats['replayed_records']}",
+        )
 
-    # MVCC snapshot reads: query latency while updates are in flight
-    _bench_concurrent_reads()
+        # reads while the checkpointer serializes a pinned epoch (its own
+        # root: each round deletes the snapshots and re-checkpoints so the
+        # full serialization cost overlaps the queries)
+        srv2 = DatalogServer(
+            cold,
+            durability=DurabilityConfig(
+                root=ckpt_root, checkpoint_every_epochs=0, checkpoint_wal_bytes=0
+            ),
+        )
+        rng = np.random.default_rng(0)
+        srcs = [int(s) for s in rng.integers(0, cold.domain, size=64)]
+        idle = [_timed_query(cold, "null", s) for s in srcs]
+        during: list[float] = []
+        for _ in range(4):                         # accumulate overlap samples
+            for snap_dir in list_snapshots(ckpt_root):
+                shutil.rmtree(snap_dir)
+            srv2.durability.last_snapshot_epoch = -1
+            th = threading.Thread(target=srv2.checkpoint_now)
+            th.start()
+            while th.is_alive():
+                during.append(
+                    _timed_query(cold, "null", srcs[len(during) % len(srcs)])
+                )
+            th.join()
+        srv2.close()
+        if during:
+            ratio = _p50(during) / max(_p50(idle), 1e-9)
+            emit(
+                "serve_read_during_checkpoint_p50", _p50(during),
+                f"ratio={ratio:.1f}x overlap={len(during)}",
+            )
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+        shutil.rmtree(ckpt_root, ignore_errors=True)
+
+
+def _timed_query(inst: MaterializedInstance, rel: str, src: int) -> float:
+    t0 = time.perf_counter()
+    inst.query(rel, src=src)
+    return time.perf_counter() - t0
+
+
+def run(sections: list[str] | None = None) -> None:
+    sel = set(sections) if sections else set(SECTIONS)
+    unknown = sel - set(SECTIONS)
+    if unknown:
+        raise SystemExit(
+            f"unknown serve sections {sorted(unknown)}; pick from {SECTIONS}"
+        )
+    inst = None
+    if "insert" in sel:
+        # TC on the paper's Gn-p benchmark graph — PBME-resident incremental
+        arc = gnp_graph(1024, p=0.003, seed=0)
+        inst = _bench_update(
+            "tc_pbme", WORKLOADS["tc"].program, {"arc": arc}, "arc",
+            EngineConfig(backend="auto"),
+        )
+        # same workload through the tuple backend (general-case path)
+        _bench_update(
+            "tc_tuple", WORKLOADS["tc"].program,
+            {"arc": gnp_graph(512, p=0.004, seed=1)},
+            "arc", EngineConfig(backend="tuple"),
+        )
+        # SG (the paper's other PBME shape)
+        _bench_update(
+            "sg", WORKLOADS["sg"].program, {"arc": gnp_graph(192, p=0.01, seed=2)},
+            "arc", EngineConfig(backend="auto"),
+        )
+        # program analysis: CSDA — the many-iteration chain workload where
+        # per-iteration overhead hurts a from-scratch run most
+        _bench_update(
+            "csda", WORKLOADS["csda"].program, csda_facts(3000, seed=0), "arc",
+            EngineConfig(backend="tuple"),
+        )
+
+    if "delete" in sel:
+        # DRed retraction: a 1% TC delete batch vs. re-materializing from
+        # scratch (the tuple backend is the DRed path; PBME strata recompute —
+        # decremental closure is gated off in eligible_plan)
+        _bench_delete(
+            "tc", WORKLOADS["tc"].program,
+            {"arc": gnp_graph(256, p=0.008, seed=1)}, "arc",
+            EngineConfig(backend="tuple"),
+        )
+
+    if "query" in sel:
+        # batched point-query latency against a warm TC instance
+        if inst is None:
+            inst = MaterializedInstance(
+                WORKLOADS["tc"].program,
+                {"arc": gnp_graph(1024, p=0.003, seed=0)},
+                EngineConfig(backend="auto"),
+            )
+        srv = DatalogServer(inst, max_batch=32)
+        rng = np.random.default_rng(0)
+        for src in rng.integers(0, 1024, size=64):
+            srv.submit_query("tc", src=int(src))
+        srv.run()
+        lat = srv.stats.latency("query", include_queue=False)
+        emit("serve_query_p50", lat["p50_ms"] / 1e3, f"n={lat['count']}")
+        emit("serve_query_p95", lat["p95_ms"] / 1e3)
+
+    if "concurrent" in sel:
+        # MVCC snapshot reads: query latency while updates are in flight
+        _bench_concurrent_reads()
+
+    if "warm-start" in sel:
+        # durability: snapshot + WAL-tail replay vs. cold re-materialization
+        _bench_warm_start()
 
 
 if __name__ == "__main__":

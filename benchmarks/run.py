@@ -8,17 +8,46 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   fig8   — device-count scale-up of sharded PBME (+ Table 4 CPU efficiency)
   serve  — incremental serving: update-batch latency vs. full recompute
   roofline — three-term roofline per dry-run cell (needs results/dryrun.json)
+
+The growing ``serve`` section takes a sub-section filter, e.g.
+
+  python -m benchmarks.run serve --sections insert,warm-start
+
+picking from insert / delete / query / concurrent / warm-start.
 """
 
 from __future__ import annotations
 
+import functools
 import os
 import sys
 import traceback
 
 
+def _parse_args(argv: list[str]) -> tuple[list[str], list[str] | None]:
+    """Split section names from the serve ``--sections a,b`` filter."""
+    sections: list[str] = []
+    serve_sections: list[str] | None = None
+    i = 0
+    while i < len(argv):
+        arg = argv[i]
+        if arg == "--sections":
+            if i + 1 >= len(argv):
+                raise SystemExit("--sections needs a comma-separated value")
+            serve_sections = [s for s in argv[i + 1].split(",") if s]
+            i += 2
+        elif arg.startswith("--sections="):
+            serve_sections = [s for s in arg.split("=", 1)[1].split(",") if s]
+            i += 1
+        else:
+            sections.append(arg)
+            i += 1
+    return sections, serve_sections
+
+
 def main() -> None:
-    sections = sys.argv[1:] or [
+    sections, serve_sections = _parse_args(sys.argv[1:])
+    sections = sections or [
         "fig2",
         "fig10",
         "fig12",
@@ -42,6 +71,9 @@ def main() -> None:
                 from benchmarks.bench_scaleup import run as r
             elif sec == "serve":
                 from benchmarks.bench_serve_datalog import run as r
+
+                if serve_sections is not None:
+                    r = functools.partial(r, sections=serve_sections)
             elif sec == "roofline":
                 if not os.path.exists("results/dryrun.json"):
                     print(f"{sec}_skipped,0,no results/dryrun.json (run dryrun first)")

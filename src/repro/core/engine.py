@@ -251,6 +251,13 @@ class Engine:
             self.stats.backend_used[p] = handles[p]
         dsd_state = {p: DSDState(alpha=cfg.alpha) for p in stratum.preds}
         deltas: dict[str, TupleView | None] = {p: None for p in stratum.preds}
+        if start_iteration > 0 and getattr(self, "_resume_deltas", None):
+            # mid-stratum resume: the checkpoint's live Δ views drive the
+            # next iteration's delta variants exactly as pre-checkpoint
+            deltas.update(
+                {p: v for p, v in self._resume_deltas.items() if p in deltas}
+            )
+            self._resume_deltas = None
         self._seminaive_loop(
             strat, stratum, store, handles, deltas, dsd_state, groups,
             start_iteration=start_iteration,
@@ -307,7 +314,9 @@ class Engine:
                 and cfg.checkpoint_dir
                 and iteration % cfg.checkpoint_every == 0
             ):
-                self._save_fixpoint(cfg.checkpoint_dir, stratum.index, iteration, store)
+                self._save_fixpoint(
+                    cfg.checkpoint_dir, stratum.index, iteration, store, deltas
+                )
 
             if not stratum.recursive:
                 break                                    # Alg. 1 line 15
@@ -797,53 +806,84 @@ class Engine:
             )
 
     def _save_fixpoint(
-        self, path: str, stratum_index: int, iteration: int, store: dict[str, Any]
+        self,
+        path: str,
+        stratum_index: int,
+        iteration: int,
+        store: dict[str, Any],
+        deltas: dict[str, "TupleView | None"] | None = None,
     ) -> None:
-        os.makedirs(path, exist_ok=True)
-        blobs: dict[str, np.ndarray] = {
-            "__meta__": np.array([stratum_index, iteration, self.domain], np.int64)
+        """Mid-fixpoint checkpoint in the ``repro.persist`` snapshot format.
+
+        The semi-naïve loop's live Δ views ride along as extra arrays —
+        without them a resumed tuple stratum would see empty deltas and
+        declare a premature fixpoint.  (Dense handles carry their own delta
+        state and need nothing extra.)  Checkpoints are numbered by a
+        per-engine sequence; ``resume_from`` loads the newest valid one, so
+        a checkpoint torn by a crash falls back to its predecessor.
+        """
+        from repro.persist.codec import (
+            list_snapshots,
+            prune_snapshots,
+            snapshot_dir_epoch,
+            write_snapshot,
+        )
+
+        if not hasattr(self, "_ckpt_seq"):
+            # continue past any checkpoints already in the directory: a rerun
+            # into a reused checkpoint_dir must number its snapshots AFTER
+            # the stale run's, or newest-wins resume would load the old run's
+            # state (and write_snapshot would no-op on an existing epoch)
+            existing = list_snapshots(path)
+            self._ckpt_seq = (
+                snapshot_dir_epoch(existing[-1]) if existing else 0
+            )
+        self._ckpt_seq += 1
+        extra_meta: dict[str, Any] = {
+            "engine_checkpoint": True,
+            "stratum": stratum_index,
+            "iteration": iteration,
+            "delta_counts": {},
         }
-        for name, h in store.items():
-            if isinstance(h, TupleRelation):
-                blobs[f"t::{name}"] = np.asarray(h.rows)
-                blobs[f"tc::{name}"] = np.array([h.count])
-            elif isinstance(h, DenseSetRelation):
-                blobs[f"s::{name}"] = np.asarray(h.member)
-                blobs[f"sd::{name}"] = np.asarray(h.delta)
-            elif isinstance(h, DenseAggRelation):
-                blobs[f"a::{name}::{h.op}"] = np.asarray(h.values)
-                blobs[f"ad::{name}"] = np.asarray(h.delta)
-        tmp = os.path.join(path, "fixpoint.npz.tmp.npz")
-        np.savez(tmp, **blobs)
-        os.replace(tmp, os.path.join(path, "fixpoint.npz"))
+        extra_arrays: dict[str, np.ndarray] = {}
+        for pred, view in (deltas or {}).items():
+            if view is None or getattr(view, "count", 0) == 0:
+                continue
+            extra_meta["delta_counts"][pred] = int(view.count)
+            extra_arrays[f"delta.{pred}"] = np.asarray(view.rows)
+        write_snapshot(
+            path,
+            handles=store,
+            domain=self.domain,
+            epoch=self._ckpt_seq,
+            extra_meta=extra_meta,
+            extra_arrays=extra_arrays,
+        )
+        prune_snapshots(path, keep=2)
 
     def _load_fixpoint(self, path: str, strat: Stratification, store: dict[str, Any]):
-        data = np.load(os.path.join(path, "fixpoint.npz"))
-        stratum_index, iteration, domain = data["__meta__"]
-        self.domain = int(domain)
-        for key in data.files:
-            if key == "__meta__":
-                continue
-            kind, name = key.split("::")[0], key.split("::")[1]
-            if kind == "t":
-                rows = jnp.asarray(data[key])
-                count = int(data[f"tc::{name}"][0])
-                store[name] = TupleRelation(
-                    name, rows.shape[1], rows, count, self.domain
+        """Load the newest valid checkpoint written by :meth:`_save_fixpoint`.
+
+        Restores every relation handle to device, re-seeds the saved Δ views
+        (consumed by ``_eval_stratum`` when it resumes mid-stratum), and
+        returns ``(stratum_index, iteration, store)``.
+        """
+        from repro.persist.codec import SnapshotError, latest_valid_snapshot
+
+        snap = latest_valid_snapshot(path)
+        if snap is None:
+            raise SnapshotError(f"no valid fixpoint checkpoint under {path!r}")
+        self.domain = snap.domain
+        store.update(snap.handles)
+        self._resume_deltas = {}
+        for pred, count in snap.extra_meta.get("delta_counts", {}).items():
+            rows = snap.extra_arrays.get(f"delta.{pred}")
+            if rows is not None:
+                self._resume_deltas[pred] = TupleView(
+                    jnp.asarray(np.ascontiguousarray(rows)), int(count), self.domain
                 )
-            elif kind == "s":
-                member = jnp.asarray(data[key])
-                delta = jnp.asarray(data[f"sd::{name}"])
-                store[name] = DenseSetRelation(
-                    name, member.shape[0], member, delta,
-                    int(member.sum()), int(delta.sum()),
-                )
-            elif kind == "a":
-                op = key.split("::")[2]
-                values = jnp.asarray(data[key])
-                delta = jnp.asarray(data[f"ad::{name}"])
-                h = DenseAggRelation(name, values.shape[0], op, values, delta)
-                h.count = int((values != h.absent).sum())
-                h.delta_count = int(delta.sum())
-                store[name] = h
-        return int(stratum_index), int(iteration), store
+        return (
+            int(snap.extra_meta.get("stratum", 0)),
+            int(snap.extra_meta.get("iteration", 0)),
+            store,
+        )

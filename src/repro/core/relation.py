@@ -213,6 +213,29 @@ class TupleRelation:
     def to_numpy(self) -> np.ndarray:
         return np.asarray(self.rows[: self.count])
 
+    def to_blocks(self) -> tuple[dict, dict[str, np.ndarray]]:
+        """(meta, arrays) for the snapshot codec (see ``repro.persist``).
+
+        ``arrays`` holds the full sorted/padded table (memmap-friendly; the
+        power-of-two capacity is part of the state — buckets bound
+        recompilation, so a restore at the original capacity replays against
+        warm executables).  Per-column sort caches are derived state and are
+        not serialized.
+        """
+        meta = {
+            "kind": "tuple",
+            "arity": self.arity,
+            "count": self.count,
+            "domain": self.domain,
+        }
+        return meta, {"rows": np.asarray(self.rows)}
+
+    @classmethod
+    def from_blocks(cls, name: str, meta: dict, arrays: dict) -> "TupleRelation":
+        rows = jnp.asarray(np.asarray(arrays["rows"], np.int32))
+        return cls(name, int(meta["arity"]), rows, int(meta["count"]),
+                   int(meta["domain"]))
+
 
 @functools.partial(jax.jit, static_argnames=("capacity", "domain"))
 def _merge_sorted(a: jax.Array, b: jax.Array, capacity: int, domain: int) -> jax.Array:
@@ -311,6 +334,30 @@ class DenseSetRelation:
 
     def to_numpy(self) -> np.ndarray:
         return np.flatnonzero(np.asarray(self.member)).astype(np.int32)[:, None]
+
+    def to_blocks(self) -> tuple[dict, dict[str, np.ndarray]]:
+        """(meta, arrays) for the snapshot codec.
+
+        ``delta`` is live state (a mid-fixpoint checkpoint resumes from it),
+        so it is serialized alongside the membership vector; both are packed
+        to bits on disk (``np.packbits``) — 8× smaller than bool arrays.
+        """
+        meta = {"kind": "dense_set", "n": self.n}
+        return meta, {
+            "member": np.packbits(np.asarray(self.member)),
+            "delta": np.packbits(np.asarray(self.delta)),
+        }
+
+    @classmethod
+    def from_blocks(cls, name: str, meta: dict, arrays: dict) -> "DenseSetRelation":
+        n = int(meta["n"])
+        member = jnp.asarray(
+            np.unpackbits(np.asarray(arrays["member"]), count=n).astype(bool)
+        )
+        delta = jnp.asarray(
+            np.unpackbits(np.asarray(arrays["delta"]), count=n).astype(bool)
+        )
+        return cls(name, n, member, delta, int(member.sum()), int(delta.sum()))
 
 
 @dataclass
@@ -422,3 +469,44 @@ class DenseAggRelation:
         vals = np.asarray(self.values)
         keys = np.flatnonzero(vals != self.absent)
         return np.stack([keys, vals[keys]], axis=1).astype(np.int32)
+
+    def to_blocks(self) -> tuple[dict, dict[str, np.ndarray]]:
+        """(meta, arrays) for the snapshot codec."""
+        meta = {"kind": "dense_agg", "n": self.n, "op": self.op}
+        return meta, {
+            "values": np.asarray(self.values),
+            "delta": np.packbits(np.asarray(self.delta)),
+        }
+
+    @classmethod
+    def from_blocks(cls, name: str, meta: dict, arrays: dict) -> "DenseAggRelation":
+        n = int(meta["n"])
+        values = jnp.asarray(np.asarray(arrays["values"], np.int32))
+        delta = jnp.asarray(
+            np.unpackbits(np.asarray(arrays["delta"]), count=n).astype(bool)
+        )
+        h = cls(name, n, str(meta["op"]), values, delta)
+        h.count = int((values != h.absent).sum())
+        h.delta_count = int(delta.sum())
+        return h
+
+
+def relation_to_blocks(handle) -> tuple[dict, dict[str, np.ndarray]]:
+    """Serialize any relation handle to (meta, arrays) — codec entry point."""
+    fn = getattr(handle, "to_blocks", None)
+    if fn is None:
+        raise TypeError(f"{type(handle).__name__} is not serializable")
+    return fn()
+
+
+def relation_from_blocks(name: str, meta: dict, arrays: dict):
+    """Rebuild a relation handle from codec (meta, arrays)."""
+    kinds = {
+        "tuple": TupleRelation,
+        "dense_set": DenseSetRelation,
+        "dense_agg": DenseAggRelation,
+    }
+    kind = meta.get("kind")
+    if kind not in kinds:
+        raise ValueError(f"unknown relation kind {kind!r} for {name!r}")
+    return kinds[kind].from_blocks(name, meta, arrays)

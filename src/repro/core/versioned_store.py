@@ -69,7 +69,7 @@ class Snapshot:
     latest``) are unpinned peeks and ``release`` does nothing.
     """
 
-    __slots__ = ("epoch", "handles", "domain", "_store")
+    __slots__ = ("epoch", "handles", "domain", "meta", "_store")
 
     def __init__(
         self,
@@ -77,10 +77,12 @@ class Snapshot:
         handles: Mapping[str, Any],
         domain: int,
         store: "VersionedStore | None" = None,
+        meta: Any = None,
     ):
         self.epoch = epoch
         self.handles = handles
         self.domain = domain
+        self.meta = meta
         self._store = store
 
     def release(self) -> None:
@@ -105,6 +107,7 @@ class _Epoch:
     handles: dict[str, Any]
     domain: int
     pins: int = 0
+    meta: Any = None         # opaque epoch-consistent sidecar (PBME residency)
 
 
 @dataclass
@@ -120,10 +123,24 @@ class StoreStats:
 class VersionedStore:
     """Append-only epoch → handle-map chain with pin-gated reclamation."""
 
-    def __init__(self, handles: Mapping[str, Any], domain: int):
+    def __init__(
+        self,
+        handles: Mapping[str, Any],
+        domain: int,
+        epoch: int = 0,
+        meta: Any = None,
+    ):
+        """``epoch`` seeds the chain index: a store restored from a durable
+        snapshot continues the pre-crash epoch numbering instead of
+        restarting at 0 (``repro.persist``).  ``meta`` is an opaque sidecar
+        published with each epoch — reading it through a pinned
+        :class:`Snapshot` is guaranteed consistent with that epoch's handles
+        (the checkpointer snapshots PBME residency this way)."""
         self._lock = threading.Lock()
-        self._epochs: dict[int, _Epoch] = {0: _Epoch(dict(handles), domain)}
-        self._latest = 0
+        self._epochs: dict[int, _Epoch] = {
+            epoch: _Epoch(dict(handles), domain, meta=meta)
+        }
+        self._latest = epoch
         self._stats = StoreStats()
 
     # -- read side -----------------------------------------------------------
@@ -154,7 +171,9 @@ class VersionedStore:
         """Unpinned peek at the latest epoch (no reclamation guarantee)."""
         with self._lock:
             e = self._epochs[self._latest]
-            return Snapshot(self._latest, MappingProxyType(e.handles), e.domain)
+            return Snapshot(
+                self._latest, MappingProxyType(e.handles), e.domain, meta=e.meta
+            )
 
     def pin(self) -> Snapshot:
         """Pin the latest published epoch for reading.
@@ -166,7 +185,10 @@ class VersionedStore:
             e = self._epochs[self._latest]
             e.pins += 1
             self._stats.pins_total += 1
-            return Snapshot(self._latest, MappingProxyType(e.handles), e.domain, self)
+            return Snapshot(
+                self._latest, MappingProxyType(e.handles), e.domain, self,
+                meta=e.meta,
+            )
 
     def _release(self, epoch: int) -> None:
         with self._lock:
@@ -178,16 +200,19 @@ class VersionedStore:
 
     # -- write side ----------------------------------------------------------
 
-    def publish(self, handles: Mapping[str, Any], domain: int) -> int:
+    def publish(
+        self, handles: Mapping[str, Any], domain: int, meta: Any = None
+    ) -> int:
         """Atomically install a new latest epoch; returns its index.
 
         The caller hands over a complete handle map built privately (never a
-        map readers could observe mid-mutation).  Superseded unpinned epochs
-        are reclaimed immediately.
+        map readers could observe mid-mutation), plus an optional ``meta``
+        sidecar that pinned readers of this epoch observe atomically with
+        the handles.  Superseded unpinned epochs are reclaimed immediately.
         """
         with self._lock:
             self._latest += 1
-            self._epochs[self._latest] = _Epoch(dict(handles), domain)
+            self._epochs[self._latest] = _Epoch(dict(handles), domain, meta=meta)
             self._reclaim_locked()
             return self._latest
 

@@ -1,0 +1,63 @@
+"""Durability: epoch snapshots, a delta WAL, and crash-safe warm-start.
+
+RecStep keeps every materialized relation resident in memory, so a served
+fixpoint dies with its process — hours of semi-naïve work lost to a restart.
+BigDatalog-style systems get recovery from Spark lineage; a single-node
+in-memory engine must replace that with explicit snapshots plus replay.
+FlowLog's observation that delta batches are the unit of incremental work
+makes them the natural unit of *logging* too, and this package is built on
+exactly that correspondence:
+
+* :mod:`repro.persist.codec` — a **snapshot codec** that serializes one
+  pinned :class:`~repro.core.versioned_store.VersionedStore` epoch: tuple
+  tables as memmap-friendly ``.npy`` column blocks, dense sets/aggregates
+  bit-packed, PBME bit matrices in their packed ``uint32`` form, plus a
+  JSON manifest carrying the program fingerprint, stratification hash,
+  domain, and epoch.  Snapshots are written atomically (tmp directory +
+  rename, every blob checksummed, the manifest written last) so a torn
+  write is never mistaken for a snapshot.
+* :mod:`repro.persist.wal` — a **delta WAL**: each committed insert/retract
+  batch is appended as ``(relation, op, payload, epoch)`` *before* the epoch
+  publishes, fsync-batched per admission group, CRC-framed so replay stops
+  cleanly at a torn tail.  The WAL is truncated at each checkpoint: restart
+  cost is proportional to the tail since the last snapshot, not to the
+  Datalog program.
+* :mod:`repro.persist.manager` — a :class:`DurabilityManager` tying the two
+  together with a checkpoint policy (epoch count and/or WAL size), used by
+  ``DatalogServer(durability=...)``'s background checkpointer thread, which
+  snapshots off a reader pin — concurrent with the writer, never blocking
+  queries.
+
+The recovery path is :meth:`repro.serve_datalog.MaterializedInstance.
+restore`: load the newest valid snapshot straight onto device (no
+re-fixpoint) and replay the WAL tail through the existing incremental
+``insert_facts``/``retract_facts`` drivers — bit-for-bit the pre-crash
+fixpoint.  See ``docs/persistence.md`` for formats and the recovery
+contract.
+"""
+
+from repro.persist.codec import (
+    SnapshotError,
+    latest_valid_snapshot,
+    list_snapshots,
+    prune_snapshots,
+    read_snapshot,
+    strat_hash,
+    write_snapshot,
+)
+from repro.persist.manager import DurabilityConfig, DurabilityManager
+from repro.persist.wal import DeltaWAL, WalRecord
+
+__all__ = [
+    "SnapshotError",
+    "write_snapshot",
+    "read_snapshot",
+    "list_snapshots",
+    "latest_valid_snapshot",
+    "prune_snapshots",
+    "strat_hash",
+    "DeltaWAL",
+    "WalRecord",
+    "DurabilityConfig",
+    "DurabilityManager",
+]

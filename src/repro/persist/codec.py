@@ -1,0 +1,310 @@
+"""Snapshot codec: one pinned epoch ⇄ an atomic on-disk directory.
+
+Layout of one snapshot (all under ``<root>/snapshot-<epoch, 12 digits>/``)::
+
+    MANIFEST.json            # written LAST — its presence marks completeness
+    rel.<name>.<field>.npy   # relation column blocks (TupleRelation rows,
+                             #   packed dense-set/agg vectors)
+    bm.<stratum>.<field>.npy # PBME residency: packed uint32 arc / closure
+    extra.<key>.npy          # caller sidecar (engine mid-fixpoint deltas)
+
+The manifest records, per array, the file name and its SHA-256, plus the
+program fingerprint, stratification hash, active-domain size, epoch, and the
+program source (``repr(Program)`` parses back — so ``MaterializedInstance.
+restore`` needs no out-of-band copy of the program).
+
+Atomicity: everything is written into ``snapshot-<epoch>.tmp-<pid>``, each
+blob fsynced, the manifest written and fsynced last, then the directory is
+renamed into place and the parent directory fsynced.  A crash mid-snapshot
+leaves a ``*.tmp-*`` directory that readers never consider; a finalized
+directory with a corrupt or missing blob fails checksum validation and
+:func:`latest_valid_snapshot` falls back to the previous snapshot.  Recovery
+therefore always lands on a consistent epoch, never a partial one.
+
+Arrays are plain ``.npy`` files loaded with ``mmap_mode="r"`` — the host
+never materializes a second copy; ``jnp.asarray`` streams the mapped pages
+straight into the device allocator.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.relation import relation_from_blocks, relation_to_blocks
+
+FORMAT_VERSION = 1
+MANIFEST = "MANIFEST.json"
+SNAP_PREFIX = "snapshot-"
+
+
+class SnapshotError(RuntimeError):
+    """A snapshot is missing, torn, corrupt, or belongs to another program."""
+
+
+def strat_hash(strat) -> str:
+    """Stable hash of a stratification's structure (order, preds, recursion).
+
+    Stored in the manifest and checked by the restore path: a snapshot taken
+    under a different stratification of the "same" program must not be
+    replayed into — stratum indices key the PBME residency sidecar.
+    """
+    shape = [
+        (s.index, tuple(sorted(s.preds)), bool(s.recursive))
+        for s in strat.strata
+    ]
+    return hashlib.sha1(repr(shape).encode()).hexdigest()[:16]
+
+
+@dataclass
+class RestoredSnapshot:
+    """Everything :func:`read_snapshot` recovers from one snapshot dir."""
+
+    path: str
+    epoch: int
+    domain: int
+    fingerprint: str
+    strat_hash: str
+    program_source: str
+    handles: dict = field(default_factory=dict)      # name → relation handle
+    bitmatrix: dict = field(default_factory=dict)    # stratum → {field: np arr}
+    extra_meta: dict = field(default_factory=dict)
+    extra_arrays: dict = field(default_factory=dict)  # key → np array
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # pragma: no cover - platforms without dir fds
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def snapshot_dirname(epoch: int) -> str:
+    return f"{SNAP_PREFIX}{epoch:012d}"
+
+
+def snapshot_dir_epoch(path: str) -> int:
+    """Epoch encoded in a snapshot directory name (no manifest read)."""
+    return int(os.path.basename(path.rstrip("/"))[len(SNAP_PREFIX):])
+
+
+def write_snapshot(
+    root: str,
+    *,
+    handles: dict,
+    domain: int,
+    epoch: int,
+    fingerprint: str = "",
+    stratification_hash: str = "",
+    program_source: str = "",
+    bitmatrix: dict | None = None,
+    extra_meta: dict | None = None,
+    extra_arrays: dict | None = None,
+) -> str:
+    """Serialize one epoch atomically; returns the finalized directory.
+
+    ``handles`` is an epoch's (pinned) relation-handle map; ``bitmatrix``
+    maps stratum index → ``{"arc": uint32[n, w], "m": uint32[n, w]}`` packed
+    matrices (the epoch's PBME residency sidecar); ``extra_*`` is an opaque
+    caller channel (the engine stores mid-fixpoint resume state there).
+    Writing an epoch that already has a finalized snapshot is a no-op.
+    """
+    os.makedirs(root, exist_ok=True)
+    final = os.path.join(root, snapshot_dirname(epoch))
+    if os.path.exists(os.path.join(final, MANIFEST)):
+        return final
+    tmp = os.path.join(root, f"{snapshot_dirname(epoch)}.tmp-{os.getpid()}")
+    shutil.rmtree(tmp, ignore_errors=True)
+    os.makedirs(tmp)
+
+    files: dict[str, dict] = {}
+
+    def put(fname: str, arr: np.ndarray) -> dict:
+        path = os.path.join(tmp, fname)
+        np.save(path, np.ascontiguousarray(arr))
+        _fsync_file(path)
+        files[fname] = {"sha256": _sha256(path)}
+        return {"file": fname}
+
+    relations: dict[str, dict] = {}
+    for name, handle in handles.items():
+        meta, arrays = relation_to_blocks(handle)
+        entry = {"meta": meta, "arrays": {}}
+        for f, arr in arrays.items():
+            entry["arrays"][f] = put(f"rel.{name}.{f}.npy", arr)
+        relations[name] = entry
+
+    bm_entries: dict[str, dict] = {}
+    for idx, mats in (bitmatrix or {}).items():
+        bm_entries[str(idx)] = {
+            f: put(f"bm.{idx}.{f}.npy", np.asarray(arr))
+            for f, arr in mats.items()
+        }
+
+    extra_entries = {
+        key: put(f"extra.{key}.npy", np.asarray(arr))
+        for key, arr in (extra_arrays or {}).items()
+    }
+
+    manifest = {
+        "format_version": FORMAT_VERSION,
+        "epoch": int(epoch),
+        "domain": int(domain),
+        "fingerprint": fingerprint,
+        "strat_hash": stratification_hash,
+        "program_source": program_source,
+        "relations": relations,
+        "bitmatrix": bm_entries,
+        "extra_meta": dict(extra_meta or {}),
+        "extra_arrays": extra_entries,
+        "files": files,
+    }
+    mpath = os.path.join(tmp, MANIFEST)
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    _fsync_file(mpath)
+
+    if os.path.exists(final):        # lost a race to another checkpointer
+        shutil.rmtree(tmp, ignore_errors=True)
+        return final
+    os.rename(tmp, final)
+    _fsync_dir(root)
+    return final
+
+
+def read_snapshot(path: str, verify: bool = True) -> RestoredSnapshot:
+    """Load one finalized snapshot directory, validating checksums.
+
+    Raises :class:`SnapshotError` on a missing manifest, a missing blob, or
+    a checksum mismatch — callers (``latest_valid_snapshot``) treat that as
+    "this snapshot does not exist" and fall back.
+    """
+    mpath = os.path.join(path, MANIFEST)
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise SnapshotError(f"unreadable manifest in {path}: {e}") from e
+    if manifest.get("format_version") != FORMAT_VERSION:
+        raise SnapshotError(
+            f"{path}: format_version {manifest.get('format_version')} "
+            f"(this codec reads {FORMAT_VERSION})"
+        )
+
+    def load(fname: str) -> np.ndarray:
+        fpath = os.path.join(path, fname)
+        if not os.path.exists(fpath):
+            raise SnapshotError(f"{path}: missing blob {fname}")
+        if verify:
+            want = manifest["files"].get(fname, {}).get("sha256")
+            if want is not None and _sha256(fpath) != want:
+                raise SnapshotError(f"{path}: checksum mismatch in {fname}")
+        try:
+            return np.load(fpath, mmap_mode="r")
+        except ValueError as e:
+            raise SnapshotError(f"{path}: corrupt blob {fname}: {e}") from e
+
+    snap = RestoredSnapshot(
+        path=path,
+        epoch=int(manifest["epoch"]),
+        domain=int(manifest["domain"]),
+        fingerprint=manifest.get("fingerprint", ""),
+        strat_hash=manifest.get("strat_hash", ""),
+        program_source=manifest.get("program_source", ""),
+        extra_meta=manifest.get("extra_meta", {}),
+    )
+    for name, entry in manifest["relations"].items():
+        arrays = {
+            f: load(ref["file"]) for f, ref in entry["arrays"].items()
+        }
+        snap.handles[name] = relation_from_blocks(name, entry["meta"], arrays)
+    for idx, mats in manifest.get("bitmatrix", {}).items():
+        snap.bitmatrix[int(idx)] = {
+            f: load(ref["file"]) for f, ref in mats.items()
+        }
+    for key, ref in manifest.get("extra_arrays", {}).items():
+        snap.extra_arrays[key] = load(ref["file"])
+    return snap
+
+
+def read_manifest(path: str) -> dict:
+    """Just the manifest of one finalized snapshot — no blob loads/hashes.
+
+    For cheap metadata probes (epoch, fingerprint) where full validation is
+    unnecessary; raises :class:`SnapshotError` like :func:`read_snapshot`.
+    """
+    try:
+        with open(os.path.join(path, MANIFEST)) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise SnapshotError(f"unreadable manifest in {path}: {e}") from e
+
+
+def list_snapshots(root: str) -> list[str]:
+    """Finalized snapshot directories under ``root``, oldest → newest."""
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for name in os.listdir(root):
+        if not name.startswith(SNAP_PREFIX) or ".tmp-" in name:
+            continue
+        if os.path.exists(os.path.join(root, name, MANIFEST)):
+            out.append(os.path.join(root, name))
+    return sorted(out)
+
+
+def latest_valid_snapshot(root: str) -> RestoredSnapshot | None:
+    """Newest snapshot that passes full validation (checksums included).
+
+    Torn tmp directories are never considered; a finalized-but-corrupt
+    snapshot is skipped and the previous one is tried — recovery lands on a
+    consistent epoch or (no valid snapshot at all) on ``None``.
+    """
+    for path in reversed(list_snapshots(root)):
+        try:
+            return read_snapshot(path)
+        except SnapshotError:
+            continue
+    return None
+
+
+def prune_snapshots(root: str, keep: int) -> int:
+    """Delete the oldest finalized snapshots beyond ``keep``; returns count.
+
+    Torn tmp directories are always removed.
+    """
+    removed = 0
+    if os.path.isdir(root):
+        for name in os.listdir(root):
+            if name.startswith(SNAP_PREFIX) and ".tmp-" in name:
+                shutil.rmtree(os.path.join(root, name), ignore_errors=True)
+    snaps = list_snapshots(root)
+    for path in snaps[: max(len(snaps) - max(keep, 1), 0)]:
+        shutil.rmtree(path, ignore_errors=True)
+        removed += 1
+    return removed

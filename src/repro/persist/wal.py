@@ -1,0 +1,275 @@
+"""Delta WAL: committed update batches as CRC-framed append-only records.
+
+FlowLog treats delta batches as the unit of incremental work; here they are
+the unit of *logging*.  One record per submitted update request::
+
+    header  <IIqBBHI = magic, crc32, epoch, op, arity, rel_len, n_rows
+    payload          = relation name (utf-8) + rows (int32, C-order)
+
+``epoch`` is the epoch the batch is *about* to publish (the writer appends
+before the epoch swap, so a record is durable before its effects are
+visible).  ``crc32`` covers the header tail plus the payload, so both a torn
+write and bit rot end replay cleanly: :meth:`DeltaWAL.replay` yields records
+up to the first frame that is short, mis-magicked, or checksum-broken, and
+ignores everything after — the recovery contract is "a consistent prefix of
+the log", exactly what redo needs.
+
+Durability knobs (``fsync=``):
+
+* ``"batch"`` (default) — appends buffer in the OS page cache;
+  :meth:`commit` flushes + fsyncs once per admission group.  One fsync
+  amortizes over the whole coalesced batch, the same way the serving layer
+  amortizes fixpoint work.
+* ``"always"`` — fsync every record (commit latency per request).
+* ``"off"`` — never fsync (tests, read-only replay handles).
+
+Truncation (:meth:`truncate`) runs at checkpoint time: records at or below
+the snapshot epoch are dropped by rewriting the surviving tail into a tmp
+file and atomically renaming it into place, so restart cost stays
+proportional to the tail, not the update history.
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+import threading
+import zlib
+from collections import Counter
+from dataclasses import dataclass
+from typing import Iterator
+
+import numpy as np
+
+_MAGIC = 0x57414C31                       # "WAL1"
+_HEADER = struct.Struct("<IIqBBHI")       # magic crc epoch op arity rel_len nrows
+_CRC_SKIP = 8                             # crc covers the header past magic+crc
+OP_INSERT, OP_DELETE = 0, 1
+_ABORT = 2                                # op | _ABORT = abort marker for op
+_OP_CODE = {"insert": OP_INSERT, "delete": OP_DELETE}
+_OP_NAME = {v: k for k, v in _OP_CODE.items()}
+
+
+@dataclass
+class WalRecord:
+    """One logged update request."""
+
+    rel: str
+    op: str                  # "insert" | "delete"
+    rows: np.ndarray         # int32[k, arity]
+    epoch: int               # epoch the batch publishes
+
+
+def _raw_frames(data: bytes):
+    """(epoch, op_code, rel, raw_rows_bytes, arity, nrows) for the longest
+    valid frame prefix of a raw log image (abort markers included)."""
+    pos = 0
+    while pos + _HEADER.size <= len(data):
+        magic, crc, epoch, op, arity, rel_len, nrows = _HEADER.unpack_from(
+            data, pos
+        )
+        span = rel_len + nrows * arity * 4
+        end = pos + _HEADER.size + span
+        if (
+            magic != _MAGIC
+            or (op & ~_ABORT) not in _OP_NAME
+            or end > len(data)
+            or (zlib.crc32(data[pos + _CRC_SKIP : end]) & 0xFFFFFFFF) != crc
+        ):
+            break                        # torn tail or bit rot: stop cleanly
+        body = pos + _HEADER.size
+        rel = data[body : body + rel_len].decode()
+        yield epoch, op, rel, data[body + rel_len : end], arity, nrows
+        pos = end
+
+
+def _parse_frames(
+    data: bytes, after_epoch: int | None = None
+) -> Iterator[WalRecord]:
+    """Decode the valid frame prefix, honoring abort markers.
+
+    An abort marker is a full copy of a logged record whose request was
+    acknowledged as *failed* (op | ``_ABORT``): replay must not redo it, or
+    a transiently-failed batch would succeed on recovery and the restored
+    state would contain rows every client was told failed.  Cancellation is
+    a multiset match on ``(epoch, op, rel, payload)`` — insert/delete are
+    idempotent set operations, so identical records are interchangeable and
+    which duplicate gets skipped cannot change the replayed state.
+    """
+    frames = list(_raw_frames(data))
+    aborted = Counter(
+        (epoch, op & ~_ABORT, rel, raw)
+        for epoch, op, rel, raw, _a, _n in frames
+        if op & _ABORT
+    )
+    for epoch, op, rel, raw, arity, nrows in frames:
+        if op & _ABORT:
+            continue
+        key = (epoch, op, rel, raw)
+        if aborted.get(key, 0) > 0:
+            aborted[key] -= 1
+            continue
+        if after_epoch is not None and epoch <= after_epoch:
+            continue
+        rows = np.frombuffer(raw, np.int32).reshape(nrows, arity)
+        yield WalRecord(rel, _OP_NAME[op], rows.copy(), int(epoch))
+
+
+class DeltaWAL:
+    """Append-only, CRC-framed, torn-tail-tolerant update log."""
+
+    def __init__(self, path: str, fsync: str = "batch"):
+        if fsync not in ("batch", "always", "off"):
+            raise ValueError(f"fsync must be batch/always/off, got {fsync!r}")
+        self.path = path
+        self.fsync = fsync
+        self._lock = threading.Lock()
+        self._truncate_lock = threading.Lock()   # one truncation at a time
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+        self._f = open(path, "ab")
+        self.appended_records = 0
+        self.synced_records = 0
+        self.syncs = 0
+
+    # -- write side ----------------------------------------------------------
+
+    def append(
+        self, rel: str, op: str, rows: np.ndarray, epoch: int,
+        abort: bool = False,
+    ) -> int:
+        """Append one record; returns the file offset it starts at.
+
+        Durable only after :meth:`commit` (or immediately with
+        ``fsync="always"``).  ``abort=True`` appends an *abort marker* — a
+        copy of a previously-logged record whose request was acknowledged
+        as failed; replay cancels the pair so a transient failure cannot
+        succeed on recovery (see ``_parse_frames``).
+        """
+        rows = np.ascontiguousarray(rows, np.int32)
+        if rows.ndim == 1:
+            rows = rows[:, None]
+        arity = rows.shape[1] if rows.size else rows.shape[-1]
+        if not 1 <= arity <= 255:
+            raise ValueError(f"arity {arity} out of WAL range [1, 255]")
+        code = _OP_CODE[op] | (_ABORT if abort else 0)
+        rel_b = rel.encode()
+        payload = rel_b + rows.tobytes()
+        header = _HEADER.pack(
+            _MAGIC, 0, int(epoch), code, arity, len(rel_b), rows.shape[0]
+        )
+        crc = zlib.crc32(header[_CRC_SKIP:] + payload) & 0xFFFFFFFF
+        header = _HEADER.pack(
+            _MAGIC, crc, int(epoch), code, arity, len(rel_b), rows.shape[0]
+        )
+        with self._lock:
+            offset = self._f.tell()
+            self._f.write(header + payload)
+            self.appended_records += 1
+            if self.fsync == "always":
+                self._sync_locked()
+        return offset
+
+    def commit(self) -> None:
+        """Flush + fsync everything appended so far (one call per batch)."""
+        with self._lock:
+            if self.fsync != "off":
+                self._sync_locked()
+            else:
+                self._f.flush()
+
+    def _sync_locked(self) -> None:
+        self._f.flush()
+        os.fsync(self._f.fileno())
+        self.syncs += 1
+        self.synced_records = self.appended_records
+
+    # -- read side -----------------------------------------------------------
+
+    def replay(self, after_epoch: int | None = None) -> Iterator[WalRecord]:
+        """Records in append order, stopping at the first torn/corrupt frame.
+
+        With ``after_epoch``, frames at or below that epoch are skipped (they
+        are already reflected in the snapshot being recovered from).
+        """
+        with self._lock:
+            self._f.flush()
+            with open(self.path, "rb") as f:
+                data = f.read()
+        yield from _parse_frames(data, after_epoch)
+
+    # -- maintenance ---------------------------------------------------------
+
+    def truncate(self, up_to_epoch: int) -> int:
+        """Drop records at or below ``up_to_epoch``; returns survivors kept.
+
+        Atomic: survivors are rewritten to a tmp file which replaces the log
+        in one rename — a crash mid-truncate leaves the old (superset) log,
+        which replays to the same state (replay filters by epoch anyway).
+
+        Concurrency: the expensive part (scanning + rewriting the surviving
+        tail) runs *outside* the append lock, so a checkpoint does not stall
+        the writer thread's batch commits; the lock is retaken only to copy
+        whatever raw frames were appended since the scan (a small tail) and
+        swap the file.  Records fsynced mid-truncate therefore always
+        survive.  Concurrent truncations serialize on their own lock.
+        """
+        tmp = self.path + ".tmp"
+        with self._truncate_lock:
+            with self._lock:
+                self._f.flush()
+                with open(self.path, "rb") as f:
+                    data = f.read()
+            # scan + rewrite off-lock: appends proceed meanwhile
+            survivors = list(_parse_frames(data, after_epoch=up_to_epoch))
+            out = open(tmp, "wb")
+            writer = DeltaWAL.__new__(DeltaWAL)
+            writer.path, writer.fsync = tmp, "off"
+            writer._lock = threading.Lock()
+            writer._f = out
+            writer.appended_records = writer.synced_records = writer.syncs = 0
+            for rec in survivors:
+                writer.append(rec.rel, rec.op, rec.rows, rec.epoch)
+            with self._lock:
+                self._f.flush()
+                with open(self.path, "rb") as f:
+                    f.seek(len(data))
+                    appended = f.read()   # frames landed during the rewrite
+                # appended frames keep their raw bytes (their epochs exceed
+                # any checkpoint floor; even for an arbitrary user floor a
+                # kept-superset log replays identically — replay filters)
+                out.write(appended)
+                out.flush()
+                os.fsync(out.fileno())
+                out.close()
+                self._f.close()
+                os.replace(tmp, self.path)
+                self._f = open(self.path, "ab")
+        return len(survivors)
+
+    def size_bytes(self) -> int:
+        with self._lock:
+            if self._f.closed:
+                return self._closed_size
+            self._f.flush()
+            return self._f.tell()
+
+    _closed_size = 0
+
+    def close(self) -> None:
+        """Fsync and close; idempotent, and stats keep working after."""
+        with self._lock:
+            if not self._f.closed:
+                if self.fsync != "off":
+                    self._sync_locked()
+                else:
+                    self._f.flush()
+                self._closed_size = self._f.tell()
+                self._f.close()
+
+    def __enter__(self) -> "DeltaWAL":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False

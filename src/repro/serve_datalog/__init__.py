@@ -54,11 +54,25 @@ arrived EDB facts is treated as an externally-seeded Δ, and the fixpoint is
    per-request queue/service latencies are recorded with nearest-rank
    percentiles (split idle vs. concurrent-with-update).
 
+6. Durability (``repro.persist``) turns the server from a cache into a
+   system of record: ``DatalogServer(durability=...)`` appends every
+   committed update batch to a delta WAL *before* its epoch publishes
+   (fsync-batched per admission group) and runs a background checkpointer
+   thread that snapshots the latest published epoch off a reader pin —
+   concurrent with the writer, never blocking queries — on an
+   epoch-count/WAL-size policy.  ``MaterializedInstance.restore(path)``
+   warm-starts from the newest valid snapshot (straight onto device, no
+   re-fixpoint) and replays the WAL tail through the incremental drivers,
+   reproducing the pre-crash fixpoint bit-for-bit at a cost proportional
+   to the tail.
+
 See ``docs/architecture.md`` for the layer map and the epoch/snapshot
-lifecycle, and ``docs/serving_api.md`` for the public API contract.
+lifecycle, ``docs/serving_api.md`` for the public API contract, and
+``docs/persistence.md`` for snapshot/WAL formats and the recovery contract.
 """
 
 from repro.core.versioned_store import Snapshot, VersionedStore
+from repro.persist.manager import DurabilityConfig, DurabilityManager
 from repro.serve_datalog.instance import MaterializedInstance, UpdateStats
 from repro.serve_datalog.plan_cache import CompiledPlan, PlanCache, default_cache
 from repro.serve_datalog.server import DatalogServer, RequestError, ServerStats
@@ -74,4 +88,6 @@ __all__ = [
     "ServerStats",
     "Snapshot",
     "VersionedStore",
+    "DurabilityConfig",
+    "DurabilityManager",
 ]

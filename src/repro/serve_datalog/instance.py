@@ -58,6 +58,7 @@ state.
 
 from __future__ import annotations
 
+import os
 import threading
 import time
 from dataclasses import dataclass, field
@@ -148,13 +149,27 @@ class MaterializedInstance:
         self.strat = self.plan.strat
         # the engine hands the handle map over: epochs own all handles, so
         # reclamation of superseded epochs actually frees device buffers
-        self.vstore = VersionedStore(self.engine.take_store(), self.engine.domain)
-        self.cache.warm(self.plan, self.domain, buckets=self._hot_buckets(self.store))
+        handles = self.engine.take_store()
+        domain = self.engine.domain
+        self._install_state(
+            handles, domain, 0, self._init_bitmatrix_state(handles, domain)
+        )
+
+    def _install_state(
+        self, handles: dict, domain: int, epoch: int, bm: dict[int, dict]
+    ) -> None:
+        """Shared tail of construction and restore: install the base epoch.
+
+        PBME residency rides along as the epoch's meta sidecar: a pinned
+        snapshot observes (handles, bm) atomically, which is what lets the
+        durability checkpointer serialize a consistent pair off a reader
+        pin while the writer keeps publishing (see ``repro.persist``).
+        """
+        self._bm: dict[int, dict] = bm
+        self.vstore = VersionedStore(handles, domain, epoch=epoch, meta=bm)
+        self.cache.warm(self.plan, domain, buckets=self._hot_buckets(handles))
         self.update_log: list[UpdateStats] = []
         self._write_lock = threading.Lock()
-        self._bm: dict[int, dict] = self._init_bitmatrix_state(
-            self.store, self.domain
-        )
 
     # -- the published view --------------------------------------------------
 
@@ -184,6 +199,161 @@ class MaterializedInstance:
         done so the epoch's buffers can be reclaimed.
         """
         return self.vstore.pin()
+
+    # -- crash-safe warm-start -----------------------------------------------
+
+    @classmethod
+    def restore(
+        cls,
+        path: str,
+        program: "Program | str | None" = None,
+        config: EngineConfig | None = None,
+        cache: PlanCache | None = None,
+        replay: bool = True,
+    ) -> "MaterializedInstance":
+        """Warm-start from a durability root: snapshot load + WAL replay.
+
+        Loads the newest *valid* snapshot under ``path`` (torn tmp
+        directories and checksum-failed snapshots are skipped — recovery
+        always lands on a consistent epoch), installs its relation handles
+        straight onto device as the store's base epoch — no re-fixpoint —
+        and replays the WAL tail (records above the snapshot epoch) through
+        the ordinary :meth:`insert_facts`/:meth:`retract_facts` incremental
+        drivers.  The result is bit-for-bit the pre-crash fixpoint, at a
+        cost proportional to the WAL tail, not the Datalog program.
+
+        ``program`` may be omitted: the manifest embeds the program source
+        (``repr(Program)`` parses back).  When given, its fingerprint must
+        match the snapshot's.  ``restore_stats`` on the returned instance
+        records what recovery did.
+        """
+        from repro.persist.codec import SnapshotError, latest_valid_snapshot
+        from repro.persist.manager import WAL_NAME
+        from repro.persist.wal import DeltaWAL
+
+        snap = latest_valid_snapshot(path)
+        if snap is None:
+            raise SnapshotError(f"no valid snapshot under {path!r}")
+        source = program if program is not None else snap.program_source
+        if not source:
+            raise SnapshotError(
+                f"{snap.path}: manifest has no program source; pass program="
+            )
+
+        self = cls.__new__(cls)
+        self.cache = cache or default_cache()
+        self.plan = self.cache.get(source)
+        if snap.fingerprint and self.plan.fingerprint != snap.fingerprint:
+            raise SnapshotError(
+                f"{snap.path}: snapshot fingerprint {snap.fingerprint} does "
+                f"not match program fingerprint {self.plan.fingerprint}"
+            )
+        self.strat = self.plan.strat
+        from repro.persist.codec import strat_hash as _strat_hash
+
+        if snap.strat_hash and _strat_hash(self.strat) != snap.strat_hash:
+            # stratum indices key the PBME residency sidecar — replaying
+            # into a differently-stratified plan would attach matrices to
+            # the wrong strata
+            raise SnapshotError(
+                f"{snap.path}: snapshot stratification {snap.strat_hash} "
+                "does not match this program's stratification"
+            )
+        self.engine = Engine(config)
+        self.engine.domain = snap.domain
+        self.engine.strat = self.strat
+        # handles stream straight from the memmapped blocks onto device; the
+        # store's base epoch takes sole ownership (no engine round-trip —
+        # the engine never ran, so it holds no scratch to hand off)
+        handles = dict(snap.handles)
+        self._install_state(
+            handles, snap.domain, snap.epoch,
+            self._restore_bitmatrix_state(snap, handles, snap.domain),
+        )
+        self.restore_stats = {
+            "snapshot_path": snap.path,
+            "snapshot_epoch": snap.epoch,
+            "replayed_records": 0,
+            "replayed_batches": 0,
+            "skipped_records": 0,
+        }
+        if replay:
+            wal_path = os.path.join(path, WAL_NAME)
+            if os.path.exists(wal_path):
+                wal = DeltaWAL(wal_path, fsync="off")
+                try:
+                    self._replay_wal(wal, snap.epoch)
+                finally:
+                    wal.close()
+        return self
+
+    def _restore_bitmatrix_state(
+        self, snap, handles: dict, domain: int
+    ) -> dict[int, dict]:
+        """PBME residency from the snapshot's packed matrices.
+
+        A stratum that is PBME-eligible but missing from the snapshot (e.g.
+        an engine-side checkpoint, which has no residency sidecar) is
+        re-packed from the loaded relations — same result, just not free.
+        """
+        from repro.core.bitmatrix import edges_to_bitmatrix
+
+        bm: dict[int, dict] = {}
+        for stratum in self.strat.strata:
+            plan = self._bm_eligible(stratum, domain)
+            if plan is None or plan.edb not in handles:
+                continue
+            mats = snap.bitmatrix.get(stratum.index)
+            if mats is not None and {"arc", "m"} <= set(mats):
+                arc = jnp.asarray(np.ascontiguousarray(mats["arc"]))
+                m = jnp.asarray(np.ascontiguousarray(mats["m"]))
+            else:
+                arc = edges_to_bitmatrix(handles[plan.edb].to_numpy(), domain)
+                m = edges_to_bitmatrix(handles[plan.idb].to_numpy(), domain)
+            bm[stratum.index] = {"plan": plan, "arc": arc, "m": m}
+        return bm
+
+    def _replay_wal(self, wal, after_epoch: int) -> None:
+        """Redo the WAL tail through the incremental update drivers.
+
+        Consecutive records sharing (epoch, op, relation) were one coalesced
+        server batch — they are re-applied as one batch, reproducing the
+        pre-crash apply order exactly.  A batch that raises falls back to
+        per-record application with failures skipped, mirroring the server's
+        per-request fallback (a record whose batch failed pre-crash never
+        published, so skipping it on replay converges to the same state).
+        """
+        stats = self.restore_stats
+        pending: list = []
+
+        def flush() -> None:
+            if not pending:
+                return
+            op, rel = pending[0].op, pending[0].rel
+            fn = self.insert_facts if op == "insert" else self.retract_facts
+            rows = np.concatenate([r.rows for r in pending])
+            try:
+                fn(rel, rows)
+                stats["replayed_records"] += len(pending)
+            except Exception:
+                for rec in pending:
+                    try:
+                        fn(rec.rel, rec.rows)
+                        stats["replayed_records"] += 1
+                    except Exception:
+                        stats["skipped_records"] += 1
+            stats["replayed_batches"] += 1
+            pending.clear()
+
+        for rec in wal.replay(after_epoch=after_epoch):
+            if pending and (
+                rec.epoch != pending[0].epoch
+                or rec.op != pending[0].op
+                or rec.rel != pending[0].rel
+            ):
+                flush()
+            pending.append(rec)
+        flush()
 
     def _hot_buckets(self, handles: dict) -> tuple[int, ...]:
         """Warm the *actual* materialized capacities, not just defaults."""
@@ -345,7 +515,9 @@ class MaterializedInstance:
                 result = apply_fn(txn)
                 if txn.mutated:
                     self._bm = txn.bm
-                    stats.epoch = self.vstore.publish(txn.store, txn.domain)
+                    stats.epoch = self.vstore.publish(
+                        txn.store, txn.domain, meta=txn.bm
+                    )
                 else:
                     stats.epoch = base.epoch
                 return result

@@ -136,6 +136,7 @@ class DatalogServer:
         max_batch: int = 64,
         history: int = 4096,
         snapshot_reads: bool = True,
+        durability=None,
     ):
         self.instance = instance
         self.max_batch = max_batch
@@ -147,6 +148,29 @@ class DatalogServer:
         self._next_id = 0
         # (thread, group, out, t0, base_epoch) of the one in-flight update
         self._writer: tuple | None = None
+        # -- durability (optional): WAL + background checkpointer -------------
+        self.durability = None
+        self._ckpt_thread: threading.Thread | None = None
+        self._ckpt_stop = threading.Event()
+        self._ckpt_wake = threading.Event()
+        self.checkpoint_errors: list[str] = []
+        if durability is not None:
+            from repro.persist.manager import DurabilityManager
+
+            self.durability = (
+                durability
+                if isinstance(durability, DurabilityManager)
+                else DurabilityManager(durability)
+            )
+            # a WAL with no base snapshot cannot rebuild the instance — the
+            # initial fixpoint is snapshotted once at attach time
+            self.durability.ensure_baseline(instance)
+            self._ckpt_thread = threading.Thread(
+                target=self._checkpoint_loop,
+                name="datalog-checkpointer",
+                daemon=True,
+            )
+            self._ckpt_thread.start()
 
     # -- submission ----------------------------------------------------------
 
@@ -344,6 +368,15 @@ class DatalogServer:
         """
         fn = getattr(self.instance, self._UPDATE_FNS[group[0].kind])
         epoch0 = self.instance.epoch
+        if self.durability is not None:
+            # WAL-before-publish: every record of the group is durable (one
+            # batched fsync) before any effect can become visible.  The
+            # logged epoch is the one this batch publishes if it mutates;
+            # replay is redo-idempotent, so a no-op or failed batch's record
+            # is harmless.
+            self.durability.log_group(
+                [(r.rel, r.kind, r.payload) for r in group], epoch0 + 1
+            )
         try:
             rows = np.concatenate([r.payload for r in group])
             batch = fn(group[0].rel, rows)
@@ -357,6 +390,18 @@ class DatalogServer:
                 for r in group
             }
         except Exception:
+            if self.durability is not None:
+                # the coalesced attempt failed: abort every group record
+                # (each fallback request re-logs below at its own predicted
+                # epoch, so a checkpoint landing mid-fallback can't truncate
+                # a record whose effects it doesn't contain).  Without the
+                # abort markers, a batch that failed *transiently* here
+                # could succeed when its records replay on recovery — and
+                # the restored state would contain rows whose submitters
+                # were told they failed.
+                self.durability.abort_group(
+                    [(r.rel, r.kind, r.payload) for r in group], epoch0 + 1
+                )
             if self.instance.epoch != epoch0:
                 # a failed attempt must publish nothing — if an epoch landed
                 # anyway, re-applying would double-apply the committed rows
@@ -368,10 +413,23 @@ class DatalogServer:
                     )
                     for r in group
                 }
-            return {
-                r.rid: self._apply(lambda r=r: fn(r.rel, r.payload), r.rid)
-                for r in group
-            }
+            results = {}
+            for r in group:
+                predicted = self.instance.epoch + 1
+                if self.durability is not None:
+                    self.durability.log_group(
+                        [(r.rel, r.kind, r.payload)], predicted
+                    )
+                results[r.rid] = self._apply(lambda r=r: fn(r.rel, r.payload), r.rid)
+                if self.durability is not None and isinstance(
+                    results[r.rid], RequestError
+                ):
+                    # acknowledged as failed: its re-logged record must not
+                    # be redone on recovery
+                    self.durability.abort_group(
+                        [(r.rel, r.kind, r.payload)], predicted
+                    )
+            return results
 
     # -- shared bookkeeping ---------------------------------------------------
 
@@ -395,6 +453,8 @@ class DatalogServer:
             )
         while len(self.done) > self.history:     # evict oldest results
             self.done.pop(next(iter(self.done)))
+        if self.durability is not None and group[0].kind in self._UPDATE_FNS:
+            self._ckpt_wake.set()       # nudge the checkpointer's policy check
 
     @staticmethod
     def _apply(fn, rid: int):
@@ -428,3 +488,55 @@ class DatalogServer:
             1 for r in self.stats.records if r.kind == "query" and r.concurrent
         )
         return s
+
+    # -- durability (WAL + background checkpointer) ---------------------------
+
+    def _checkpoint_loop(self) -> None:
+        """Snapshot off a reader pin whenever the checkpoint policy fires.
+
+        Runs on its own daemon thread for the server's lifetime, woken after
+        each published update batch (and on a poll heartbeat).  Everything it
+        does is read-side — pin an epoch, serialize immutable handles,
+        truncate the WAL — so it overlaps the writer thread and in-flight
+        query batches; it never takes the instance write lock.
+        """
+        poll = self.durability.config.poll_seconds
+        while not self._ckpt_stop.is_set():
+            self._ckpt_wake.wait(timeout=poll)
+            self._ckpt_wake.clear()
+            if self._ckpt_stop.is_set():
+                break
+            try:
+                if self.durability.should_checkpoint(self.instance.epoch):
+                    self.durability.checkpoint(self.instance)
+            except Exception as e:      # noqa: BLE001 — keep serving on failure
+                self.checkpoint_errors.append(f"{type(e).__name__}: {e}")
+                del self.checkpoint_errors[:-64]
+
+    def checkpoint_now(self) -> str | None:
+        """Force a checkpoint of the latest published epoch (blocking)."""
+        if self.durability is None:
+            raise RuntimeError("server was constructed without durability=")
+        return self.durability.checkpoint(self.instance)
+
+    def durability_stats(self) -> dict:
+        """WAL/checkpoint counters (empty dict when durability is off)."""
+        if self.durability is None:
+            return {}
+        s = self.durability.stats()
+        s["checkpoint_errors"] = len(self.checkpoint_errors)
+        return s
+
+    def close(self) -> None:
+        """Stop the checkpointer thread and fsync-close the WAL.
+
+        Idempotent; does NOT take a final checkpoint — the WAL already holds
+        every published batch, which is the durability contract.
+        """
+        self._ckpt_stop.set()
+        self._ckpt_wake.set()
+        if self._ckpt_thread is not None:
+            self._ckpt_thread.join(timeout=5.0)
+            self._ckpt_thread = None
+        if self.durability is not None:
+            self.durability.close()

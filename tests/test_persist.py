@@ -1,0 +1,599 @@
+"""Durability: snapshot codec, delta WAL, crash injection, warm-start.
+
+Layers under test:
+
+* ``repro.persist.wal`` — CRC-framed append/replay, torn-tail tolerance,
+  epoch filtering, atomic truncation.
+* ``repro.persist.codec`` — snapshot round-trip for all three relation
+  kinds + packed PBME residency, checksum validation, torn-tmp and
+  corrupt-snapshot fallback.
+* ``MaterializedInstance.restore`` — snapshot load + WAL-tail replay is
+  bit-for-bit the pre-crash fixpoint, across the crash points that matter:
+  after WAL append but before epoch publish, and mid-snapshot (torn tmp).
+* ``Engine._save_fixpoint``/``_load_fixpoint`` — mid-fixpoint checkpoints
+  in the unified codec format resume to the exact fixpoint.
+* ``DatalogServer(durability=...)`` — WAL-before-publish on the serving
+  path, the background checkpointer's policy, reads during checkpoint.
+"""
+
+import os
+import shutil
+import threading
+
+import numpy as np
+import pytest
+
+from conftest import adj_of, random_edges, tc_oracle
+from repro.configs.datalog_workloads import ALL as WORKLOADS
+from repro.core import Engine, EngineConfig
+from repro.core.relation import (
+    DenseAggRelation,
+    DenseSetRelation,
+    TupleRelation,
+    relation_from_blocks,
+    relation_to_blocks,
+)
+from repro.persist import (
+    DeltaWAL,
+    DurabilityConfig,
+    SnapshotError,
+    latest_valid_snapshot,
+    list_snapshots,
+    prune_snapshots,
+    read_snapshot,
+    write_snapshot,
+)
+from repro.serve_datalog import DatalogServer, MaterializedInstance
+
+TC = WORKLOADS["tc"].program
+TC_SRC = "tc(x,y) :- arc(x,y).  tc(x,y) :- tc(x,z), arc(z,y)."
+
+
+def _as_set(rows):
+    return set(map(tuple, np.asarray(rows).tolist()))
+
+
+def _assert_bit_for_bit(a: MaterializedInstance, b: MaterializedInstance):
+    """Every relation of ``b`` equals ``a``'s exactly (sorted numpy rows)."""
+    rels = set(a.strat.edb) | set(a.strat.idb)
+    for rel in rels:
+        ra, rb = a.relation(rel), b.relation(rel)
+        assert np.array_equal(ra, rb), f"{rel}: {ra} != {rb}"
+
+
+# --------------------------------------------------------------------------
+# Delta WAL
+# --------------------------------------------------------------------------
+
+
+def test_wal_append_replay_round_trip(tmp_path):
+    wal = DeltaWAL(str(tmp_path / "wal.log"))
+    r1 = np.array([[0, 1], [2, 3]], np.int32)
+    r2 = np.array([[7, 8, 9]], np.int32)
+    wal.append("arc", "insert", r1, epoch=1)
+    wal.append("edge3", "delete", r2, epoch=2)
+    wal.commit()
+    recs = list(wal.replay())
+    assert [(r.rel, r.op, r.epoch) for r in recs] == [
+        ("arc", "insert", 1), ("edge3", "delete", 2)
+    ]
+    assert np.array_equal(recs[0].rows, r1)
+    assert np.array_equal(recs[1].rows, r2)
+    # epoch filter skips frames already covered by a snapshot
+    assert [r.epoch for r in wal.replay(after_epoch=1)] == [2]
+    wal.close()
+
+
+def test_wal_torn_tail_stops_replay(tmp_path):
+    path = str(tmp_path / "wal.log")
+    wal = DeltaWAL(path)
+    wal.append("arc", "insert", np.array([[0, 1]], np.int32), epoch=1)
+    wal.append("arc", "insert", np.array([[1, 2]], np.int32), epoch=2)
+    wal.close()
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:          # tear the second record mid-frame
+        f.truncate(size - 3)
+    recs = list(DeltaWAL(path, fsync="off").replay())
+    assert [r.epoch for r in recs] == [1]
+
+
+def test_wal_bit_rot_stops_replay(tmp_path):
+    path = str(tmp_path / "wal.log")
+    wal = DeltaWAL(path)
+    wal.append("arc", "insert", np.array([[0, 1]], np.int32), epoch=1)
+    wal.append("arc", "insert", np.array([[1, 2]], np.int32), epoch=2)
+    first_len = wal.size_bytes() // 2
+    wal.close()
+    with open(path, "r+b") as f:          # flip a payload byte in record 2
+        f.seek(first_len + 30)
+        b = f.read(1)
+        f.seek(first_len + 30)
+        f.write(bytes([b[0] ^ 0xFF]))
+    recs = list(DeltaWAL(path, fsync="off").replay())
+    assert [r.epoch for r in recs] == [1]
+
+
+def test_wal_truncate_never_drops_concurrent_appends(tmp_path):
+    """A record fsynced during a concurrent truncate must survive the swap.
+
+    truncate(0) drops nothing, so after hammering appends against repeated
+    truncations every record must still be in the log — a truncate that
+    read the file before an append and renamed after it would lose it.
+    """
+    wal = DeltaWAL(str(tmp_path / "wal.log"), fsync="off")
+    n = 200
+    stop = threading.Event()
+
+    def truncator():
+        while not stop.is_set():
+            wal.truncate(up_to_epoch=0)
+
+    th = threading.Thread(target=truncator)
+    th.start()
+    try:
+        for e in range(1, n + 1):
+            wal.append("arc", "insert", np.array([[e, e]], np.int32), epoch=e)
+            wal.commit()
+    finally:
+        stop.set()
+        th.join()
+    assert [r.epoch for r in wal.replay()] == list(range(1, n + 1))
+    wal.close()
+
+
+def test_wal_abort_markers_cancel_failed_records(tmp_path):
+    wal = DeltaWAL(str(tmp_path / "wal.log"), fsync="off")
+    r1 = np.array([[0, 1]], np.int32)
+    r2 = np.array([[1, 2]], np.int32)
+    wal.append("arc", "insert", r1, epoch=1)
+    wal.append("arc", "insert", r2, epoch=1)
+    wal.append("arc", "insert", r1, epoch=1, abort=True)   # r1 acked failed
+    assert [(r.epoch, r.rows.tolist()) for r in wal.replay()] == [
+        (1, [[1, 2]])
+    ]
+    # an identical record logged later (retry that succeeded) still replays
+    wal.append("arc", "insert", r1, epoch=2)
+    assert [r.epoch for r in wal.replay()] == [1, 2]
+    # truncation resolves abort pairs away and keeps the survivors exact
+    wal.truncate(up_to_epoch=0)
+    assert [(r.epoch, r.rows.tolist()) for r in wal.replay()] == [
+        (1, [[1, 2]]), (2, [[0, 1]])
+    ]
+    wal.close()
+
+
+def test_wal_truncate_drops_covered_epochs(tmp_path):
+    path = str(tmp_path / "wal.log")
+    wal = DeltaWAL(path)
+    for e in range(1, 6):
+        wal.append("arc", "insert", np.array([[e, e + 1]], np.int32), epoch=e)
+    kept = wal.truncate(up_to_epoch=3)
+    assert kept == 2
+    assert [r.epoch for r in wal.replay()] == [4, 5]
+    # appends keep working after the rename swap
+    wal.append("arc", "delete", np.array([[9, 9]], np.int32), epoch=6)
+    assert [r.epoch for r in wal.replay()] == [4, 5, 6]
+    wal.close()
+
+
+# --------------------------------------------------------------------------
+# Snapshot codec
+# --------------------------------------------------------------------------
+
+
+def test_relation_blocks_round_trip_all_kinds():
+    t = TupleRelation.from_numpy("t", np.array([[3, 1], [0, 2]], np.int32), 8)
+    s = DenseSetRelation.empty("s", 70).update(
+        np.array([3, 64, 7]), np.array([True, True, False])
+    )
+    a = DenseAggRelation.empty("a", 9, "MIN").update(
+        np.array([1, 5]), np.array([4, 2]), np.array([True, True])
+    )
+    for h in (t, s, a):
+        meta, arrays = relation_to_blocks(h)
+        back = relation_from_blocks(h.name, meta, arrays)
+        assert type(back) is type(h) and back.count == h.count
+        assert np.array_equal(back.to_numpy(), h.to_numpy())
+    # dense delta state survives (mid-fixpoint checkpoints resume from it)
+    _, arrays = relation_to_blocks(s)
+    s2 = relation_from_blocks("s", {"kind": "dense_set", "n": 70}, arrays)
+    assert np.array_equal(np.asarray(s2.delta), np.asarray(s.delta))
+
+
+def test_snapshot_write_read_round_trip(tmp_path):
+    root = str(tmp_path)
+    handles = {
+        "arc": TupleRelation.from_numpy(
+            "arc", np.array([[0, 1], [1, 2]], np.int32), 4
+        ),
+        "seen": DenseSetRelation.empty("seen", 4).update(
+            np.array([1, 2]), np.array([True, True])
+        ),
+    }
+    bm = {0: {"arc": np.array([[1, 2]], np.uint32),
+              "m": np.array([[3, 4]], np.uint32)}}
+    path = write_snapshot(
+        root, handles=handles, domain=4, epoch=7, fingerprint="fp",
+        stratification_hash="sh", program_source="r(x) :- e(x).",
+        bitmatrix=bm, extra_meta={"k": 1}, extra_arrays={"d": np.arange(3)},
+    )
+    snap = read_snapshot(path)
+    assert (snap.epoch, snap.domain) == (7, 4)
+    assert (snap.fingerprint, snap.strat_hash) == ("fp", "sh")
+    assert snap.program_source == "r(x) :- e(x)."
+    assert _as_set(snap.handles["arc"].to_numpy()) == {(0, 1), (1, 2)}
+    assert snap.handles["seen"].count == 2
+    assert np.array_equal(np.asarray(snap.bitmatrix[0]["m"]), bm[0]["m"])
+    assert snap.extra_meta["k"] == 1
+    assert np.array_equal(np.asarray(snap.extra_arrays["d"]), np.arange(3))
+    # idempotent: re-writing the same epoch is a no-op, not an error
+    assert write_snapshot(root, handles=handles, domain=4, epoch=7) == path
+
+
+def test_corrupt_snapshot_falls_back_to_previous(tmp_path):
+    root = str(tmp_path)
+    h = {"arc": TupleRelation.from_numpy("arc", np.array([[0, 1]], np.int32), 2)}
+    p1 = write_snapshot(root, handles=h, domain=2, epoch=1)
+    p2 = write_snapshot(root, handles=h, domain=2, epoch=2)
+    blob = next(f for f in os.listdir(p2) if f.endswith(".npy"))
+    with open(os.path.join(p2, blob), "r+b") as f:   # bit-rot epoch 2
+        f.seek(40)
+        f.write(b"\xff\xff")
+    with pytest.raises(SnapshotError):
+        read_snapshot(p2)
+    snap = latest_valid_snapshot(root)
+    assert snap is not None and snap.epoch == 1 and snap.path == p1
+
+
+def test_torn_tmp_dir_is_never_a_snapshot(tmp_path):
+    root = str(tmp_path)
+    h = {"arc": TupleRelation.from_numpy("arc", np.array([[0, 1]], np.int32), 2)}
+    write_snapshot(root, handles=h, domain=2, epoch=3)
+    torn = os.path.join(root, "snapshot-000000000009.tmp-12345")
+    os.makedirs(torn)
+    with open(os.path.join(torn, "rel.arc.rows.npy"), "wb") as f:
+        f.write(b"partial")                           # crash mid-snapshot
+    assert latest_valid_snapshot(root).epoch == 3
+    prune_snapshots(root, keep=1)
+    assert not os.path.exists(torn)                   # tmp debris is swept
+
+
+# --------------------------------------------------------------------------
+# Crash injection through the serving stack
+# --------------------------------------------------------------------------
+
+
+def _durable_server(tmp_path, edges, **cfg_kw):
+    inst = MaterializedInstance(
+        TC_SRC, {"arc": edges}, EngineConfig(backend="tuple")
+    )
+    cfg_kw.setdefault("checkpoint_every_epochs", 0)
+    cfg_kw.setdefault("checkpoint_wal_bytes", 0)
+    cfg = DurabilityConfig(root=str(tmp_path / "dur"), **cfg_kw)
+    return inst, DatalogServer(inst, durability=cfg)
+
+
+def test_restore_replays_wal_tail_bit_for_bit(rng, tmp_path):
+    edges = random_edges(rng, 24, 60)
+    inst, srv = _durable_server(tmp_path, edges[:-6])
+    srv.submit_insert("arc", edges[-6:-3])
+    srv.submit_delete("arc", edges[:2])
+    srv.submit_insert("arc", edges[-3:])
+    srv.run()
+    srv.close()
+    restored = MaterializedInstance.restore(str(tmp_path / "dur"))
+    _assert_bit_for_bit(inst, restored)
+    assert restored.epoch == inst.epoch   # epoch numbering continues
+    assert restored.restore_stats["replayed_records"] == 3
+    # the restored instance is live: further updates work incrementally
+    stats = restored.insert_facts("arc", edges[:1])
+    assert stats.epoch == inst.epoch + 1
+
+
+def test_crash_between_wal_append_and_publish(rng, tmp_path):
+    """A record durable in the WAL whose epoch never published is redone.
+
+    Simulates the writer dying after ``log_group`` fsynced but before the
+    epoch swap: recovery must land on a consistent fixpoint — the
+    from-scratch evaluation of the EDB plus the logged batch — never on a
+    partial state.
+    """
+    edges = random_edges(rng, 24, 60)
+    batch = edges[-4:]
+    inst, srv = _durable_server(tmp_path, edges[:-4])
+    srv.run()                              # baseline snapshot only
+    srv.durability.log_group([("arc", "insert", batch)], inst.epoch + 1)
+    srv.close()                            # crash: batch never applied
+    restored = MaterializedInstance.restore(str(tmp_path / "dur"))
+    oracle = MaterializedInstance(
+        TC_SRC, {"arc": edges}, EngineConfig(backend="tuple")
+    )
+    assert _as_set(restored.relation("arc")) == _as_set(oracle.relation("arc"))
+    assert _as_set(restored.relation("tc")) == _as_set(oracle.relation("tc"))
+
+
+def test_crash_mid_snapshot_recovers_from_previous_epoch(rng, tmp_path):
+    """A torn/corrupt newest snapshot must not poison recovery.
+
+    The WAL still holds every batch above the *previous* snapshot's epoch
+    (truncation only runs after a snapshot finalizes), so recovery from the
+    older snapshot replays a longer tail to the same fixpoint.
+    """
+    edges = random_edges(rng, 24, 60)
+    inst, srv = _durable_server(tmp_path, edges[:-6])
+    srv.submit_insert("arc", edges[-6:-3])
+    srv.run()
+    srv.submit_insert("arc", edges[-3:])
+    srv.run()
+    root = str(tmp_path / "dur")
+    # crash mid-checkpoint: a torn tmp dir plus a finalized-but-corrupt
+    # newest snapshot (checksum catches it)
+    torn = os.path.join(root, "snapshot-000000000099.tmp-1")
+    os.makedirs(torn)
+    with open(os.path.join(torn, "MANIFEST.json"), "w") as f:
+        f.write("{")                       # interrupted json
+    newest = srv.checkpoint_now()
+    blob = next(f for f in sorted(os.listdir(newest)) if f.endswith(".npy"))
+    with open(os.path.join(newest, blob), "r+b") as f:
+        f.seek(50)
+        f.write(b"\x13\x37")
+    srv.close()
+    restored = MaterializedInstance.restore(root)
+    _assert_bit_for_bit(inst, restored)
+    # it really did fall back: the recovered base epoch predates the newest
+    assert restored.restore_stats["snapshot_epoch"] < inst.epoch
+
+
+def test_transient_failure_is_not_redone_on_recovery(rng, tmp_path):
+    """A batch acknowledged as failed must stay failed after a crash.
+
+    The server logs the batch before applying (WAL-before-publish); when
+    the apply raises — transiently, say a device OOM — clients get
+    RequestError and abort markers land in the WAL.  Recovery must not redo
+    the logged intent, or the restored state would contain rows every
+    client was told failed.
+    """
+    edges = random_edges(rng, 24, 60)
+    batch = edges[-4:]
+    inst, srv = _durable_server(tmp_path, edges[:-4])
+    srv.run()                              # baseline snapshot
+    real = inst.insert_facts
+    inst.insert_facts = lambda rel, rows: (_ for _ in ()).throw(
+        RuntimeError("transient device failure")
+    )
+    try:
+        srv.submit_insert("arc", batch)
+        done = srv.run()
+        assert all(
+            type(v).__name__ == "RequestError" for v in done.values()
+        )
+    finally:
+        inst.insert_facts = real
+    srv.close()                            # crash after the failed ack
+    restored = MaterializedInstance.restore(str(tmp_path / "dur"))
+    _assert_bit_for_bit(inst, restored)    # batch absent, exactly pre-crash
+
+
+def test_restore_rejects_mismatched_program(rng, tmp_path):
+    edges = random_edges(rng, 16, 30)
+    _, srv = _durable_server(tmp_path, edges)
+    srv.run()
+    srv.close()
+    with pytest.raises(SnapshotError, match="fingerprint"):
+        MaterializedInstance.restore(
+            str(tmp_path / "dur"),
+            program="other(x,y) :- arc(x,y).",
+        )
+
+
+def test_restore_rejects_mismatched_stratification(rng, tmp_path):
+    import json
+
+    edges = random_edges(rng, 16, 30)
+    _, srv = _durable_server(tmp_path, edges)
+    srv.run()
+    srv.close()
+    root = str(tmp_path / "dur")
+    # simulate a stratifier change: same program fingerprint, different
+    # stratification shape (stratum indices key the PBME sidecar)
+    snap_dir = sorted(
+        p for p in os.listdir(root) if p.startswith("snapshot-")
+    )[-1]
+    mpath = os.path.join(root, snap_dir, "MANIFEST.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["strat_hash"] = "0000000000000000"
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(SnapshotError, match="stratification"):
+        MaterializedInstance.restore(root)
+
+
+def test_restore_without_snapshot_raises(tmp_path):
+    with pytest.raises(SnapshotError, match="no valid snapshot"):
+        MaterializedInstance.restore(str(tmp_path / "empty"))
+
+
+def test_fresh_instance_cannot_attach_to_used_root(rng, tmp_path):
+    """A fresh (non-restored) instance on a used root would log updates at
+    epochs recovery filters out as already-covered — refused at attach."""
+    edges = random_edges(rng, 16, 30)
+    inst, srv = _durable_server(tmp_path, edges[:-2])
+    srv.submit_insert("arc", edges[-2:])
+    srv.run()
+    srv.checkpoint_now()                   # root now checkpointed at epoch 1
+    srv.close()
+    fresh = MaterializedInstance(
+        TC_SRC, {"arc": edges[:-2]}, EngineConfig(backend="tuple")
+    )
+    with pytest.raises(SnapshotError, match="restore"):
+        DatalogServer(fresh, durability=str(tmp_path / "dur"))
+    # a restored instance (epoch continues) re-attaches fine
+    restored = MaterializedInstance.restore(str(tmp_path / "dur"))
+    srv2 = DatalogServer(restored, durability=str(tmp_path / "dur"))
+    srv2.submit_insert("arc", edges[:1])
+    srv2.run()
+    srv2.close()
+    again = MaterializedInstance.restore(str(tmp_path / "dur"))
+    _assert_bit_for_bit(restored, again)
+    # and a different program on the same root is refused outright
+    other = MaterializedInstance(
+        "p(x,y) :- arc(x,y).", {"arc": edges}, EngineConfig(backend="tuple")
+    )
+    with pytest.raises(SnapshotError, match="different program"):
+        DatalogServer(other, durability=str(tmp_path / "dur"))
+
+
+def test_fresh_instance_cannot_attach_over_unreplayed_wal(rng, tmp_path):
+    """Baseline-only corner: snapshot epochs match (both 0) but the WAL
+    holds an unreplayed tail — attaching a fresh instance would collide new
+    records with the stale tail's epoch tags and lose acked history."""
+    edges = random_edges(rng, 16, 30)
+    inst, srv = _durable_server(tmp_path, edges[:-2])
+    srv.submit_insert("arc", edges[-2:])   # logged at epoch 1, no checkpoint
+    srv.run()
+    srv.close()
+    fresh = MaterializedInstance(
+        TC_SRC, {"arc": edges[:-2]}, EngineConfig(backend="tuple")
+    )
+    with pytest.raises(SnapshotError, match="unreplayed WAL"):
+        DatalogServer(fresh, durability=str(tmp_path / "dur"))
+    restored = MaterializedInstance.restore(str(tmp_path / "dur"))
+    DatalogServer(restored, durability=str(tmp_path / "dur")).close()
+
+
+# --------------------------------------------------------------------------
+# Dense + PBME state through the full save/restore cycle
+# --------------------------------------------------------------------------
+
+
+def test_restore_dense_and_pbme_workloads(rng, tmp_path):
+    # PBME-resident TC (auto backend, small domain) with packed matrices
+    edges = random_edges(rng, 32, 120)
+    inst = MaterializedInstance(TC, {"arc": edges[:-4]})
+    srv = DatalogServer(
+        inst,
+        durability=DurabilityConfig(
+            root=str(tmp_path / "pbme"), checkpoint_wal_bytes=0
+        ),
+    )
+    srv.submit_insert("arc", edges[-4:])
+    srv.run()
+    srv.close()
+    restored = MaterializedInstance.restore(str(tmp_path / "pbme"))
+    _assert_bit_for_bit(inst, restored)
+    # PBME residency restored: the next insert takes the bitmatrix path
+    more = np.array([[0, 31], [31, 1]], np.int32)
+    s1, s2 = inst.insert_facts("arc", more), restored.insert_facts("arc", more)
+    assert s1.modes == s2.modes
+    _assert_bit_for_bit(inst, restored)
+
+    # dense-set (reach) and dense-agg (cc) handles round-trip exactly
+    prog = WORKLOADS["cc"].program
+    inst2 = MaterializedInstance(prog, {"arc": edges})
+    root2 = str(tmp_path / "dense")
+    srv2 = DatalogServer(inst2, durability=root2)
+    srv2.run()
+    srv2.close()
+    restored2 = MaterializedInstance.restore(root2)
+    _assert_bit_for_bit(inst2, restored2)
+
+
+# --------------------------------------------------------------------------
+# Engine mid-fixpoint checkpoints (unified codec)
+# --------------------------------------------------------------------------
+
+
+def test_engine_checkpoint_is_codec_format_and_resumes_exactly(rng, tmp_path):
+    n = 36
+    edges = random_edges(rng, n, 80)
+    expect = set(zip(*np.nonzero(tc_oracle(adj_of(edges, n)))))
+    d = str(tmp_path)
+    eng = Engine(EngineConfig(backend="tuple", checkpoint_every=2, checkpoint_dir=d))
+    eng.run(TC, {"arc": edges})
+    snaps = list_snapshots(d)
+    assert snaps, "cadence hook wrote no snapshot"
+    meta = read_snapshot(snaps[0]).extra_meta
+    assert meta.get("engine_checkpoint") and "iteration" in meta
+    # resume from the NEWEST checkpoint
+    got = Engine(EngineConfig(backend="tuple")).run(
+        TC, {"arc": edges}, resume_from=d
+    )["tc"]
+    assert set(map(tuple, got)) == expect
+    # resume from an OLDER (genuinely mid-fixpoint) checkpoint: the saved
+    # Δ views must drive the remaining iterations to the exact fixpoint
+    for s in snaps[1:]:
+        shutil.rmtree(s)
+    early = read_snapshot(snaps[0])
+    assert early.extra_meta["delta_counts"], "checkpoint carries no live Δ"
+    got2 = Engine(EngineConfig(backend="tuple")).run(
+        TC, {"arc": edges}, resume_from=d
+    )["tc"]
+    assert set(map(tuple, got2)) == expect
+
+
+def test_engine_checkpoint_dir_reuse_across_runs(rng, tmp_path):
+    """A rerun into a reused checkpoint_dir outnumbers the stale run's
+    snapshots, so newest-wins resume loads the NEW run's state."""
+    n = 30
+    edges1 = random_edges(rng, n, 60)
+    edges2 = random_edges(rng, n, 60)
+    d = str(tmp_path)
+    cfg = lambda: EngineConfig(backend="tuple", checkpoint_every=2, checkpoint_dir=d)
+    Engine(cfg()).run(TC, {"arc": edges1})
+    Engine(cfg()).run(TC, {"arc": edges2})       # fresh engine, same dir
+    got = Engine(EngineConfig(backend="tuple")).run(
+        TC, {"arc": edges2}, resume_from=d
+    )["tc"]
+    expect = set(zip(*np.nonzero(tc_oracle(adj_of(edges2, n)))))
+    assert set(map(tuple, got)) == expect
+
+
+# --------------------------------------------------------------------------
+# Background checkpointer
+# --------------------------------------------------------------------------
+
+
+def test_checkpointer_policy_fires_in_background(rng, tmp_path):
+    edges = random_edges(rng, 24, 60)
+    inst, srv = _durable_server(
+        tmp_path, edges[:-6], checkpoint_every_epochs=2, poll_seconds=0.01
+    )
+    for i in range(6):
+        srv.submit_insert("arc", edges[-6 + i : -5 + i if i < 5 else None])
+        srv.run()
+    deadline = 100
+    while srv.durability.last_snapshot_epoch < 6 and deadline:
+        threading.Event().wait(0.05)
+        deadline -= 1
+    assert srv.durability.last_snapshot_epoch >= 5, srv.durability_stats()
+    assert not srv.checkpoint_errors
+    # WAL was truncated to the tail above the snapshot epoch
+    tail = list(srv.durability.wal.replay(
+        after_epoch=srv.durability.last_snapshot_epoch
+    ))
+    assert len(tail) <= 1
+    srv.close()
+    restored = MaterializedInstance.restore(str(tmp_path / "dur"))
+    _assert_bit_for_bit(inst, restored)
+
+
+def test_reads_overlap_checkpoint(rng, tmp_path):
+    """Queries served while a checkpoint writes observe consistent state."""
+    edges = random_edges(rng, 32, 120)
+    inst, srv = _durable_server(tmp_path, edges)
+    srv.run()
+    expect = _as_set(inst.query("tc", src=int(edges[0, 0])))
+    results: list = []
+
+    def reader():
+        for _ in range(20):
+            results.append(_as_set(inst.query("tc", src=int(edges[0, 0]))))
+
+    t = threading.Thread(target=reader)
+    t.start()
+    srv.durability.last_snapshot_epoch = -1   # force a re-snapshot
+    srv.checkpoint_now()
+    t.join()
+    assert all(r == expect for r in results)
+    srv.close()
