@@ -29,13 +29,22 @@ EDB.  Rows:
                               — point-query latency while the background
                                 checkpointer serializes a pinned epoch
                                 (derived: ratio vs. idle, overlap count)
+    serve_txn_sequential      — a 1% mixed insert+retract batch across two
+                                EDB relations feeding one recursive stratum,
+                                submitted the pre-transaction way: one
+                                insert submission + one delete submission
+                                (two epochs, two propagation passes)
+    serve_txn_batch           — the same batch as ONE transaction
+                                (one epoch, one Δ/∇ propagation pass;
+                                derived: speedup + exact equality + epochs)
+    serve_txn_speedup         — sequential/txn time ratio (the CI-gated row)
 
 Sections can be selected individually:
 
     python -m benchmarks.run serve --sections insert,warm-start
 
 with sections ``insert`` (the four update workloads), ``delete``, ``query``,
-``concurrent``, and ``warm-start``.
+``concurrent``, ``warm-start``, and ``txn``.
 """
 
 from __future__ import annotations
@@ -45,6 +54,7 @@ import shutil
 import tempfile
 import threading
 import time
+import warnings
 
 import numpy as np
 
@@ -60,7 +70,17 @@ from repro.serve_datalog import (
     MaterializedInstance,
 )
 
-SECTIONS = ("insert", "delete", "query", "concurrent", "warm-start")
+SECTIONS = ("insert", "delete", "query", "concurrent", "warm-start", "txn")
+
+# Two EDB relations feeding ONE recursive stratum — the shape where a mixed
+# transaction's single Δ/∇ pass beats sequential per-relation submissions
+# (the sequential path traverses the stratum once per submission).
+TXN_PROG = """
+tc(x,y) :- arc(x,y).
+tc(x,y) :- rail(x,y).
+tc(x,y) :- tc(x,z), arc(z,y).
+tc(x,y) :- tc(x,z), rail(z,y).
+"""
 
 
 def _p50(lats: list[float]) -> float:
@@ -306,6 +326,103 @@ def _bench_warm_start() -> None:
         shutil.rmtree(ckpt_root, ignore_errors=True)
 
 
+def _bench_txn() -> None:
+    """One mixed transaction vs. sequential per-relation submissions.
+
+    A 1% update batch that inserts into ``arc`` and retracts from ``rail``
+    — two EDB relations feeding the same recursive TC stratum on the tuple
+    backend.  The workload is twin-edge chains (``arc`` and ``rail`` both
+    carry every chain edge): the retracted ``rail`` edges survive through
+    their ``arc`` twins, so DRed re-derivation walks the chain suffix one
+    hop per loop iteration, and the inserted ``arc`` edges reconnect a
+    pre-split chain, so insert propagation walks its suffix the same way.
+    In ONE transaction both walks share the same resumed semi-naïve loop
+    (iterations = max, not sum); submitted the pre-transaction way (one
+    insert request, one delete request), the stratum is traversed once per
+    request and the loop costs add.  Both paths run through the server's
+    writer thread from the same base state (the sequential side's effects
+    are inverted by an exact mixed round trip before the txn side is
+    timed), and both must be bit-for-bit the from-scratch fixpoint of the
+    final EDB.
+    """
+    n_chains, chain_len = 4, 120
+    edges = []
+    for c in range(n_chains):
+        idx = np.arange(c * chain_len, (c + 1) * chain_len - 1)
+        edges.append(np.stack([idx, idx + 1], axis=1))
+    edges = np.concatenate(edges).astype(np.int32)
+    k = max(len(edges) // 100, 1) // 2 or 1        # 1% batch, half per op
+    # insert side: edges absent from BOTH relations (chain 0 is split there)
+    ins_pos = 30 + np.arange(k)
+    # delete side: rail edges whose arc twins keep every tc tuple derivable
+    dels = edges[(chain_len - 1) + 30 : (chain_len - 1) + 30 + k]
+    ins = edges[ins_pos]
+    mask = np.ones(len(edges), bool)
+    mask[ins_pos] = False
+    base_arc = edges[mask]
+    rail = edges[mask]
+    config = EngineConfig(backend="tuple")
+    final = {
+        "arc": np.concatenate([base_arc, ins]),
+        "rail": np.array(
+            sorted(set(map(tuple, rail.tolist())) - set(map(tuple, dels.tolist()))),
+            np.int32,
+        ),
+    }
+    oracle = Engine(EngineConfig(**vars(config))).run(TXN_PROG, final)
+
+    inst = MaterializedInstance(
+        TXN_PROG, {"arc": base_arc, "rail": rail}, EngineConfig(**vars(config))
+    )
+    srv = DatalogServer(inst)
+    fwd = [("insert", "arc", ins), ("delete", "rail", dels)]
+    inv = [("delete", "arc", ins), ("insert", "rail", dels)]
+    # steady state: one warm round per path (exact round trip back to base)
+    inst.apply_txn([fwd[0]])                       # sequential-path shapes
+    inst.apply_txn([fwd[1]])
+    inst.apply_txn(inv)                            # mixed-pass shapes
+    inst.apply_txn(fwd)
+    inst.apply_txn(inv)
+
+    # the pre-transaction way: one insert request + one delete request.
+    # (Two submit_txn calls would be group-committed into one pass by the
+    # admission coalescer — the legacy API is the genuine sequential arm.)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with timer() as t_seq:
+            srv.submit_insert("arc", ins)
+            srv.submit_delete("rail", dels)
+            srv.run()
+    emit("serve_txn_sequential", t_seq.seconds)
+    seq_result = {r: set(map(tuple, inst.relation(r).tolist()))
+                  for r in inst.strat.idb}
+    inst.apply_txn(inv)                            # exact inverse: back to base
+
+    e0 = inst.epoch
+    with timer() as t_txn:                         # ONE mixed transaction
+        rid = srv.submit_txn(fwd)
+        srv.run()
+    epochs = inst.epoch - e0
+    match = all(
+        set(map(tuple, inst.relation(r).tolist())) == set(map(tuple, v.tolist()))
+        for r, v in oracle.items()
+    ) and all(
+        set(map(tuple, inst.relation(r).tolist())) == seq_result[r]
+        for r in inst.strat.idb
+    )
+    speedup = t_seq.seconds / max(t_txn.seconds, 1e-9)
+    emit(
+        "serve_txn_batch",
+        t_txn.seconds,
+        f"speedup={speedup:.1f}x match={match} epochs={epochs}",
+    )
+    emit(
+        "serve_txn_speedup",
+        speedup,
+        f"match={match} epochs={epochs} rels=2",
+    )
+
+
 def _timed_query(inst: MaterializedInstance, rel: str, src: int) -> float:
     t0 = time.perf_counter()
     inst.query(rel, src=src)
@@ -379,6 +496,11 @@ def run(sections: list[str] | None = None) -> None:
     if "warm-start" in sel:
         # durability: snapshot + WAL-tail replay vs. cold re-materialization
         _bench_warm_start()
+
+    if "txn" in sel:
+        # transactional writes: one mixed multi-relation pass vs. sequential
+        # per-relation submissions
+        _bench_txn()
 
 
 if __name__ == "__main__":

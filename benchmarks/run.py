@@ -13,7 +13,7 @@ The growing ``serve`` section takes a sub-section filter, e.g.
 
   python -m benchmarks.run serve --sections insert,warm-start
 
-picking from insert / delete / query / concurrent / warm-start.
+picking from insert / delete / query / concurrent / warm-start / txn.
 """
 
 from __future__ import annotations

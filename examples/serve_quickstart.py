@@ -1,12 +1,14 @@
-"""Serving quickstart: materialize, update, query — then crash and restore.
+"""Serving quickstart: materialize, transact, query — then crash and restore.
 
     PYTHONPATH=src python examples/serve_quickstart.py
 
 This is the snippet from README.md; CI runs it and checks the output, so
-keep the two in sync.  The second half is the durability round-trip: the
-server writes an epoch snapshot plus a delta WAL, a "restarted" process
-warm-starts from disk with ``MaterializedInstance.restore`` (no
-re-evaluation of the Datalog program), and queries answer identically.
+keep the two in sync.  Writes go through the transaction API — an atomic
+batch of mixed insert/retract ops that commits as exactly one epoch, logged
+to the delta WAL as one framed group before it publishes.  The second half
+is the durability round-trip: a "restarted" process warm-starts from disk
+with ``MaterializedInstance.restore`` (no re-evaluation of the Datalog
+program), and queries answer identically.
 """
 
 import shutil
@@ -22,8 +24,10 @@ inst = MaterializedInstance(
 )
 state_dir = tempfile.mkdtemp(prefix="repro_serve_quickstart_")
 srv = DatalogServer(inst, durability=state_dir)          # snapshot + delta WAL
-srv.submit_insert("arc", np.array([[3, 0]], np.int32))   # close the cycle
-srv.run()                                                # drain: update publishes
+tx = srv.transaction()                                   # atomic write txn
+tx.insert("arc", np.array([[3, 0]], np.int32))           # close the cycle
+tx.submit()                                              # validated + queued
+srv.run()                                                # drain: txn publishes
 rows = inst.query("tc", src=0)                           # reads the latest epoch
 print("tc(0, y):", sorted(int(y) for _, y in rows), "| epoch", inst.epoch)
 srv.close()                                              # fsync-close the WAL

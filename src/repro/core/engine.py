@@ -53,8 +53,7 @@ from repro.core.seminaive import (
     RuleVariant,
     delta_variants,
     deletion_variants,
-    ingest_variants,
-    rederive_rule,
+    rederive_seed_variants,
 )
 from repro.core.setdiff import DSDState, set_difference
 from repro.relational.sort import SENTINEL
@@ -522,7 +521,11 @@ class Engine:
         ``deleted`` maps externally-shrunk relations (EDB or upstream IDBs) to
         their ∇ views; ``changed`` maps externally-grown ones to Δ views;
         ``store_old`` is the pre-update state of every relation (immutable
-        handles — a shallow snapshot).  Three passes:
+        handles — a shallow snapshot).  Both maps may name any number of
+        relations — a write transaction's whole mixed Δ/∇ seed set is
+        handled in this ONE visit, which is the engine half of the unified
+        per-stratum driver (``MaterializedInstance._propagate``).  Three
+        passes:
 
         1. **Over-delete** — propagate ∇ through the stratum's rules with the
            non-∇ atoms read from ``store_old`` (a derivation is counted in the
@@ -579,15 +582,9 @@ class Engine:
         deltas: dict[str, TupleView | None] = {p: None for p in stratum.preds}
         deltas.update(changed)
         dsd_state = {p: DSDState(alpha=cfg.alpha) for p in stratum.preds}
-        seed_groups = (
-            ingest_variants(stratum, set(changed))
-            if changed
-            else {p: [] for p in stratum.preds}
-        )
         for pred, acc in nabla.items():
             deltas[NABLA + pred] = TupleView(acc.rows, acc.count, self.domain)
-            for rule in stratum.rules_for(pred):
-                seed_groups[pred].append(RuleVariant(rederive_rule(rule), 0))
+        seed_groups = rederive_seed_variants(stratum, set(changed), nabla)
         for pred in stratum.preds:
             if not seed_groups[pred]:
                 continue

@@ -91,6 +91,30 @@ def deletion_variants(
     return ingest_variants(stratum, deleted)
 
 
+def rederive_seed_variants(
+    stratum: Stratum, changed: set[str], nabla_preds
+) -> dict[str, list[RuleVariant]]:
+    """Seed groups for DRed pass 2 — one unified per-stratum visit.
+
+    Combines :func:`ingest_variants` for externally-grown relations (a
+    transaction's inserted side) with ∇-guarded re-derivation variants
+    (:func:`rederive_rule`) for every over-deleted head in ``nabla_preds``.
+    The engine evaluates both seed sets in the same iteration-0 pass and
+    resumes ONE semi-naïve loop — which is what lets a mixed insert/retract
+    transaction traverse a stratum once instead of paying an ingest pass
+    and a DRed pass separately.
+    """
+    groups = (
+        ingest_variants(stratum, changed)
+        if changed
+        else {p: [] for p in stratum.preds}
+    )
+    for pred in nabla_preds:
+        for rule in stratum.rules_for(pred):
+            groups[pred].append(RuleVariant(rederive_rule(rule), 0))
+    return groups
+
+
 def rederive_rule(rule: Rule) -> Rule:
     """The DRed *re-derivation* variant of ``rule``.
 

@@ -40,9 +40,10 @@ serving layer (``repro.serve_datalog``) enforces the single writer.
 from __future__ import annotations
 
 import threading
+from collections import deque
 from dataclasses import dataclass, field
 from types import MappingProxyType
-from typing import Any, Mapping
+from typing import Any, Iterable, Mapping
 
 
 def handle_buffers(handle: Any) -> tuple:
@@ -123,6 +124,8 @@ class StoreStats:
 class VersionedStore:
     """Append-only epoch → handle-map chain with pin-gated reclamation."""
 
+    _WRITES_HISTORY = 1024        # published write sets retained for conflicts
+
     def __init__(
         self,
         handles: Mapping[str, Any],
@@ -142,6 +145,11 @@ class VersionedStore:
         }
         self._latest = epoch
         self._stats = StoreStats()
+        # (epoch, write set) of recent publishes — survives reclamation, so
+        # conflict checks work against epochs whose handle maps are gone
+        self._writes_log: deque[tuple[int, frozenset | None]] = deque(
+            maxlen=self._WRITES_HISTORY
+        )
 
     # -- read side -----------------------------------------------------------
 
@@ -201,20 +209,55 @@ class VersionedStore:
     # -- write side ----------------------------------------------------------
 
     def publish(
-        self, handles: Mapping[str, Any], domain: int, meta: Any = None
+        self,
+        handles: Mapping[str, Any],
+        domain: int,
+        meta: Any = None,
+        writes: "frozenset[str] | None" = None,
     ) -> int:
         """Atomically install a new latest epoch; returns its index.
 
         The caller hands over a complete handle map built privately (never a
         map readers could observe mid-mutation), plus an optional ``meta``
         sidecar that pinned readers of this epoch observe atomically with
-        the handles.  Superseded unpinned epochs are reclaimed immediately.
+        the handles.  ``writes`` names the relations this epoch changed —
+        recorded in a bounded history that :meth:`conflicts_since` consults
+        (``None`` = unknown, treated as conflicting with everything).
+        Superseded unpinned epochs are reclaimed immediately.
         """
         with self._lock:
             self._latest += 1
             self._epochs[self._latest] = _Epoch(dict(handles), domain, meta=meta)
+            self._writes_log.append((self._latest, writes))
             self._reclaim_locked()
             return self._latest
+
+    def conflicts_since(
+        self, base_epoch: int, names: Iterable[str]
+    ) -> list[int] | None:
+        """Epochs published after ``base_epoch`` that touched ``names``.
+
+        The conflict-detection substrate for multi-writer epoch merging: a
+        transaction that pinned ``base_epoch`` and read/wrote ``names`` can
+        fast-forward onto the latest epoch iff this returns ``[]`` — no
+        intervening publish wrote a relation it depends on.  Epochs whose
+        write set was not declared (``writes=None``) count as conflicts.
+        Returns ``None`` when ``base_epoch`` predates the bounded write
+        history — the caller must assume a conflict (conservative).
+        """
+        names = set(names)
+        with self._lock:
+            if base_epoch >= self._latest:
+                return []
+            # publishes are sequential, so the log covers the consecutive
+            # epochs (latest - len(log), latest]; anything older aged out
+            if base_epoch + 1 < self._latest - len(self._writes_log) + 1:
+                return None
+            return [
+                e
+                for e, w in self._writes_log
+                if e > base_epoch and (w is None or w & names)
+            ]
 
     def _reclaim_locked(self) -> None:
         """Drop every superseded epoch no reader pins.

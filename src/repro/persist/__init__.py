@@ -16,12 +16,14 @@ exactly that correspondence:
   domain, and epoch.  Snapshots are written atomically (tmp directory +
   rename, every blob checksummed, the manifest written last) so a torn
   write is never mistaken for a snapshot.
-* :mod:`repro.persist.wal` — a **delta WAL**: each committed insert/retract
-  batch is appended as ``(relation, op, payload, epoch)`` *before* the epoch
-  publishes, fsync-batched per admission group, CRC-framed so replay stops
-  cleanly at a torn tail.  The WAL is truncated at each checkpoint: restart
-  cost is proportional to the tail since the last snapshot, not to the
-  Datalog program.
+* :mod:`repro.persist.wal` — a **delta WAL**: each committed write
+  transaction is appended as one framed ``BEGIN/op*/COMMIT`` bracket (one
+  atomic write, one fsync per commit group; ops are ``(relation, op,
+  payload, epoch)`` frames) *before* the epoch publishes, CRC-framed so
+  replay stops cleanly at a torn tail and drops half-committed brackets
+  whole.  Legacy bare records (the pre-transaction format) still replay.
+  The WAL is truncated at each checkpoint: restart cost is proportional
+  to the tail since the last snapshot, not to the Datalog program.
 * :mod:`repro.persist.manager` — a :class:`DurabilityManager` tying the two
   together with a checkpoint policy (epoch count and/or WAL size), used by
   ``DatalogServer(durability=...)``'s background checkpointer thread, which
@@ -30,10 +32,10 @@ exactly that correspondence:
 
 The recovery path is :meth:`repro.serve_datalog.MaterializedInstance.
 restore`: load the newest valid snapshot straight onto device (no
-re-fixpoint) and replay the WAL tail through the existing incremental
-``insert_facts``/``retract_facts`` drivers — bit-for-bit the pre-crash
-fixpoint.  See ``docs/persistence.md`` for formats and the recovery
-contract.
+re-fixpoint) and replay the WAL tail through the incremental
+``apply_txn`` driver — whole transactions at a time, bit-for-bit the
+pre-crash fixpoint.  See ``docs/persistence.md`` for formats and the
+recovery contract.
 """
 
 from repro.persist.codec import (
@@ -46,7 +48,7 @@ from repro.persist.codec import (
     write_snapshot,
 )
 from repro.persist.manager import DurabilityConfig, DurabilityManager
-from repro.persist.wal import DeltaWAL, WalRecord
+from repro.persist.wal import DeltaWAL, TxnRecord, WalRecord
 
 __all__ = [
     "SnapshotError",
@@ -58,6 +60,7 @@ __all__ = [
     "strat_hash",
     "DeltaWAL",
     "WalRecord",
+    "TxnRecord",
     "DurabilityConfig",
     "DurabilityManager",
 ]

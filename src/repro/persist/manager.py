@@ -86,19 +86,41 @@ class DurabilityManager:
 
     # -- write path -----------------------------------------------------------
 
-    def log_group(self, requests, next_epoch: int) -> None:
-        """Log one admission group (rel, kind, payload rows) durably.
+    def log_txn(self, ops, next_epoch: int) -> str:
+        """Log one transaction ``[(rel, kind, rows)]`` as a framed group.
 
-        Called by the writer *before* the batch applies: every record lands
-        (one fsync for the whole group) before any effect can publish, so a
-        crash at any later point replays the batch from the log.
+        Called by the writer *before* the transaction applies: the whole
+        BEGIN/op*/COMMIT bracket lands in one atomic write with ONE fsync
+        before any effect can publish, so a crash at any later point
+        replays the transaction — atomically — from the log, a crash
+        mid-commit drops it whole, and a concurrent checkpoint truncation
+        can never split it.  Returns the transaction token, the handle
+        :meth:`abort_txn` needs.
+        """
+        return self.wal.append_txn(ops, next_epoch)
+
+    def abort_txn(self, token: str, epoch: int) -> None:
+        """Mark a previously-logged transaction as acknowledged-failed.
+
+        Appends one txn-granularity abort marker and fsyncs; replay drops
+        the whole bracket so a transient failure cannot be redone on
+        recovery.
+        """
+        self.wal.abort_txn(token, epoch)
+
+    def log_group(self, requests, next_epoch: int) -> None:
+        """Log one legacy admission group (rel, kind, payload rows) durably.
+
+        The pre-transaction format: bare records, one fsync for the group.
+        Kept for the deprecated ``submit_insert``/``submit_delete`` path —
+        new code logs framed transactions via :meth:`log_txn`.
         """
         for rel, kind, rows in requests:
             self.wal.append(rel, kind, rows, next_epoch)
         self.wal.commit()
 
     def abort_group(self, requests, epoch: int) -> None:
-        """Mark previously-logged records as acknowledged-failed.
+        """Mark previously-logged legacy records as acknowledged-failed.
 
         Appends one abort marker per record (a full copy, flagged) and
         fsyncs; replay cancels the pairs so a transient failure cannot be

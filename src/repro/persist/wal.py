@@ -1,32 +1,55 @@
-"""Delta WAL: committed update batches as CRC-framed append-only records.
+"""Delta WAL: committed write transactions as CRC-framed append-only records.
 
-FlowLog treats delta batches as the unit of incremental work; here they are
-the unit of *logging*.  One record per submitted update request::
+FlowLog treats delta batches as the unit of incremental work; here the unit
+of *logging* is the write transaction.  Every frame shares one layout::
 
     header  <IIqBBHI = magic, crc32, epoch, op, arity, rel_len, n_rows
     payload          = relation name (utf-8) + rows (int32, C-order)
 
-``epoch`` is the epoch the batch is *about* to publish (the writer appends
-before the epoch swap, so a record is durable before its effects are
-visible).  ``crc32`` covers the header tail plus the payload, so both a torn
-write and bit rot end replay cleanly: :meth:`DeltaWAL.replay` yields records
-up to the first frame that is short, mis-magicked, or checksum-broken, and
-ignores everything after — the recovery contract is "a consistent prefix of
-the log", exactly what redo needs.
+Frame kinds (the ``op`` byte; bit 2 is the abort flag):
+
+* ``OP_INSERT``/``OP_DELETE`` (0/1) — one update operation's rows.
+* ``OP_BEGIN``/``OP_COMMIT`` (4/5) — transaction control frames.  The
+  ``rel`` field carries an opaque transaction token instead of a relation
+  name and the payload is empty; every op frame between a BEGIN and its
+  matching COMMIT belongs to that transaction.  The writer appends a whole
+  bracket in one atomic write (:meth:`DeltaWAL.append_txn`), so concurrent
+  truncation can never split one.  A transaction whose COMMIT frame is
+  missing (crash mid-commit) is dropped whole on replay — the atomicity
+  contract extends through recovery — and trimmed from the file when the
+  log is reopened, so post-restart appends never land inside a dead
+  bracket.
+* ``op | _ABORT`` — abort markers.  ``OP_COMMIT | _ABORT`` cancels the
+  committed transaction with the same token (txn-granularity abort: a
+  transaction acknowledged as *failed* must not be redone on recovery);
+  ``OP_INSERT/OP_DELETE | _ABORT`` is the legacy record-granularity marker,
+  a full copy of a bare record that cancels one multiset-matching record.
+
+Bare op frames outside any BEGIN/COMMIT bracket are the legacy (pre-txn)
+format and remain fully supported — mixed logs replay correctly.
+
+``epoch`` is the epoch the transaction is *about* to publish (the writer
+appends before the epoch swap, so a record is durable before its effects
+are visible).  ``crc32`` covers the header tail plus the payload, so both a
+torn write and bit rot end replay cleanly: :meth:`DeltaWAL.replay` yields
+records up to the first frame that is short, mis-magicked, or
+checksum-broken, and ignores everything after — the recovery contract is "a
+consistent prefix of the log", exactly what redo needs.
 
 Durability knobs (``fsync=``):
 
 * ``"batch"`` (default) — appends buffer in the OS page cache;
-  :meth:`commit` flushes + fsyncs once per admission group.  One fsync
-  amortizes over the whole coalesced batch, the same way the serving layer
-  amortizes fixpoint work.
+  :meth:`commit` flushes + fsyncs once per commit group.  One fsync
+  amortizes over the whole transaction (or coalesced group of
+  transactions), the same way the serving layer amortizes fixpoint work.
 * ``"always"`` — fsync every record (commit latency per request).
 * ``"off"`` — never fsync (tests, read-only replay handles).
 
-Truncation (:meth:`truncate`) runs at checkpoint time: records at or below
-the snapshot epoch are dropped by rewriting the surviving tail into a tmp
-file and atomically renaming it into place, so restart cost stays
-proportional to the tail, not the update history.
+Truncation (:meth:`truncate`) runs at checkpoint time: frames at or below
+the snapshot epoch are dropped by rewriting the surviving tail — whole
+transactions with their framing intact — into a tmp file and atomically
+renaming it into place, so restart cost stays proportional to the tail,
+not the update history.
 """
 
 from __future__ import annotations
@@ -34,9 +57,10 @@ from __future__ import annotations
 import os
 import struct
 import threading
+import uuid
 import zlib
 from collections import Counter
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Iterator
 
 import numpy as np
@@ -46,23 +70,40 @@ _HEADER = struct.Struct("<IIqBBHI")       # magic crc epoch op arity rel_len nro
 _CRC_SKIP = 8                             # crc covers the header past magic+crc
 OP_INSERT, OP_DELETE = 0, 1
 _ABORT = 2                                # op | _ABORT = abort marker for op
+OP_BEGIN, OP_COMMIT = 4, 5                # txn control frames (rel = token)
 _OP_CODE = {"insert": OP_INSERT, "delete": OP_DELETE}
 _OP_NAME = {v: k for k, v in _OP_CODE.items()}
+_VALID_BASES = {OP_INSERT, OP_DELETE, OP_BEGIN, OP_COMMIT}
 
 
 @dataclass
 class WalRecord:
-    """One logged update request."""
+    """One logged update operation."""
 
     rel: str
     op: str                  # "insert" | "delete"
     rows: np.ndarray         # int32[k, arity]
-    epoch: int               # epoch the batch publishes
+    epoch: int               # epoch the transaction publishes
+
+
+@dataclass
+class TxnRecord:
+    """One replayable transaction reconstructed from the log.
+
+    ``token is None`` marks a legacy bare record (pre-framing format)
+    wrapped as a single-op transaction; callers that re-coalesce legacy
+    batches key on it.
+    """
+
+    token: str | None
+    epoch: int
+    ops: list[WalRecord] = field(default_factory=list)
 
 
 def _raw_frames(data: bytes):
     """(epoch, op_code, rel, raw_rows_bytes, arity, nrows) for the longest
-    valid frame prefix of a raw log image (abort markers included)."""
+    valid frame prefix of a raw log image (control frames and abort markers
+    included)."""
     pos = 0
     while pos + _HEADER.size <= len(data):
         magic, crc, epoch, op, arity, rel_len, nrows = _HEADER.unpack_from(
@@ -72,7 +113,7 @@ def _raw_frames(data: bytes):
         end = pos + _HEADER.size + span
         if (
             magic != _MAGIC
-            or (op & ~_ABORT) not in _OP_NAME
+            or (op & ~_ABORT) not in _VALID_BASES
             or end > len(data)
             or (zlib.crc32(data[pos + _CRC_SKIP : end]) & 0xFFFFFFFF) != crc
         ):
@@ -83,36 +124,61 @@ def _raw_frames(data: bytes):
         pos = end
 
 
-def _parse_frames(
+def _resolve_txns(
     data: bytes, after_epoch: int | None = None
-) -> Iterator[WalRecord]:
-    """Decode the valid frame prefix, honoring abort markers.
+) -> list[TxnRecord]:
+    """The replayable transactions of a raw log image, in append order.
 
-    An abort marker is a full copy of a logged record whose request was
-    acknowledged as *failed* (op | ``_ABORT``): replay must not redo it, or
-    a transiently-failed batch would succeed on recovery and the restored
-    state would contain rows every client was told failed.  Cancellation is
-    a multiset match on ``(epoch, op, rel, payload)`` — insert/delete are
-    idempotent set operations, so identical records are interchangeable and
-    which duplicate gets skipped cannot change the replayed state.
+    Framed transactions (BEGIN … COMMIT with one token) become one
+    :class:`TxnRecord` each; a BEGIN whose COMMIT never landed (crash
+    mid-commit) is dropped whole, and a ``OP_COMMIT | _ABORT`` marker
+    cancels the committed transaction carrying the same token.  Bare op
+    frames outside any bracket are the legacy format: each becomes a
+    single-op ``TxnRecord(token=None)``, after legacy record-granularity
+    abort markers cancel multiset-matching records — insert/delete are
+    idempotent set operations, so identical records are interchangeable
+    and which duplicate gets skipped cannot change the replayed state.
     """
     frames = list(_raw_frames(data))
-    aborted = Counter(
+    aborted_tokens = {
+        rel
+        for _e, op, rel, _raw, _a, _n in frames
+        if op == (OP_COMMIT | _ABORT)
+    }
+    record_aborts = Counter(
         (epoch, op & ~_ABORT, rel, raw)
         for epoch, op, rel, raw, _a, _n in frames
-        if op & _ABORT
+        if op & _ABORT and (op & ~_ABORT) in _OP_NAME
     )
+    out: list[TxnRecord] = []
+    cur: TxnRecord | None = None
     for epoch, op, rel, raw, arity, nrows in frames:
+        base = op & ~_ABORT
+        if base == OP_BEGIN:
+            # an unterminated earlier bracket is torn: drop it
+            cur = TxnRecord(token=rel, epoch=int(epoch))
+            continue
+        if base == OP_COMMIT:
+            if not op & _ABORT and cur is not None and cur.token == rel:
+                if rel not in aborted_tokens:
+                    out.append(cur)
+                cur = None
+            continue
         if op & _ABORT:
             continue
-        key = (epoch, op, rel, raw)
-        if aborted.get(key, 0) > 0:
-            aborted[key] -= 1
-            continue
-        if after_epoch is not None and epoch <= after_epoch:
-            continue
         rows = np.frombuffer(raw, np.int32).reshape(nrows, arity)
-        yield WalRecord(rel, _OP_NAME[op], rows.copy(), int(epoch))
+        rec = WalRecord(rel, _OP_NAME[base], rows.copy(), int(epoch))
+        if cur is not None:
+            cur.ops.append(rec)
+            continue
+        key = (epoch, op, rel, raw)
+        if record_aborts.get(key, 0) > 0:
+            record_aborts[key] -= 1
+            continue
+        out.append(TxnRecord(token=None, epoch=int(epoch), ops=[rec]))
+    if after_epoch is not None:
+        out = [t for t in out if t.epoch > after_epoch]
+    return out
 
 
 class DeltaWAL:
@@ -131,6 +197,39 @@ class DeltaWAL:
         self.appended_records = 0
         self.synced_records = 0
         self.syncs = 0
+        self._trim_torn_tail()
+
+    def _trim_torn_tail(self) -> None:
+        """Drop torn trailing bytes when (re)opening an existing log.
+
+        Anything after the last frame boundary in a bracket-closed state
+        can never replay: it is either a corrupt/short frame or a bracket
+        whose COMMIT never landed (crash mid-commit).  Left in place, a
+        torn BEGIN would swallow records appended after the restart — a
+        post-crash bare record lands *inside* the dead bracket positionally
+        and replay would drop it with the bracket.  Trimming at open keeps
+        the on-disk log equal to its own replayable prefix.
+        """
+        with self._lock:
+            self._f.flush()
+            with open(self.path, "rb") as f:
+                data = f.read()
+            if not data:
+                return
+            clean = pos = 0
+            in_bracket = False
+            for _epoch, op, rel, raw, _a, _n in _raw_frames(data):
+                pos += _HEADER.size + len(rel.encode()) + len(raw)
+                base = op & ~_ABORT
+                if base == OP_BEGIN:
+                    in_bracket = True
+                elif base == OP_COMMIT and not op & _ABORT:
+                    in_bracket = False
+                if not in_bracket:
+                    clean = pos
+            if clean < len(data):
+                self._f.truncate(clean)
+                self._f.seek(0, os.SEEK_END)
 
     # -- write side ----------------------------------------------------------
 
@@ -144,7 +243,7 @@ class DeltaWAL:
         ``fsync="always"``).  ``abort=True`` appends an *abort marker* — a
         copy of a previously-logged record whose request was acknowledged
         as failed; replay cancels the pair so a transient failure cannot
-        succeed on recovery (see ``_parse_frames``).
+        succeed on recovery (see :func:`_resolve_txns`).
         """
         rows = np.ascontiguousarray(rows, np.int32)
         if rows.ndim == 1:
@@ -153,6 +252,11 @@ class DeltaWAL:
         if not 1 <= arity <= 255:
             raise ValueError(f"arity {arity} out of WAL range [1, 255]")
         code = _OP_CODE[op] | (_ABORT if abort else 0)
+        return self._append_frame(code, rel, rows, epoch)
+
+    @staticmethod
+    def _frame_bytes(code: int, rel: str, rows: np.ndarray, epoch: int) -> bytes:
+        arity = max(rows.shape[-1], 1)
         rel_b = rel.encode()
         payload = rel_b + rows.tobytes()
         header = _HEADER.pack(
@@ -162,13 +266,83 @@ class DeltaWAL:
         header = _HEADER.pack(
             _MAGIC, crc, int(epoch), code, arity, len(rel_b), rows.shape[0]
         )
+        return header + payload
+
+    def _append_frame(
+        self, code: int, rel: str, rows: np.ndarray, epoch: int
+    ) -> int:
+        blob = self._frame_bytes(code, rel, rows, epoch)
         with self._lock:
             offset = self._f.tell()
-            self._f.write(header + payload)
+            self._f.write(blob)
             self.appended_records += 1
             if self.fsync == "always":
                 self._sync_locked()
         return offset
+
+    def append_txn(self, ops, epoch: int, token: str | None = None) -> str:
+        """Append one whole BEGIN/op*/COMMIT bracket atomically; fsync once.
+
+        ``ops`` is ``[(rel, op, rows)]``.  The entire bracket lands in ONE
+        write under ONE lock acquisition, so a concurrent :meth:`truncate`
+        can never observe — and therefore never split — a partial bracket
+        (its off-lock scan sees the whole transaction or none of it, and
+        the raw tail it copies after the swap contains only whole
+        brackets).  This is the writer path; the frame-at-a-time
+        ``begin_txn``/``commit_txn`` pair exists for tests that simulate
+        crashes mid-bracket.
+        """
+        token = token or uuid.uuid4().hex[:12]
+        chunks = [self._frame_bytes(OP_BEGIN, token, self._EMPTY, epoch)]
+        for rel, op, rows in ops:
+            rows = np.ascontiguousarray(rows, np.int32)
+            if rows.ndim == 1:
+                rows = rows[:, None]
+            arity = rows.shape[1] if rows.size else rows.shape[-1]
+            if not 1 <= arity <= 255:
+                raise ValueError(f"arity {arity} out of WAL range [1, 255]")
+            chunks.append(self._frame_bytes(_OP_CODE[op], rel, rows, epoch))
+        chunks.append(self._frame_bytes(OP_COMMIT, token, self._EMPTY, epoch))
+        with self._lock:
+            self._f.write(b"".join(chunks))
+            self.appended_records += len(chunks)
+            if self.fsync != "off":
+                self._sync_locked()
+            else:
+                self._f.flush()
+        return token
+
+    # -- transaction framing ---------------------------------------------------
+
+    _EMPTY = np.zeros((0, 1), np.int32)       # control frames carry no rows
+
+    def begin_txn(self, epoch: int, token: str | None = None) -> str:
+        """Open one transaction bracket; returns its opaque token.
+
+        Append the transaction's op records with :meth:`append`, then seal
+        with :meth:`commit_txn` — the COMMIT frame plus one fsync is what
+        makes the whole transaction durable; a bracket with no COMMIT is
+        dropped whole on replay.  Tokens are random (process-lifetime
+        collisions impossible), so abort markers written after a restart
+        can never cancel another incarnation's transaction.
+        """
+        token = token or uuid.uuid4().hex[:12]
+        self._append_frame(OP_BEGIN, token, self._EMPTY, epoch)
+        return token
+
+    def commit_txn(self, token: str, epoch: int) -> None:
+        """Seal one transaction bracket and make it durable (one fsync)."""
+        self._append_frame(OP_COMMIT, token, self._EMPTY, epoch)
+        self.commit()
+
+    def abort_txn(self, token: str, epoch: int) -> None:
+        """Cancel a committed transaction that was acknowledged as failed.
+
+        Replay (and truncation) drop the token's whole bracket, so a
+        transiently-failed transaction cannot be redone on recovery.
+        """
+        self._append_frame(OP_COMMIT | _ABORT, token, self._EMPTY, epoch)
+        self.commit()
 
     def commit(self) -> None:
         """Flush + fsync everything appended so far (one call per batch)."""
@@ -189,19 +363,32 @@ class DeltaWAL:
     def replay(self, after_epoch: int | None = None) -> Iterator[WalRecord]:
         """Records in append order, stopping at the first torn/corrupt frame.
 
-        With ``after_epoch``, frames at or below that epoch are skipped (they
-        are already reflected in the snapshot being recovered from).
+        The flat record-level view (committed transactions' ops in order;
+        uncommitted/aborted transactions omitted).  With ``after_epoch``,
+        frames at or below that epoch are skipped (they are already
+        reflected in the snapshot being recovered from).
+        """
+        for txn in self.replay_txns(after_epoch):
+            yield from txn.ops
+
+    def replay_txns(self, after_epoch: int | None = None) -> list[TxnRecord]:
+        """Replayable transactions in append order (see :func:`_resolve_txns`).
+
+        Framed groups come back whole — recovery re-applies each as one
+        atomic batch; legacy bare records come back as single-op
+        ``TxnRecord(token=None)`` entries for the caller to re-coalesce.
         """
         with self._lock:
             self._f.flush()
             with open(self.path, "rb") as f:
                 data = f.read()
-        yield from _parse_frames(data, after_epoch)
+        return _resolve_txns(data, after_epoch)
 
     # -- maintenance ---------------------------------------------------------
 
     def truncate(self, up_to_epoch: int) -> int:
-        """Drop records at or below ``up_to_epoch``; returns survivors kept.
+        """Drop frames at or below ``up_to_epoch``; returns surviving
+        transactions kept (legacy bare records count as one each).
 
         Atomic: survivors are rewritten to a tmp file which replaces the log
         in one rename — a crash mid-truncate leaves the old (superset) log,
@@ -221,15 +408,24 @@ class DeltaWAL:
                 with open(self.path, "rb") as f:
                     data = f.read()
             # scan + rewrite off-lock: appends proceed meanwhile
-            survivors = list(_parse_frames(data, after_epoch=up_to_epoch))
+            survivors = _resolve_txns(data, after_epoch=up_to_epoch)
             out = open(tmp, "wb")
             writer = DeltaWAL.__new__(DeltaWAL)
             writer.path, writer.fsync = tmp, "off"
             writer._lock = threading.Lock()
             writer._f = out
             writer.appended_records = writer.synced_records = writer.syncs = 0
-            for rec in survivors:
-                writer.append(rec.rel, rec.op, rec.rows, rec.epoch)
+            for txn in survivors:
+                # framed transactions keep their bracket (and token) so the
+                # rewritten log replays at the same commit granularity
+                if txn.token is not None:
+                    writer.begin_txn(txn.epoch, token=txn.token)
+                for rec in txn.ops:
+                    writer.append(rec.rel, rec.op, rec.rows, rec.epoch)
+                if txn.token is not None:
+                    writer._append_frame(
+                        OP_COMMIT, txn.token, writer._EMPTY, txn.epoch
+                    )
             with self._lock:
                 self._f.flush()
                 with open(self.path, "rb") as f:

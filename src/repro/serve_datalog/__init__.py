@@ -17,20 +17,24 @@ arrived EDB facts is treated as an externally-seeded Δ, and the fixpoint is
    resumable ``_seminaive_loop`` from iteration 1.  PBME strata stay resident
    as packed bit matrices and use the incremental frontier
    (``tc_increment``/``sg_increment``) with row-block compaction.
-2. Deletion is first-class via DRed (delete-and-rederive, the FlowLog
-   direction): ``retract_facts`` turns removed EDB tuples into ∇R and runs
-   the engine's over-delete/re-derive driver per tuple-backed stratum —
-   deletion rule variants propagate ∇ against the pre-update state, then
-   ∇-guarded re-derivation variants restore tuples with surviving alternate
-   derivations and the semi-naïve loop resumes.  Strata DRed cannot handle
-   (stratified negation over a touched relation, aggregates — a displaced
-   MIN/MAX winner has no recoverable runner-up —, dense handles, and
-   PBME-resident strata, where decremental closure is gated off in
-   ``eligible_plan``) recompute from scratch, and every stratum hands its
-   net old-vs-new diff downstream as explicit Δ/∇ views.  Updates that
-   introduce new constants rebuild the instance (dense state is
-   domain-sized).  Both update directions are transactional: failures
-   restore the exact pre-update handles.
+2. Writes are **transactions** (``MaterializedInstance.apply_txn``): one
+   atomic batch of mixed insert/retract ops across any number of EDB
+   relations, committing as exactly one epoch with ONE Δ/∇ propagation
+   pass over the stratification.  Deletion is first-class via DRed
+   (delete-and-rederive, the FlowLog direction): removed EDB tuples become
+   ∇R and the engine's over-delete/re-derive driver handles a stratum's Δ
+   *and* ∇ seeds in the same visit — deletion rule variants propagate ∇
+   against the pre-update state, then ∇-guarded re-derivation variants
+   plus insert-ingest variants seed one resumed semi-naïve loop, so a txn
+   touching k relations feeding one recursive stratum traverses it once.
+   Strata DRed cannot handle (stratified negation over a touched relation,
+   aggregates — a displaced MIN/MAX winner has no recoverable runner-up —,
+   dense handles, and PBME-resident strata, where decremental closure is
+   gated off in ``eligible_plan``) recompute from scratch, and every
+   stratum hands its net old-vs-new diff downstream as explicit Δ/∇ views.
+   Updates that introduce new constants rebuild the instance (dense state
+   is domain-sized) — still one epoch.  The historical ``insert_facts``/
+   ``retract_facts`` survive as deprecated single-op wrappers.
 3. State is versioned, not mutated (MVCC-lite): every update builds the next
    epoch of a :class:`~repro.core.versioned_store.VersionedStore` in a
    private handle map and publishes it atomically.  Readers pin the latest
@@ -45,26 +49,32 @@ arrived EDB facts is treated as an externally-seeded Δ, and the fixpoint is
    re-traces (Adaptive Recursive Query Optimization, arXiv 2312.04282).
 5. :class:`~repro.serve_datalog.server.DatalogServer` fronts an instance with
    a request queue and admission batching (modeled on ``train/serve.py``):
-   same-relation insert runs and delete runs each coalesce into one update
-   batch applied on a single background writer thread, while query batches
-   pin snapshots and are served concurrently — reads never queue behind
-   updates (pass ``snapshot_reads=False`` for the legacy serialized order).
-   Payload shape/arity is validated at submission, failed coalesced batches
-   fall back per-request behind an epoch-based partial-commit check, and
-   per-request queue/service latencies are recorded with nearest-rank
-   percentiles (split idle vs. concurrent-with-update).
+   write transactions (``srv.transaction()`` / ``srv.submit_txn``) are the
+   primary surface — the whole txn is validated at submission (raising
+   ``RequestError`` before anything reaches the queue or the WAL), and
+   consecutive *compatible* transactions group-commit as ONE epoch on the
+   single background writer thread, recording per-relation read/write sets
+   for future multi-writer conflict detection — while query batches pin
+   snapshots and are served concurrently; reads never queue behind updates
+   (pass ``snapshot_reads=False`` for the legacy serialized order).
+   Failed coalesced groups fall back per-transaction behind an epoch-based
+   partial-commit check, and per-request queue/service latencies are
+   recorded with nearest-rank percentiles (split idle vs.
+   concurrent-with-update).  ``submit_insert``/``submit_delete`` survive
+   as deprecated single-op shims with the historical coalescing.
 
 6. Durability (``repro.persist``) turns the server from a cache into a
    system of record: ``DatalogServer(durability=...)`` appends every
-   committed update batch to a delta WAL *before* its epoch publishes
-   (fsync-batched per admission group) and runs a background checkpointer
-   thread that snapshots the latest published epoch off a reader pin —
-   concurrent with the writer, never blocking queries — on an
-   epoch-count/WAL-size policy.  ``MaterializedInstance.restore(path)``
-   warm-starts from the newest valid snapshot (straight onto device, no
-   re-fixpoint) and replays the WAL tail through the incremental drivers,
-   reproducing the pre-crash fixpoint bit-for-bit at a cost proportional
-   to the tail.
+   transaction (or group-commit) to a delta WAL as one framed
+   BEGIN/op*/COMMIT group *before* its epoch publishes (one fsync on the
+   COMMIT frame) and runs a background checkpointer thread that snapshots
+   the latest published epoch off a reader pin — concurrent with the
+   writer, never blocking queries — on an epoch-count/WAL-size policy.
+   ``MaterializedInstance.restore(path)`` warm-starts from the newest
+   valid snapshot (straight onto device, no re-fixpoint) and replays the
+   WAL tail through ``apply_txn`` — whole transactions at a time, brackets
+   torn by a crash mid-commit dropped whole — reproducing the pre-crash
+   fixpoint bit-for-bit at a cost proportional to the tail.
 
 See ``docs/architecture.md`` for the layer map and the epoch/snapshot
 lifecycle, ``docs/serving_api.md`` for the public API contract, and
@@ -73,17 +83,30 @@ lifecycle, ``docs/serving_api.md`` for the public API contract, and
 
 from repro.core.versioned_store import Snapshot, VersionedStore
 from repro.persist.manager import DurabilityConfig, DurabilityManager
-from repro.serve_datalog.instance import MaterializedInstance, UpdateStats
+from repro.serve_datalog.instance import (
+    MaterializedInstance,
+    OpStats,
+    TxnOp,
+    UpdateStats,
+)
 from repro.serve_datalog.plan_cache import CompiledPlan, PlanCache, default_cache
-from repro.serve_datalog.server import DatalogServer, RequestError, ServerStats
+from repro.serve_datalog.server import (
+    DatalogServer,
+    RequestError,
+    ServerStats,
+    ServerTransaction,
+)
 
 __all__ = [
     "MaterializedInstance",
+    "TxnOp",
+    "OpStats",
     "UpdateStats",
     "CompiledPlan",
     "PlanCache",
     "default_cache",
     "DatalogServer",
+    "ServerTransaction",
     "RequestError",
     "ServerStats",
     "Snapshot",

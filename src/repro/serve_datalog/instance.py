@@ -4,17 +4,24 @@ State lives in a :class:`~repro.core.versioned_store.VersionedStore` — an
 append-only chain of published epochs, each a complete immutable handle map.
 Reads (:meth:`MaterializedInstance.query`, :meth:`MaterializedInstance.
 relation`) pin the latest published epoch and see a consistent snapshot no
-matter what a concurrent writer does; writes (:meth:`MaterializedInstance.
-insert_facts`, :meth:`MaterializedInstance.retract_facts`) build the next
-epoch in a *private* handle map and publish it with one atomic pointer swap.
-A failed update publishes nothing — rollback is "the epoch never existed",
-with no backup/restore bookkeeping — and superseded epochs are reclaimed
-once their last reader pin drops (see ``versioned_store.py``).
+matter what a concurrent writer does.  The write surface is
+:meth:`MaterializedInstance.apply_txn`: one *transaction* — an ordered list
+of ``(op, rel, rows)`` operations mixing inserts and retractions across any
+number of EDB relations — commits as exactly one epoch, built in a
+*private* handle map and published with one atomic pointer swap.  A failed
+transaction publishes nothing — rollback is "the epoch never existed", with
+no backup/restore bookkeeping — and superseded epochs are reclaimed once
+their last reader pin drops (see ``versioned_store.py``).  The historical
+per-relation calls (:meth:`MaterializedInstance.insert_facts`,
+:meth:`MaterializedInstance.retract_facts`) survive as deprecated one-op
+wrappers over ``apply_txn``.
 
-``insert_facts(rel, rows)`` treats a batch of new EDB tuples as ΔR and
-resumes semi-naïve iteration from the first affected stratum onward instead
-of recomputing from scratch.  Per affected stratum one of three update modes
-applies (recorded in :class:`UpdateStats.modes`):
+A transaction's storage-level effects are applied op by op, then *all* its
+Δ (inserted) and ∇ (removed) views are seeded at once and propagated in ONE
+pass over the stratification — a txn touching k EDB relations that feed the
+same recursive stratum traverses that stratum once, not k times.  Per
+affected stratum one of the update modes applies (recorded in
+:class:`UpdateStats.modes`):
 
 * ``bitmatrix`` — the stratum matched PBME at materialization time; the
   packed closure and arc matrices persist here and the update runs the
@@ -33,14 +40,19 @@ applies (recorded in :class:`UpdateStats.modes`):
   re-evaluated from scratch (and if the recompute retracted facts, the
   non-monotone taint propagates downstream).
 
-``retract_facts(rel, rows)`` is the deletion mirror (DRed, delete-and-
-rederive): the removed EDB tuples become ∇R and propagate stratum-by-stratum
-— tuple-backed strata run the engine's over-delete/re-derive driver
-(``Engine.dred_stratum``), while aggregate, negation, dense, and
-PBME-resident strata (``eligible_plan`` refuses decremental plans) recompute
-from scratch — and every stratum hands its net old-vs-new diff downstream as
-explicit Δ/∇ views.  Per-stratum modes are recorded as ``dred`` alongside
-the three insert modes.
+A transaction that retracts rows runs the deletion machinery (DRed,
+delete-and-rederive): removed EDB tuples become ∇R and propagate
+stratum-by-stratum — tuple-backed strata run the engine's
+over-delete/re-derive driver (``Engine.dred_stratum``), which handles a
+stratum's Δ *and* ∇ seeds in the same visit (over-delete, then ∇-guarded
+re-derivation plus ingest variants for the inserted side, then one resumed
+semi-naïve loop), while aggregate, negation, dense, and PBME-resident
+strata (``eligible_plan`` refuses decremental plans) recompute from scratch
+— and every stratum hands its net old-vs-new diff downstream as explicit
+Δ/∇ views.  Per-stratum modes are recorded as ``dred`` alongside the three
+insert modes.  A pure-insert transaction takes the monotone fast path
+(identical to the historical ``insert_facts`` loop: retractions surfacing
+mid-pass taint downstream strata to ``full`` instead of carrying ∇ views).
 
 Updates that introduce constants outside the materialized active domain
 rebuild the whole instance (dense arrays and bit matrices are sized by the
@@ -61,6 +73,7 @@ from __future__ import annotations
 import os
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 
 import jax.numpy as jnp
@@ -83,28 +96,64 @@ from repro.relational.sort import SENTINEL
 from repro.serve_datalog.plan_cache import CompiledPlan, PlanCache, default_cache
 
 
-@dataclass
-class UpdateStats:
-    """What one ``insert_facts`` / ``retract_facts`` batch did, per stratum.
+@dataclass(frozen=True)
+class TxnOp:
+    """One operation of a write transaction (sugar over ``(op, rel, rows)``).
 
-    ``epoch`` is the epoch the batch published (the pre-update epoch for
-    no-op batches, which publish nothing).  ``modes`` maps stratum index to
-    the update mode that handled it (``bitmatrix`` / ``delta`` / ``dred`` /
-    ``full``); ``iterations`` to the semi-naïve iteration count.
+    ``op`` is ``"insert"`` or ``"delete"`` (``"retract"`` is accepted as an
+    alias for ``"delete"`` everywhere transactions are submitted).
     """
 
-    relation: str
-    requested: int                       # rows in the batch
-    kind: str = "insert"                 # "insert" | "delete"
+    op: str
+    rel: str
+    rows: np.ndarray
+
+
+@dataclass
+class OpStats:
+    """Per-operation slice of one transaction's :class:`UpdateStats`.
+
+    ``applied`` counts the EDB tuples the op actually changed — genuinely
+    new rows for inserts, rows that were present and are now gone for
+    deletes (duplicate inserts / absent deletes contribute nothing).
+    """
+
+    op: str                              # "insert" | "delete"
+    rel: str
+    requested: int                       # rows in this op's payload
+    applied: int = 0
+
+
+@dataclass
+class UpdateStats:
+    """What one ``apply_txn`` transaction did, per op and per stratum.
+
+    ``epoch`` is the epoch the transaction published (the pre-update epoch
+    for no-op transactions, which publish nothing) — always exactly one
+    epoch, however many relations the transaction touched.  ``ops`` holds
+    one :class:`OpStats` slice per operation; ``modes`` maps stratum index
+    to the update mode that handled it (``bitmatrix`` / ``delta`` / ``dred``
+    / ``full``); ``iterations`` to the semi-naïve iteration count.
+    ``read_set``/``write_set`` are the relations the transaction's
+    propagation read / changed — the conflict-detection substrate for
+    multi-writer epoch merging (see ``VersionedStore.conflicts_since``).
+    """
+
+    relation: str                        # op rel (single-op) or "a+b" summary
+    requested: int                       # rows across all ops
+    kind: str = "insert"                 # "insert" | "delete" | "txn"
     inserted: int = 0                    # genuinely-new EDB tuples
     removed: int = 0                     # EDB tuples actually deleted
     derived: int = 0                     # new IDB tuples across all strata
     retracted: int = 0                   # IDB tuples retracted across all strata
     seconds: float = 0.0
     full_rebuild: bool = False
-    epoch: int = -1                      # epoch published by this batch
+    epoch: int = -1                      # epoch published by this txn
     modes: dict[int, str] = field(default_factory=dict)      # stratum → mode
     iterations: dict[int, int] = field(default_factory=dict)  # stratum → iters
+    ops: list[OpStats] = field(default_factory=list)          # per-op slices
+    read_set: tuple[str, ...] = ()
+    write_set: tuple[str, ...] = ()
 
 
 @dataclass
@@ -316,12 +365,16 @@ class MaterializedInstance:
     def _replay_wal(self, wal, after_epoch: int) -> None:
         """Redo the WAL tail through the incremental update drivers.
 
-        Consecutive records sharing (epoch, op, relation) were one coalesced
-        server batch — they are re-applied as one batch, reproducing the
-        pre-crash apply order exactly.  A batch that raises falls back to
-        per-record application with failures skipped, mirroring the server's
-        per-request fallback (a record whose batch failed pre-crash never
-        published, so skipping it on replay converges to the same state).
+        Txn-framed groups (begin/op*/commit) re-apply as ONE
+        :meth:`apply_txn` batch each — whole transactions or nothing, the
+        pre-crash commit granularity; a framed transaction that raises on
+        replay is skipped entirely (replaying it op-by-op would break the
+        atomicity its submitter was promised).  Legacy bare records:
+        consecutive records sharing (epoch, op, relation) were one coalesced
+        server batch and re-apply as one single-op transaction, with the
+        historical per-record fallback on failure (a record whose batch
+        failed pre-crash never published, so skipping it on replay
+        converges to the same state).
         """
         stats = self.restore_stats
         pending: list = []
@@ -330,29 +383,38 @@ class MaterializedInstance:
             if not pending:
                 return
             op, rel = pending[0].op, pending[0].rel
-            fn = self.insert_facts if op == "insert" else self.retract_facts
             rows = np.concatenate([r.rows for r in pending])
             try:
-                fn(rel, rows)
+                self.apply_txn([(op, rel, rows)])
                 stats["replayed_records"] += len(pending)
             except Exception:
                 for rec in pending:
                     try:
-                        fn(rec.rel, rec.rows)
+                        self.apply_txn([(rec.op, rec.rel, rec.rows)])
                         stats["replayed_records"] += 1
                     except Exception:
                         stats["skipped_records"] += 1
             stats["replayed_batches"] += 1
             pending.clear()
 
-        for rec in wal.replay(after_epoch=after_epoch):
-            if pending and (
-                rec.epoch != pending[0].epoch
-                or rec.op != pending[0].op
-                or rec.rel != pending[0].rel
-            ):
-                flush()
-            pending.append(rec)
+        for txn in wal.replay_txns(after_epoch=after_epoch):
+            if txn.token is None:       # legacy bare record: coalesce runs
+                rec = txn.ops[0]
+                if pending and (
+                    rec.epoch != pending[0].epoch
+                    or rec.op != pending[0].op
+                    or rec.rel != pending[0].rel
+                ):
+                    flush()
+                pending.append(rec)
+                continue
+            flush()
+            try:
+                self.apply_txn([(r.op, r.rel, r.rows) for r in txn.ops])
+                stats["replayed_records"] += len(txn.ops)
+            except Exception:
+                stats["skipped_records"] += len(txn.ops)
+            stats["replayed_batches"] += 1
         flush()
 
     def _hot_buckets(self, handles: dict) -> tuple[int, ...]:
@@ -466,23 +528,103 @@ class MaterializedInstance:
     # -- writes --------------------------------------------------------------
 
     _MAX_LOG = 1024          # bounded: serving runs forever
+    _OP_ALIAS = {"insert": "insert", "delete": "delete", "retract": "delete"}
 
-    def _begin_update(self, rel: str, rows: np.ndarray, kind: str):
-        """Shared admission checks for insert/retract batches."""
-        # per-update engine diagnostics only — unbounded growth otherwise
-        self.engine.stats.records = self.engine.stats.records[-self._MAX_LOG:]
-        del self.update_log[: -self._MAX_LOG]
-        if rel not in self.strat.edb:
-            raise KeyError(f"{rel!r} is not an EDB relation of this program")
-        arity = self.plan.program.arity_of(rel)
-        rows = np.asarray(rows, np.int32).reshape(-1, arity)
-        stats = UpdateStats(relation=rel, requested=len(rows), kind=kind)
-        if len(rows) and int(rows.min()) < 0:
-            # negative ids would wrap through dense scatters → silent corruption
-            raise ValueError(
-                f"negative constants in {rel!r} {kind} batch (ids must be ≥ 0)"
+    def normalize_txn_ops(self, ops) -> list[tuple[str, str, np.ndarray]]:
+        """Validate one transaction's operations; returns ``[(op, rel, rows)]``.
+
+        Checks — all before anything touches the store or the WAL:
+
+        * the transaction has at least one operation;
+        * every ``op`` is ``insert``/``delete`` (``retract`` aliases
+          ``delete``) and every ``rel`` an EDB relation of this program;
+        * payloads are integer-typed, match the relation's arity (a
+          mismatched column count is rejected, never reshape-scrambled into
+          tuples the client never sent), and hold no negative constants;
+        * no row is both inserted and retracted by the same transaction.  A
+          transaction is one simultaneous set of changes with no internal
+          order, so a conflicting pair is ambiguous — the policy is
+          **reject** (not last-op-wins); submit two transactions to
+          sequence the two ops.
+
+        Raises ``KeyError``/``ValueError``; the server's ``tx.submit()``
+        wraps these in a :class:`~repro.serve_datalog.server.RequestError`.
+        """
+        items = list(ops)
+        if not items:
+            raise ValueError("empty transaction: no operations")
+        out: list[tuple[str, str, np.ndarray]] = []
+        for item in items:
+            op, rel, rows = (
+                (item.op, item.rel, item.rows) if isinstance(item, TxnOp) else item
             )
-        return rows, stats
+            kind = self._OP_ALIAS.get(op)
+            if kind is None:
+                raise ValueError(
+                    f"unknown transaction op {op!r}; use insert/delete/retract"
+                )
+            if rel not in self.strat.edb:
+                raise KeyError(f"{rel!r} is not an EDB relation of this program")
+            arity = self.plan.program.arity_of(rel)
+            arr = np.asarray(rows)
+            if arr.size and arr.dtype.kind not in "iu":
+                raise ValueError(
+                    f"{rel!r} rows must be integer-typed, got dtype {arr.dtype}"
+                )
+            # a mismatched column count (2-D) or a flat array that is not
+            # exactly one row (1-D) must never be reshape-scrambled into
+            # tuples the client never sent
+            if arr.size and (
+                (arr.ndim >= 2 and arr.shape[-1] != arity)
+                or (arr.ndim == 1 and arr.size != arity)
+            ):
+                raise ValueError(
+                    f"payload of shape {arr.shape} does not match "
+                    f"{rel!r} arity {arity}"
+                )
+            if arr.size and (
+                int(arr.max()) > np.iinfo(np.int32).max
+                or int(arr.min()) < np.iinfo(np.int32).min
+            ):
+                # astype would wrap silently — ids the client never sent
+                raise ValueError(
+                    f"constants in {rel!r} {kind} batch exceed int32 range"
+                )
+            if not arr.size:
+                arr = np.zeros((0, arity), np.int32)
+            elif arr.dtype != np.int32 or arr.ndim != 2:
+                arr = arr.astype(np.int32).reshape(-1, arity)
+            if len(arr) and int(arr.min()) < 0:
+                # negative ids would wrap through dense scatters → silent corruption
+                raise ValueError(
+                    f"negative constants in {rel!r} {kind} batch (ids must be ≥ 0)"
+                )
+            out.append((kind, rel, arr))
+        # in-txn insert∩retract conflicts: row sets are only materialized for
+        # relations ops of BOTH kinds touch (re-normalizing an already-valid
+        # transaction on the writer thread stays cheap)
+        kinds_by_rel: dict[str, set[str]] = {}
+        for kind, rel, _ in out:
+            kinds_by_rel.setdefault(rel, set()).add(kind)
+        for rel, seen in kinds_by_rel.items():
+            if len(seen) < 2:
+                continue
+            ins: set = set()
+            dels: set = set()
+            for kind, r, arr in out:
+                if r == rel:
+                    (ins if kind == "insert" else dels).update(
+                        map(tuple, arr.tolist())
+                    )
+            both = ins & dels
+            if both:
+                raise ValueError(
+                    f"transaction both inserts and retracts {len(both)} row(s) "
+                    f"of {rel!r} (e.g. {sorted(both)[0]}); a transaction is "
+                    "unordered, so the pair is rejected — submit two "
+                    "transactions to sequence the ops"
+                )
+        return out
 
     def _finish_update(self, stats: UpdateStats, t0: float) -> UpdateStats:
         stats.seconds = time.perf_counter() - t0
@@ -516,7 +658,8 @@ class MaterializedInstance:
                 if txn.mutated:
                     self._bm = txn.bm
                     stats.epoch = self.vstore.publish(
-                        txn.store, txn.domain, meta=txn.bm
+                        txn.store, txn.domain, meta=txn.bm,
+                        writes=frozenset(stats.write_set) or None,
                     )
                 else:
                     stats.epoch = base.epoch
@@ -530,104 +673,200 @@ class MaterializedInstance:
             finally:
                 base.release()
 
-    def insert_facts(self, rel: str, rows: np.ndarray) -> UpdateStats:
-        """Apply a batch of new EDB facts and publish the new fixpoint."""
-        t0 = time.perf_counter()
-        rows, stats = self._begin_update(rel, rows, "insert")
-        if len(rows) == 0:
-            stats.epoch = self.epoch
-            return self._finish_update(stats, t0)
-        return self._transactional(
-            stats, lambda txn: self._apply_insert(txn, rel, rows, stats, t0)
-        )
+    def apply_txn(self, ops) -> UpdateStats:
+        """Apply one transaction atomically; publish exactly one epoch.
 
-    def _apply_insert(
-        self, txn: _WriteTxn, rel: str, rows: np.ndarray, stats: UpdateStats,
-        t0: float,
-    ) -> UpdateStats:
-        if int(rows.max()) >= txn.domain:
-            self._full_rebuild(txn, rel, rows, stats)
-            return self._finish_update(stats, t0)
-
-        handle: TupleRelation = txn.store[rel]
-        new_handle, delta_rows, delta_count = handle.insert(rows)
-        stats.inserted = delta_count
-        if delta_count == 0:
-            return self._finish_update(stats, t0)
-        txn.store[rel] = new_handle
-        txn.mutated = True
-        dcap = next_bucket(max(delta_count, 1), self.engine.config.capacity_min)
-        changed: dict[str, TupleView] = {
-            rel: TupleView(delta_rows[:dcap], delta_count, txn.domain)
-        }
-        nonmono: set[str] = set()
-
-        for stratum in self.strat.strata:
-            mode, kinds = self._update_mode(txn, stratum, changed, nonmono)
-            if mode == "skip":
-                continue
-            if mode == "delta" and stratum.index in txn.bm and self._bm_applies(
-                txn, stratum, changed
-            ):
-                iters, derived = self._bitmatrix_delta(txn, stratum, changed)
-                stats.modes[stratum.index] = "bitmatrix"
-            elif mode == "delta":
-                iters, derived = self._delta_stratum(
-                    txn, stratum, changed, nonmono, kinds
-                )
-                stats.modes[stratum.index] = "delta"
-            else:
-                iters, derived = self._full_stratum(txn, stratum, changed, nonmono)
-                stats.modes[stratum.index] = "full"
-            stats.iterations[stratum.index] = iters
-            stats.derived += derived
-
-        return self._finish_update(stats, t0)
-
-    def retract_facts(self, rel: str, rows: np.ndarray) -> UpdateStats:
-        """Apply a batch of EDB deletions and publish the new fixpoint (DRed).
-
-        Delete-and-rederive: the removed tuples become ∇R and propagate
-        stratum-by-stratum — tuple-backed strata run the engine's
-        over-delete/re-derive driver, PBME-resident and aggregate/negation
-        strata recompute from scratch, and each stratum hands its net
-        old-vs-new diff downstream.  Results are bit-for-bit identical to a
-        from-scratch evaluation of the shrunken EDB.  Rows not present are
-        ignored; the operation is atomic like ``insert_facts`` (a failure
-        publishes no epoch).
+        ``ops`` is an iterable of ``(op, rel, rows)`` tuples (or
+        :class:`TxnOp`) mixing inserts and retractions over any number of
+        EDB relations.  All storage-level effects apply first, then every
+        Δ/∇ view is seeded at once and propagated in ONE pass over the
+        stratification — relations feeding the same stratum share one
+        visit instead of paying one propagation each.  Readers observe all
+        of the transaction's effects or none of them: on success the new
+        fixpoint publishes as one epoch; on failure nothing publishes and
+        a retry starts from an untouched base.  Results are bit-for-bit
+        identical to a from-scratch evaluation of the post-transaction EDB.
         """
         t0 = time.perf_counter()
-        rows, stats = self._begin_update(rel, rows, "delete")
-        if len(rows) == 0:
+        norm = self.normalize_txn_ops(ops)
+        # per-update engine diagnostics only — unbounded growth otherwise
+        self.engine.stats.records = self.engine.stats.records[-self._MAX_LOG:]
+        del self.update_log[: -self._MAX_LOG]
+        stats = UpdateStats(
+            relation=(
+                norm[0][1]
+                if len(norm) == 1
+                else "+".join(dict.fromkeys(rel for _, rel, _ in norm))
+            ),
+            requested=sum(len(rows) for _, _, rows in norm),
+            kind=norm[0][0] if len(norm) == 1 else "txn",
+            ops=[OpStats(op, rel, len(rows)) for op, rel, rows in norm],
+        )
+        if stats.requested == 0:
             stats.epoch = self.epoch
             return self._finish_update(stats, t0)
         return self._transactional(
-            stats, lambda txn: self._apply_retract(txn, rel, rows, stats, t0)
+            stats, lambda txn: self._apply_ops(txn, norm, stats, t0)
         )
 
-    def _apply_retract(
-        self, txn: _WriteTxn, rel: str, rows: np.ndarray, stats: UpdateStats,
+    #: Set (by the server's writer loop) to suppress the shims' per-batch
+    #: DeprecationWarning when delegation was already warned about at
+    #: submission time.  Instance state, not global warning filters — a
+    #: filter mutation on the writer thread would race client threads.
+    _quiet_shims = False
+
+    def insert_facts(self, rel: str, rows: np.ndarray) -> UpdateStats:
+        """Deprecated: apply one batch of new EDB facts.
+
+        A wrapper over the single-op transaction ``apply_txn([("insert",
+        rel, rows)])`` — same modes, same stats, same published epoch for
+        every well-formed payload.  Malformed payloads the old path
+        silently mangled are now rejected: float rows are no longer
+        truncation-cast and mismatched column counts are no longer
+        reshape-scrambled (both raise ``ValueError``).  Use
+        :meth:`apply_txn`.
+        """
+        if not self._quiet_shims:
+            warnings.warn(
+                "MaterializedInstance.insert_facts is deprecated; use "
+                'apply_txn([("insert", rel, rows)])',
+                DeprecationWarning,
+                stacklevel=2,
+            )
+        return self.apply_txn([("insert", rel, rows)])
+
+    def retract_facts(self, rel: str, rows: np.ndarray) -> UpdateStats:
+        """Deprecated: apply one batch of EDB deletions (DRed).
+
+        A wrapper over the single-op transaction ``apply_txn([("delete",
+        rel, rows)])``, with the same payload-validation tightening as
+        :meth:`insert_facts`.  Use :meth:`apply_txn`.
+        """
+        if not self._quiet_shims:
+            warnings.warn(
+                "MaterializedInstance.retract_facts is deprecated; use "
+                'apply_txn([("delete", rel, rows)])',
+                DeprecationWarning,
+                stacklevel=2,
+            )
+        return self.apply_txn([("delete", rel, rows)])
+
+    def _apply_ops(
+        self,
+        txn: _WriteTxn,
+        norm: list[tuple[str, str, np.ndarray]],
+        stats: UpdateStats,
         t0: float,
     ) -> UpdateStats:
-        store_old = dict(txn.base.handles)  # pre-update handles for DRed bodies
-        handle: TupleRelation = txn.store[rel]
-        new_handle, removed_rows, removed_count = handle.delete(rows)
-        stats.removed = removed_count
-        if removed_count == 0:
+        if any(
+            op == "insert" and len(rows) and int(rows.max()) >= txn.domain
+            for op, _, rows in norm
+        ):
+            self._full_rebuild(txn, norm, stats)
             return self._finish_update(stats, t0)
-        txn.store[rel] = new_handle
-        txn.mutated = True
-        dcap = next_bucket(max(removed_count, 1), self.engine.config.capacity_min)
-        deleted: dict[str, TupleView] = {
-            rel: TupleView(removed_rows[:dcap], removed_count, txn.domain)
-        }
-        changed: dict[str, TupleView] = {}
+
+        store_old = dict(txn.base.handles)  # pre-txn handles for DRed bodies
+        delta_parts: dict[str, list] = {}
+        nabla_parts: dict[str, list] = {}
+        for slot, (op, rel, rows) in zip(stats.ops, norm):
+            handle: TupleRelation = txn.store[rel]
+            if op == "insert":
+                new_handle, d_rows, d_count = handle.insert(rows)
+                stats.inserted += d_count
+                parts = delta_parts
+            else:
+                new_handle, d_rows, d_count = handle.delete(rows)
+                stats.removed += d_count
+                parts = nabla_parts
+            slot.applied = d_count
+            if d_count == 0:
+                continue
+            txn.store[rel] = new_handle
+            txn.mutated = True
+            parts.setdefault(rel, []).append((d_rows, d_count))
+        if not txn.mutated:
+            return self._finish_update(stats, t0)
+        changed = {r: self._merge_views(p, txn.domain) for r, p in delta_parts.items()}
+        deleted = {r: self._merge_views(p, txn.domain) for r, p in nabla_parts.items()}
+        reads = self._propagate(txn, store_old, changed, deleted, stats)
+        stats.write_set = tuple(
+            sorted(
+                {slot.rel for slot in stats.ops if slot.applied}
+                | set(changed)
+                | set(deleted)
+            )
+        )
+        stats.read_set = tuple(sorted(reads | set(stats.write_set)))
+        return self._finish_update(stats, t0)
+
+    def _merge_views(self, parts: list, domain: int) -> TupleView:
+        """One Δ/∇ view per relation from one or more per-op delta tables.
+
+        Multiple same-kind ops on one relation are disjoint by construction
+        (each op's delta is computed against the state the previous op
+        left), so the merge is a plain union.
+        """
+        if len(parts) == 1:
+            rows, count = parts[0]
+            cap = next_bucket(max(count, 1), self.engine.config.capacity_min)
+            return TupleView(rows[:cap], count, domain)
+        data = np.unique(
+            np.concatenate([np.asarray(r)[:c] for r, c in parts]), axis=0
+        )
+        return self._view_from_numpy(data.astype(np.int32), domain)
+
+    def _propagate(
+        self,
+        txn: _WriteTxn,
+        store_old: dict,
+        changed: dict[str, TupleView],
+        deleted: dict[str, TupleView],
+        stats: UpdateStats,
+    ) -> set[str]:
+        """One pass over the stratification for a mixed Δ/∇ seed set.
+
+        The unified per-stratum driver: each stratum is visited once and
+        handles whatever mix of Δ (inserted) and ∇ (removed) views reaches
+        it — ``Engine.dred_stratum`` runs over-delete, ∇-guarded
+        re-derivation, *and* insert-ingest variants in the same visit — then
+        hands one net diff downstream.  A transaction with no ∇ seeds takes
+        the monotone fast path (the historical ``insert_facts`` loop:
+        retractions surfacing mid-pass taint downstream strata to ``full``
+        instead of carrying ∇ views).  Returns the set of relations the
+        visited strata read (the transaction's read set).
+        """
+        reads: set[str] = set()
         nonmono: set[str] = set()
+        if not deleted:
+            for stratum in self.strat.strata:
+                mode, kinds, refs = self._update_mode(txn, stratum, changed, nonmono)
+                if mode == "skip":
+                    continue
+                reads |= refs
+                if mode == "delta" and stratum.index in txn.bm and self._bm_applies(
+                    txn, stratum, changed
+                ):
+                    iters, derived = self._bitmatrix_delta(txn, stratum, changed)
+                    stats.modes[stratum.index] = "bitmatrix"
+                elif mode == "delta":
+                    iters, derived = self._delta_stratum(
+                        txn, stratum, changed, nonmono, kinds
+                    )
+                    stats.modes[stratum.index] = "delta"
+                else:
+                    iters, derived = self._full_stratum(txn, stratum, changed, nonmono)
+                    stats.modes[stratum.index] = "full"
+                stats.iterations[stratum.index] = iters
+                stats.derived += derived
+            return reads
 
         for stratum in self.strat.strata:
-            mode, kinds = self._retract_mode(txn, stratum, deleted, changed, nonmono)
+            mode, kinds, refs = self._retract_mode(
+                txn, stratum, deleted, changed, nonmono
+            )
             if mode == "skip":
                 continue
+            reads |= refs
             if mode == "delta" and stratum.index in txn.bm and self._bm_applies(
                 txn, stratum, changed
             ):
@@ -658,8 +897,7 @@ class MaterializedInstance:
                 stats.derived += n_add
                 stats.retracted += n_del
             stats.iterations[stratum.index] = iters
-
-        return self._finish_update(stats, t0)
+        return reads
 
     # -- update-mode selection ----------------------------------------------
 
@@ -669,27 +907,28 @@ class MaterializedInstance:
         stratum: Stratum,
         changed: dict[str, TupleView],
         nonmono: set[str],
-    ) -> tuple[str, dict[str, str] | None]:
-        """(mode, handle kinds) — kinds computed once here, reused by the
-        delta path so `_init_handles` runs a single time per stratum."""
+    ) -> tuple[str, dict[str, str] | None, set[str]]:
+        """(mode, handle kinds, body refs) — kinds computed once here and
+        reused by the delta path so `_init_handles` runs a single time per
+        stratum; refs feed the transaction's recorded read set."""
         refs = {a.pred for r in stratum.rules for a in r.atoms}
         if not refs & (set(changed) | nonmono):
-            return "skip", None
+            return "skip", None, refs
         if refs & nonmono:
-            return "full", None   # upstream retractions: deltas unavailable
+            return "full", None, refs  # upstream retractions: deltas unavailable
         if any(
             a.negated and a.pred in changed
             for r in stratum.rules
             for a in r.atoms
         ):
-            return "full", None   # growth of a negated relation retracts facts
+            return "full", None, refs  # growth of a negated relation retracts
         kinds = self.engine._init_handles(self.strat, stratum, txn.store, fresh=False)
         if any(
             r.has_aggregate and kinds.get(r.head_pred) != "dense_agg"
             for r in stratum.rules
         ):
-            return "full", None   # tuple-path aggregates overwrite group values
-        return "delta", kinds
+            return "full", None, refs  # tuple-path aggregates overwrite groups
+        return "delta", kinds, refs
 
     def _retract_mode(
         self,
@@ -711,36 +950,38 @@ class MaterializedInstance:
         a negated relation (deletions there *grow* this stratum), or a
         PBME-resident stratum (``eligible_plan`` refuses decremental plans):
         recompute from scratch and diff.
+
+        Returns ``(mode, handle kinds, body refs)`` like ``_update_mode``.
         """
         refs = {a.pred for r in stratum.rules for a in r.atoms}
         touched = set(deleted) | set(changed)
         if not refs & (touched | nonmono):
-            return "skip", None
+            return "skip", None, refs
         if refs & nonmono:
-            return "full", None
+            return "full", None, refs
         if any(
             a.negated and a.pred in touched
             for r in stratum.rules
             for a in r.atoms
         ):
-            return "full", None
+            return "full", None, refs
         kinds = self.engine._init_handles(self.strat, stratum, txn.store, fresh=False)
         if not refs & set(deleted):
             if any(
                 r.has_aggregate and kinds.get(r.head_pred) != "dense_agg"
                 for r in stratum.rules
             ):
-                return "full", None
-            return "delta", kinds
+                return "full", None, refs
+            return "delta", kinds, refs
         if any(r.has_aggregate for r in stratum.rules):
-            return "full", None
+            return "full", None, refs
         if any(kinds[p] != "tuple" for p in stratum.preds):
-            return "full", None
+            return "full", None, refs
         if stratum.index in txn.bm and self._bm_eligible(
             stratum, txn.domain, deleting=True
         ) is None:
-            return "full", None
-        return "dred", kinds
+            return "full", None, refs
+        return "dred", kinds, refs
 
     def _bm_applies(
         self, txn: _WriteTxn, stratum: Stratum, changed: dict[str, TupleView]
@@ -897,12 +1138,17 @@ class MaterializedInstance:
         return self.engine.stats.iterations.get(stratum.index, 1), n_add, n_del
 
     def _full_rebuild(
-        self, txn: _WriteTxn, rel: str, rows: np.ndarray, stats: UpdateStats
+        self,
+        txn: _WriteTxn,
+        norm: list[tuple[str, str, np.ndarray]],
+        stats: UpdateStats,
     ) -> None:
         """Domain growth: dense state is sized by the active domain → rebuild.
 
-        The rebuilt fixpoint becomes the transaction's next-epoch state just
-        like an incremental one — readers keep the old domain's epoch until
+        Every op of the transaction is applied to the host-side EDB and the
+        program re-evaluated from scratch; the rebuilt fixpoint becomes the
+        transaction's next-epoch state just like an incremental one — still
+        exactly one epoch, and readers keep the old domain's epoch until
         the rebuild publishes.
         """
         stats.full_rebuild = True
@@ -910,9 +1156,23 @@ class MaterializedInstance:
             p: getattr(txn.store.get(p), "count", 0) for p in self.strat.idb
         }
         edb = {name: self._rows_of(txn.store, name) for name in self.strat.edb}
-        before = len(np.unique(np.concatenate([edb[rel], rows]), axis=0))
-        stats.inserted = before - len(edb[rel])
-        edb[rel] = np.concatenate([edb[rel], rows])
+        for slot, (op, rel, rows) in zip(stats.ops, norm):
+            cur = set(map(tuple, edb[rel].tolist()))
+            batch = set(map(tuple, rows.tolist()))
+            if op == "insert":
+                slot.applied = len(batch - cur)
+                stats.inserted += slot.applied
+                cur |= batch
+            else:
+                slot.applied = len(batch & cur)
+                stats.removed += slot.applied
+                cur -= batch
+            arity = self.plan.program.arity_of(rel)
+            edb[rel] = (
+                np.array(sorted(cur), np.int32)
+                if cur
+                else np.zeros((0, arity), np.int32)
+            )
         self.engine.run(self.plan.program, edb, strat=self.plan.strat,
                         return_numpy=False)
         txn.store = self.engine.take_store()
@@ -922,9 +1182,11 @@ class MaterializedInstance:
         self.cache.warm(self.plan, txn.domain, buckets=self._hot_buckets(txn.store))
         txn.bm = self._init_bitmatrix_state(txn.store, txn.domain)
         for p in self.strat.idb:
-            stats.derived += max(
-                getattr(txn.store.get(p), "count", 0) - old_counts[p], 0
-            )
+            new_count = getattr(txn.store.get(p), "count", 0)
+            stats.derived += max(new_count - old_counts[p], 0)
+            stats.retracted += max(old_counts[p] - new_count, 0)
+        stats.write_set = tuple(sorted(set(self.strat.edb) | set(self.strat.idb)))
+        stats.read_set = stats.write_set
 
     # -- delta bookkeeping -----------------------------------------------------
 

@@ -4,10 +4,17 @@ Modeled on ``train/serve.py``'s ``BatchedServer`` (queue → admission batch →
 serve → per-request stats), with Datalog request kinds instead of decode
 slots:
 
-* *fact-insert / fact-delete batches* — consecutive same-kind requests into
-  the same relation are coalesced into ONE ``insert_facts`` /
-  ``retract_facts`` call (one delta-ingest or DRed pass amortizes the
-  per-iteration fixed costs over the whole admission batch);
+* *write transactions* — the primary write surface.  ``tx =
+  srv.transaction(); tx.insert("edge", rows); tx.retract("owner", rows);
+  rid = tx.submit()`` (or the one-shot :meth:`DatalogServer.submit_txn`)
+  queues one atomic multi-relation mixed batch; it commits as exactly one
+  store epoch with one WAL commit frame, and consecutive *compatible*
+  transactions (no row inserted by one and retracted by another) coalesce
+  into one group-commit epoch — one Δ/∇ propagation pass and one fsync for
+  the whole group;
+* *fact-insert / fact-delete batches* (deprecated ``submit_insert`` /
+  ``submit_delete``) — the historical single-relation surface; consecutive
+  same-kind same-relation requests still coalesce into one update call;
 * *point/range queries* — answered against a pinned epoch snapshot through
   the plan cache's warm selection executables.
 
@@ -32,13 +39,17 @@ earlier update — read-your-writes at the cost of queueing behind them).
 Failure handling
 ----------------
 
-Malformed payloads (unknown relation, arity mismatch) are rejected at
-``submit_*`` time, so an admitted batch can always be concatenated; failures
-that only surface at apply time (e.g. negative ids) fall back to per-request
-application.  A failed update publishes no epoch (MVCC rollback is "the
-epoch never existed"), so the fallback can never double-apply — the guard
-that verifies this checks the epoch counter, and refuses replay if a failed
-attempt somehow left published state behind.
+Malformed transactions (empty, unknown relation, arity/dtype mismatch,
+negative ids, a row both inserted and retracted) are rejected at
+``tx.submit()``/``submit_txn`` time with a raised :class:`RequestError` —
+before anything reaches the queue or the WAL.  The deprecated ``submit_*``
+shims keep their historical exception types (``KeyError``/``ValueError``)
+for shape problems and surface negative ids at apply time.  Failures that
+only surface at apply time fall back to per-transaction application.  A
+failed update publishes no epoch (MVCC rollback is "the epoch never
+existed"), so the fallback can never double-apply — the guard that verifies
+this checks the epoch counter, and refuses replay if a failed attempt
+somehow left published state behind.
 """
 
 from __future__ import annotations
@@ -46,6 +57,7 @@ from __future__ import annotations
 import math
 import threading
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass, field, replace
 
@@ -57,18 +69,102 @@ from repro.serve_datalog.instance import MaterializedInstance, UpdateStats
 @dataclass
 class _Request:
     rid: int
-    kind: str                    # "query" | "insert" | "delete"
+    kind: str                    # "query" | "txn" | "insert" | "delete"
     rel: str
-    payload: dict | np.ndarray
+    payload: dict | np.ndarray | list
     submitted: float
 
 
-@dataclass
-class RequestError:
-    """Terminal per-request failure — delivered in ``done`` like a result."""
+class RequestError(Exception):
+    """Terminal per-request failure.
 
-    rid: int
-    error: str
+    Delivered in ``done`` like a result for failures that surface at apply
+    time, and *raised* at submission time by ``tx.submit()``/``submit_txn``
+    for malformed transactions (which never reach the queue or the WAL —
+    those carry ``rid == -1``).
+    """
+
+    def __init__(self, rid: int, error: str):
+        super().__init__(error)
+        self.rid = rid
+        self.error = error
+
+
+class ServerTransaction:
+    """Builder for one atomic multi-relation write transaction.
+
+    ::
+
+        tx = srv.transaction()
+        tx.insert("edge", new_edges)
+        tx.retract("owner", stale_owners)
+        rid = tx.submit()          # validated here; one epoch when applied
+
+    Ops accumulate client-side; nothing is queued until :meth:`submit`,
+    which validates the whole transaction and enqueues it as one request.
+    ``insert``/``retract`` return ``self`` for chaining.  A builder can be
+    submitted once.
+    """
+
+    def __init__(self, server: "DatalogServer"):
+        self._server = server
+        self._ops: list[tuple[str, str, np.ndarray]] = []
+        self._rid: int | None = None
+
+    def insert(self, rel: str, rows) -> "ServerTransaction":
+        self._check_open()
+        self._ops.append(("insert", rel, rows))
+        return self
+
+    def retract(self, rel: str, rows) -> "ServerTransaction":
+        self._check_open()
+        self._ops.append(("delete", rel, rows))
+        return self
+
+    def _check_open(self) -> None:
+        if self._rid is not None:
+            raise RequestError(
+                self._rid, "transaction already submitted; build a new one"
+            )
+
+    def submit(self) -> int:
+        """Validate and enqueue the transaction; returns its request id."""
+        self._check_open()
+        self._rid = self._server.submit_txn(self._ops)
+        return self._rid
+
+
+class _TxnRowSets:
+    """Cumulative per-relation insert/retract row sets of one admission group.
+
+    Group-commit compatibility: a candidate transaction may join the group
+    only if the merged op list is still a valid transaction — no row
+    inserted by one member and retracted by another — so coalescing never
+    changes what sequential application would have produced.
+    """
+
+    _OPPOSITE = {"insert": "delete", "delete": "insert"}
+
+    def __init__(self, ops):
+        # kind → rel → accumulated row set, extended incrementally as
+        # members are admitted — each candidate check is one set
+        # intersection, so admitting B transactions stays linear in their
+        # total row count rather than re-tupling prior members per check
+        self._sets: dict[str, dict[str, set]] = {"insert": {}, "delete": {}}
+        self.try_add(ops)       # a single valid txn can never self-conflict
+
+    def try_add(self, ops) -> bool:
+        """Admit ``ops`` into the group if compatible; False leaves the
+        accumulated sets untouched."""
+        staged = [(op, rel, set(map(tuple, rows.tolist()))) for op, rel, rows in ops]
+        if any(
+            s & self._sets[self._OPPOSITE[op]].get(rel, set())
+            for op, rel, s in staged
+        ):
+            return False
+        for op, rel, s in staged:
+            self._sets[op].setdefault(rel, set()).update(s)
+        return True
 
 
 @dataclass
@@ -182,10 +278,57 @@ class DatalogServer:
         )
         return rid
 
+    def transaction(self) -> ServerTransaction:
+        """A builder for one atomic multi-relation write transaction."""
+        return ServerTransaction(self)
+
+    def submit_txn(self, ops) -> int:
+        """Queue one transaction (iterable of ``(op, rel, rows)``/``TxnOp``).
+
+        The whole transaction is validated here — empty transactions,
+        unknown/non-EDB relations, arity or dtype mismatches, negative ids,
+        and rows both inserted and retracted by the same transaction all
+        raise :class:`RequestError` before anything reaches the queue or
+        the WAL.  When applied, the transaction commits as exactly one
+        epoch; its result in ``done`` is one ``UpdateStats`` with per-op
+        slices.
+        """
+        try:
+            norm = self.instance.normalize_txn_ops(ops)
+        except (KeyError, ValueError, TypeError) as e:
+            # KeyError reprs its message in quotes — unwrap via args
+            msg = e.args[0] if e.args else str(e)
+            raise RequestError(-1, f"invalid transaction: {msg}") from e
+        rid = self._next_id
+        self._next_id += 1
+        rels = "+".join(dict.fromkeys(rel for _, rel, _ in norm))
+        self.queue.append(
+            _Request(rid, "txn", rels, norm, time.perf_counter())
+        )
+        return rid
+
     def submit_insert(self, rel: str, rows: np.ndarray) -> int:
+        """Deprecated: queue one single-relation insert (use transactions).
+
+        Bit-for-bit the historical behavior — same validation exceptions,
+        same coalescing, same stats — via the legacy request kind.
+        """
+        warnings.warn(
+            "DatalogServer.submit_insert is deprecated; use "
+            'transaction().insert(rel, rows).submit() or submit_txn',
+            DeprecationWarning,
+            stacklevel=2,
+        )
         return self._submit_update("insert", rel, rows)
 
     def submit_delete(self, rel: str, rows: np.ndarray) -> int:
+        """Deprecated: queue one single-relation delete (use transactions)."""
+        warnings.warn(
+            "DatalogServer.submit_delete is deprecated; use "
+            'transaction().retract(rel, rows).submit() or submit_txn',
+            DeprecationWarning,
+            stacklevel=2,
+        )
         return self._submit_update("delete", rel, rows)
 
     def _submit_update(self, kind: str, rel: str, rows: np.ndarray) -> int:
@@ -218,6 +361,7 @@ class DatalogServer:
     # -- the serving loop ----------------------------------------------------
 
     _UPDATE_FNS = {"insert": "insert_facts", "delete": "retract_facts"}
+    _UPDATE_KINDS = frozenset({"insert", "delete", "txn"})
 
     def run(self) -> dict[int, np.ndarray | UpdateStats | RequestError]:
         """Drain the queue; returns rid → query rows, UpdateStats, or
@@ -246,7 +390,7 @@ class DatalogServer:
             # mode, queries do too)
             self._reap_writer()
             group = self._admit()
-            if group[0].kind not in self._UPDATE_FNS:
+            if group[0].kind not in self._UPDATE_KINDS:
                 self._serve_queries(group)
             elif self.snapshot_reads:
                 self._start_writer(group)
@@ -357,6 +501,78 @@ class DatalogServer:
         )
 
     def _apply_update_group(self, group: list[_Request]):
+        if group[0].kind == "txn":
+            return self._apply_txn_group(group)
+        return self._apply_legacy_group(group)
+
+    def _apply_txn_group(self, group: list[_Request]):
+        """One group-commit of coalesced transactions.
+
+        The members' ops concatenate in submission order and apply as ONE
+        instance transaction — one epoch, one Δ/∇ propagation pass over the
+        stratification, one framed WAL group with one fsync (admission
+        checked compatibility, so the merge is equivalent to sequential
+        application).  Each rid gets its own ``UpdateStats`` copy carrying
+        its own per-op slices.  A failed group falls back per-transaction
+        behind the same rollback-boundary guard as the legacy path;
+        acknowledged-failed transactions get txn-granularity abort markers
+        so recovery never redoes them.
+        """
+        all_ops = [op for r in group for op in r.payload]
+        epoch0 = self.instance.epoch
+        token: str | None = None
+        if self.durability is not None:
+            # WAL-before-publish: the whole bracket (one fsync on the COMMIT
+            # frame) is durable before any effect can become visible
+            token = self.durability.log_txn(
+                [(rel, op, rows) for op, rel, rows in all_ops], epoch0 + 1
+            )
+        try:
+            batch = self.instance.apply_txn(all_ops)
+            results: dict = {}
+            i = 0
+            for r in group:
+                n = len(r.payload)
+                results[r.rid] = replace(
+                    batch,
+                    requested=sum(len(rows) for _, _, rows in r.payload),
+                    ops=[replace(o) for o in batch.ops[i : i + n]],
+                    modes=dict(batch.modes),
+                    iterations=dict(batch.iterations),
+                )
+                i += n
+            return results
+        except Exception:
+            if self.durability is not None:
+                self.durability.abort_txn(token, epoch0 + 1)
+            if self.instance.epoch != epoch0:
+                return {
+                    r.rid: RequestError(
+                        r.rid,
+                        "RollbackError: coalesced batch left partial state; "
+                        "refusing per-request replay",
+                    )
+                    for r in group
+                }
+            results = {}
+            for r in group:
+                predicted = self.instance.epoch + 1
+                tok: str | None = None
+                if self.durability is not None:
+                    tok = self.durability.log_txn(
+                        [(rel, op, rows) for op, rel, rows in r.payload],
+                        predicted,
+                    )
+                results[r.rid] = self._apply(
+                    lambda r=r: self.instance.apply_txn(r.payload), r.rid
+                )
+                if self.durability is not None and isinstance(
+                    results[r.rid], RequestError
+                ):
+                    self.durability.abort_txn(tok, predicted)
+            return results
+
+    def _apply_legacy_group(self, group: list[_Request]):
         """One coalesced insert/delete batch, with isolated fallback.
 
         Each rid gets its OWN stats slice (``requested`` is the request's row
@@ -377,9 +593,22 @@ class DatalogServer:
             self.durability.log_group(
                 [(r.rel, r.kind, r.payload) for r in group], epoch0 + 1
             )
+        # the deprecation already surfaced at submit_* time; delegating
+        # through the shim here (kept so tests can monkeypatch
+        # insert_facts/retract_facts) must not re-warn from library
+        # internals on every batch.  The flag is instance state read only
+        # on this (single) writer thread — never the process-global warning
+        # filters, which are not thread-safe to mutate.
+        def quiet(call):
+            self.instance._quiet_shims = True
+            try:
+                return call()
+            finally:
+                self.instance._quiet_shims = False
+
         try:
             rows = np.concatenate([r.payload for r in group])
-            batch = fn(group[0].rel, rows)
+            batch = quiet(lambda: fn(group[0].rel, rows))
             return {
                 r.rid: replace(
                     batch,
@@ -420,7 +649,9 @@ class DatalogServer:
                     self.durability.log_group(
                         [(r.rel, r.kind, r.payload)], predicted
                     )
-                results[r.rid] = self._apply(lambda r=r: fn(r.rel, r.payload), r.rid)
+                results[r.rid] = self._apply(
+                    lambda r=r: quiet(lambda: fn(r.rel, r.payload)), r.rid
+                )
                 if self.durability is not None and isinstance(
                     results[r.rid], RequestError
                 ):
@@ -453,7 +684,7 @@ class DatalogServer:
             )
         while len(self.done) > self.history:     # evict oldest results
             self.done.pop(next(iter(self.done)))
-        if self.durability is not None and group[0].kind in self._UPDATE_FNS:
+        if self.durability is not None and group[0].kind in self._UPDATE_KINDS:
             self._ckpt_wake.set()       # nudge the checkpointer's policy check
 
     @staticmethod
@@ -464,12 +695,30 @@ class DatalogServer:
             return RequestError(rid, f"{type(e).__name__}: {e}")
 
     def _admit(self) -> list[_Request]:
-        """Admission batch: the longest same-kind run at the queue head —
-        same-relation runs for inserts/deletes (they coalesce into one update
-        batch), any run of queries (they share the warm executables and one
-        pinned snapshot)."""
+        """Admission batch: the longest coalescible run at the queue head.
+
+        Queries batch with queries (they share the warm executables and one
+        pinned snapshot); legacy inserts/deletes batch with same-kind
+        same-relation neighbors (one update call); transactions batch with
+        *compatible* transactions — the merged op list must still be a
+        valid transaction, i.e. no row inserted by one member and retracted
+        by another — and the whole group commits as one epoch.
+        """
         head = self.queue.popleft()
         group = [head]
+        if head.kind == "txn":
+            merged = None       # row sets only materialize if a neighbor exists
+            while (
+                self.queue
+                and len(group) < self.max_batch
+                and self.queue[0].kind == "txn"
+            ):
+                if merged is None:
+                    merged = _TxnRowSets(head.payload)
+                if not merged.try_add(self.queue[0].payload):
+                    break
+                group.append(self.queue.popleft())
+            return group
         while self.queue and len(group) < self.max_batch:
             nxt = self.queue[0]
             if nxt.kind != head.kind:

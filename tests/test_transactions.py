@@ -1,0 +1,817 @@
+"""Transactional write API tests.
+
+Central invariants:
+
+* ``apply_txn`` — an atomic multi-relation mixed insert/retract batch —
+  publishes exactly ONE epoch and leaves every relation bit-for-bit
+  identical to a from-scratch ``Engine.run`` on the post-transaction EDB
+  (one Δ/∇ propagation pass, not one per relation);
+* readers never observe a partially applied transaction (mid-flight reads
+  return the pre-transaction fixpoint, failures publish nothing);
+* the WAL logs a transaction as one framed BEGIN/op*/COMMIT group with one
+  fsync; recovery replays whole transactions or drops them whole (crash
+  mid-commit), and txn-granularity abort markers cancel acknowledged
+  failures;
+* the deprecated single-relation surface (``insert_facts``/
+  ``retract_facts``/``submit_insert``/``submit_delete``) delegates to
+  single-op transactions bit-for-bit, warning on use.
+"""
+
+import os
+import threading
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from conftest import random_edges
+from repro.core import Engine, EngineConfig
+from repro.persist.wal import OP_BEGIN, OP_COMMIT, DeltaWAL, _raw_frames
+from repro.serve_datalog import (
+    DatalogServer,
+    DurabilityConfig,
+    MaterializedInstance,
+    RequestError,
+    TxnOp,
+)
+
+# Two EDB relations feeding ONE recursive stratum: the shape the single-pass
+# propagation is for (a txn touching both must traverse the stratum once).
+TWO_EDB_TC = """
+tc(x,y) :- arc(x,y).
+tc(x,y) :- rail(x,y).
+tc(x,y) :- tc(x,z), arc(z,y).
+tc(x,y) :- tc(x,z), rail(z,y).
+"""
+
+
+def _as_set(rows):
+    return set(map(tuple, np.asarray(rows).tolist()))
+
+
+def _two_edb(rng, n=12, n_arc=26, n_rail=18):
+    arc = np.unique(rng.integers(0, n, size=(n_arc, 2)), axis=0).astype(np.int32)
+    rail = np.unique(rng.integers(0, n, size=(n_rail, 2)), axis=0).astype(np.int32)
+    return arc, rail
+
+
+def _oracle(prog, edb, config=None):
+    return Engine(EngineConfig(**vars(config or EngineConfig(backend="tuple")))).run(
+        prog, edb
+    )
+
+
+def _apply_edb(edb, ops):
+    """The reference semantics of one transaction on the host-side EDB."""
+    out = {k: _as_set(v) for k, v in edb.items()}
+    for op, rel, rows in ops:
+        if op == "insert":
+            out[rel] |= _as_set(rows)
+        else:
+            out[rel] -= _as_set(rows)
+    return {
+        k: np.array(sorted(v), np.int32).reshape(-1, edb[k].shape[1])
+        for k, v in out.items()
+    }
+
+
+# --------------------------------------------------------------------------
+# atomic multi-relation mixed transactions
+# --------------------------------------------------------------------------
+
+
+def test_mixed_txn_one_epoch_matches_scratch(rng):
+    """The acceptance property: ops on ≥2 relations commit as ONE epoch and
+    land bit-for-bit on the from-scratch fixpoint of the final EDB."""
+    arc, rail = _two_edb(rng)
+    ins, base_arc = arc[-3:], arc[:-3]
+    dels = rail[-3:]
+    inst = MaterializedInstance(
+        TWO_EDB_TC, {"arc": base_arc, "rail": rail}, EngineConfig(backend="tuple")
+    )
+    e0 = inst.epoch
+    ops = [("insert", "arc", ins), ("delete", "rail", dels)]
+    st = inst.apply_txn(ops)
+    assert inst.epoch == e0 + 1 and st.epoch == e0 + 1      # exactly one epoch
+    assert st.kind == "txn" and len(st.ops) == 2
+    assert st.ops[0].op == "insert" and st.ops[0].rel == "arc"
+    assert st.ops[1].op == "delete" and st.ops[1].rel == "rail"
+    final = _apply_edb({"arc": base_arc, "rail": rail}, ops)
+    oracle = _oracle(TWO_EDB_TC, final)
+    for name, want in oracle.items():
+        assert _as_set(inst.relation(name)) == _as_set(want), name
+    assert _as_set(inst.relation("arc")) == _as_set(final["arc"])
+    assert _as_set(inst.relation("rail")) == _as_set(final["rail"])
+    # the recursive stratum was visited once, by the unified driver
+    assert list(st.modes.values()).count("dred") == 1
+    assert set(st.write_set) >= {"arc", "rail", "tc"}
+    assert set(st.read_set) >= set(st.write_set)
+
+
+def test_txn_single_pass_visits_each_stratum_once(rng):
+    """A txn feeding one recursive stratum from two relations must traverse
+    it once, not once per relation (count engine DRed/ingest entries)."""
+    arc, rail = _two_edb(rng)
+    inst = MaterializedInstance(
+        TWO_EDB_TC, {"arc": arc[:-2], "rail": rail}, EngineConfig(backend="tuple")
+    )
+    calls = []
+    orig = inst.engine.dred_stratum
+
+    def counting(*a, **k):
+        calls.append(1)
+        return orig(*a, **k)
+
+    inst.engine.dred_stratum = counting
+    inst.apply_txn([("insert", "arc", arc[-2:]), ("delete", "rail", rail[-2:])])
+    assert len(calls) == 1
+
+
+def test_txn_ops_same_relation_merge(rng):
+    """Multiple same-kind ops on one relation apply in order, each with its
+    own applied count."""
+    arc, rail = _two_edb(rng)
+    inst = MaterializedInstance(
+        TWO_EDB_TC, {"arc": arc[:-4], "rail": rail}, EngineConfig(backend="tuple")
+    )
+    st = inst.apply_txn(
+        [
+            ("insert", "arc", arc[-4:-2]),
+            ("insert", "arc", arc[-2:]),
+            ("insert", "arc", arc[-2:]),          # duplicate: applied == 0
+        ]
+    )
+    assert [o.applied for o in st.ops] == [2, 2, 0]
+    oracle = _oracle(TWO_EDB_TC, {"arc": arc, "rail": rail})
+    assert _as_set(inst.relation("tc")) == _as_set(oracle["tc"])
+
+
+def test_txn_accepts_txnop_and_retract_alias(rng):
+    arc, rail = _two_edb(rng)
+    inst = MaterializedInstance(
+        TWO_EDB_TC, {"arc": arc[:-2], "rail": rail}, EngineConfig(backend="tuple")
+    )
+    st = inst.apply_txn(
+        [TxnOp("insert", "arc", arc[-2:]), TxnOp("retract", "rail", rail[-2:])]
+    )
+    assert [o.op for o in st.ops] == ["insert", "delete"]
+    final = _apply_edb(
+        {"arc": arc[:-2], "rail": rail},
+        [("insert", "arc", arc[-2:]), ("delete", "rail", rail[-2:])],
+    )
+    oracle = _oracle(TWO_EDB_TC, final)
+    assert _as_set(inst.relation("tc")) == _as_set(oracle["tc"])
+
+
+def test_txn_domain_growth_rebuilds_in_one_epoch(rng):
+    arc, rail = _two_edb(rng, n=10)
+    inst = MaterializedInstance(
+        TWO_EDB_TC, {"arc": arc, "rail": rail}, EngineConfig(backend="tuple")
+    )
+    e0 = inst.epoch
+    ops = [
+        ("insert", "arc", np.array([[0, 31]], np.int32)),   # beyond the domain
+        ("delete", "rail", rail[-2:]),
+    ]
+    st = inst.apply_txn(ops)
+    assert st.full_rebuild and inst.epoch == e0 + 1
+    final = _apply_edb({"arc": arc, "rail": rail}, ops)
+    oracle = _oracle(TWO_EDB_TC, final)
+    for name, want in oracle.items():
+        assert _as_set(inst.relation(name)) == _as_set(want), name
+
+
+def test_txn_noop_publishes_nothing(rng):
+    arc, rail = _two_edb(rng)
+    inst = MaterializedInstance(
+        TWO_EDB_TC, {"arc": arc, "rail": rail}, EngineConfig(backend="tuple")
+    )
+    e0 = inst.epoch
+    st = inst.apply_txn(
+        [
+            ("insert", "arc", arc[:2]),                     # already present
+            ("delete", "rail", np.array([[9, 9]], np.int32)),  # absent
+        ]
+    )
+    assert inst.epoch == e0 and st.epoch == e0
+    assert all(o.applied == 0 for o in st.ops)
+
+
+# --------------------------------------------------------------------------
+# submission-time validation
+# --------------------------------------------------------------------------
+
+
+def test_txn_validation_rejects_before_queue_and_wal(rng, tmp_path):
+    arc, rail = _two_edb(rng)
+    inst = MaterializedInstance(
+        TWO_EDB_TC, {"arc": arc, "rail": rail}, EngineConfig(backend="tuple")
+    )
+    srv = DatalogServer(inst, durability=str(tmp_path / "root"))
+    wal_records = srv.durability.wal.appended_records
+    cases = [
+        ([], "empty"),
+        ([("insert", "nope", [[1, 2]])], "not an EDB"),
+        ([("insert", "tc", [[1, 2]])], "not an EDB"),         # IDB target
+        ([("frobnicate", "arc", [[1, 2]])], "unknown transaction op"),
+        ([("insert", "arc", [[1, 2, 3]])], "arity"),
+        ([("insert", "arc", [1, 2, 3, 4])], "arity"),   # flat ≠ one row: never
+                                                        # reshape-scrambled
+        ([("insert", "arc", np.array([[1.5, 2.5]]))], "integer-typed"),
+        ([("insert", "arc", [[-1, 2]])], "negative"),
+        ([("insert", "arc", [[1, 2]]), ("delete", "arc", [[1, 2]])], "inserts and retracts"),
+    ]
+    for ops, needle in cases:
+        with pytest.raises(RequestError, match=needle):
+            srv.submit_txn(ops)
+    assert not srv.queue                        # nothing malformed admitted
+    assert srv.durability.wal.appended_records == wal_records  # WAL untouched
+    ok = srv.submit_txn([("insert", "arc", [1, 2])])   # flat single row: fine
+    done = srv.run()
+    assert done[ok].ops[0].requested == 1
+    srv.close()
+
+
+def test_txn_builder_submit_once(rng):
+    arc, rail = _two_edb(rng)
+    inst = MaterializedInstance(
+        TWO_EDB_TC, {"arc": arc[:-2], "rail": rail}, EngineConfig(backend="tuple")
+    )
+    srv = DatalogServer(inst)
+    tx = srv.transaction().insert("arc", arc[-2:])
+    rid = tx.submit()
+    with pytest.raises(RequestError, match="already submitted"):
+        tx.submit()
+    with pytest.raises(RequestError, match="already submitted"):
+        tx.insert("arc", arc[:1])
+    done = srv.run()
+    assert done[rid].ops[0].applied == 2
+
+
+# --------------------------------------------------------------------------
+# atomicity: failures publish nothing, readers never see a partial txn
+# --------------------------------------------------------------------------
+
+
+def test_failed_txn_publishes_nothing(rng, monkeypatch):
+    arc, rail = _two_edb(rng)
+    inst = MaterializedInstance(
+        TWO_EDB_TC, {"arc": arc[:-2], "rail": rail}, EngineConfig(backend="tuple")
+    )
+    e0, before = inst.epoch, {r: inst.store[r] for r in ("arc", "rail", "tc")}
+
+    def boom(*a, **k):
+        raise RuntimeError("mid-txn crash")
+
+    monkeypatch.setattr(inst.engine, "dred_stratum", boom)
+    with pytest.raises(RuntimeError):
+        inst.apply_txn(
+            [("insert", "arc", arc[-2:]), ("delete", "rail", rail[-2:])]
+        )
+    assert inst.epoch == e0
+    for r, h in before.items():                 # identity: nothing published
+        assert inst.store[r] is h
+    monkeypatch.undo()
+    st = inst.apply_txn(                        # retry from an untouched base
+        [("insert", "arc", arc[-2:]), ("delete", "rail", rail[-2:])]
+    )
+    assert st.epoch == e0 + 1
+    final = _apply_edb(
+        {"arc": arc[:-2], "rail": rail},
+        [("insert", "arc", arc[-2:]), ("delete", "rail", rail[-2:])],
+    )
+    oracle = _oracle(TWO_EDB_TC, final)
+    assert _as_set(inst.relation("tc")) == _as_set(oracle["tc"])
+
+
+def test_readers_never_observe_partial_txn(rng, monkeypatch):
+    """A query racing a mixed txn on the writer thread reads the pinned
+    pre-txn fixpoint; after publish it reads the whole txn."""
+    arc, rail = _two_edb(rng, n=16, n_arc=36)
+    inst = MaterializedInstance(
+        TWO_EDB_TC, {"arc": arc[:-3], "rail": rail}, EngineConfig(backend="tuple")
+    )
+    pre_tc = _as_set(inst.relation("tc"))
+    srv = DatalogServer(inst)
+
+    entered, release = threading.Event(), threading.Event()
+    orig = inst.engine.dred_stratum
+
+    def paused(*a, **k):
+        entered.set()
+        assert release.wait(timeout=60)
+        return orig(*a, **k)
+
+    monkeypatch.setattr(inst.engine, "dred_stratum", paused)
+    rid = srv.submit_txn(
+        [("insert", "arc", arc[-3:]), ("delete", "rail", rail[-3:])]
+    )
+    q = srv.submit_query("tc")
+
+    def unblock():
+        assert entered.wait(timeout=60)
+        deadline = time.monotonic() + 60
+        while q not in srv.done and time.monotonic() < deadline:
+            time.sleep(0.002)
+        release.set()
+
+    th = threading.Thread(target=unblock)
+    th.start()
+    done = srv.run()
+    th.join()
+    assert _as_set(done[q]) == pre_tc           # mid-txn read: pre-txn epoch
+    final = _apply_edb(
+        {"arc": arc[:-3], "rail": rail},
+        [("insert", "arc", arc[-3:]), ("delete", "rail", rail[-3:])],
+    )
+    oracle = _oracle(TWO_EDB_TC, final)
+    q2 = srv.submit_query("tc")
+    done = srv.run()
+    assert _as_set(done[q2]) == _as_set(oracle["tc"])
+    assert not isinstance(done[rid], RequestError)
+
+
+# --------------------------------------------------------------------------
+# server group commit
+# --------------------------------------------------------------------------
+
+
+def test_compatible_txns_group_commit_one_epoch(rng):
+    arc, rail = _two_edb(rng)
+    inst = MaterializedInstance(
+        TWO_EDB_TC, {"arc": arc[:-4], "rail": rail}, EngineConfig(backend="tuple")
+    )
+    srv = DatalogServer(inst)
+    e0 = inst.epoch
+    r1 = srv.submit_txn([("insert", "arc", arc[-4:-2])])
+    r2 = srv.submit_txn(
+        [("insert", "arc", arc[-2:]), ("delete", "rail", rail[-2:])]
+    )
+    done = srv.run()
+    assert inst.epoch == e0 + 1                 # one group-commit epoch
+    assert done[r1].epoch == done[r2].epoch == e0 + 1
+    assert [o.rel for o in done[r1].ops] == ["arc"]
+    assert [o.rel for o in done[r2].ops] == ["arc", "rail"]
+    final = _apply_edb(
+        {"arc": arc[:-4], "rail": rail},
+        [("insert", "arc", arc[-4:]), ("delete", "rail", rail[-2:])],
+    )
+    oracle = _oracle(TWO_EDB_TC, final)
+    assert _as_set(inst.relation("tc")) == _as_set(oracle["tc"])
+
+
+def test_conflicting_txns_do_not_coalesce(rng):
+    """T1 inserts a row T2 retracts: merging would reject (or reorder) —
+    they must commit as two epochs with sequential semantics."""
+    arc, rail = _two_edb(rng)
+    row = arc[-1:]
+    inst = MaterializedInstance(
+        TWO_EDB_TC, {"arc": arc[:-1], "rail": rail}, EngineConfig(backend="tuple")
+    )
+    srv = DatalogServer(inst)
+    e0 = inst.epoch
+    r1 = srv.submit_txn([("insert", "arc", row)])
+    r2 = srv.submit_txn([("delete", "arc", row)])
+    done = srv.run()
+    assert not isinstance(done[r1], RequestError)
+    assert not isinstance(done[r2], RequestError)
+    assert inst.epoch == e0 + 2                 # two epochs, in order
+    assert _as_set(inst.relation("arc")) == _as_set(arc[:-1])
+    oracle = _oracle(TWO_EDB_TC, {"arc": arc[:-1], "rail": rail})
+    assert _as_set(inst.relation("tc")) == _as_set(oracle["tc"])
+
+
+def test_failed_group_falls_back_per_txn(rng, monkeypatch):
+    """One poisoned txn in a group must not lose its neighbors."""
+    arc, rail = _two_edb(rng)
+    inst = MaterializedInstance(
+        TWO_EDB_TC, {"arc": arc[:-4], "rail": rail}, EngineConfig(backend="tuple")
+    )
+    srv = DatalogServer(inst)
+    good1 = srv.submit_txn([("insert", "arc", arc[-4:-2])])
+    good2 = srv.submit_txn([("insert", "arc", arc[-2:])])
+    # poison the coalesced attempt only: first apply_txn call raises
+    orig = inst.apply_txn
+    calls = {"n": 0}
+
+    def flaky(ops):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient")
+        return orig(ops)
+
+    monkeypatch.setattr(inst, "apply_txn", flaky)
+    done = srv.run()
+    assert done[good1].ops[0].applied == 2
+    assert done[good2].ops[0].applied == 2
+    oracle = _oracle(TWO_EDB_TC, {"arc": arc, "rail": rail})
+    assert _as_set(inst.relation("tc")) == _as_set(oracle["tc"])
+
+
+# --------------------------------------------------------------------------
+# WAL framing + crash recovery
+# --------------------------------------------------------------------------
+
+
+def test_txn_logs_one_commit_frame_and_restores(rng, tmp_path):
+    arc, rail = _two_edb(rng)
+    root = str(tmp_path / "root")
+    inst = MaterializedInstance(
+        TWO_EDB_TC, {"arc": arc[:-2], "rail": rail}, EngineConfig(backend="tuple")
+    )
+    srv = DatalogServer(
+        inst,
+        durability=DurabilityConfig(
+            root=root, checkpoint_every_epochs=0, checkpoint_wal_bytes=0
+        ),
+    )
+    syncs0 = srv.durability.wal.syncs
+    rid = srv.submit_txn(
+        [("insert", "arc", arc[-2:]), ("delete", "rail", rail[-2:])]
+    )
+    srv.run()
+    assert srv.durability.wal.syncs == syncs0 + 1       # one fsync per commit
+    srv.close()
+    data = open(os.path.join(root, "wal.log"), "rb").read()
+    ops = [f[1] for f in _raw_frames(data)]
+    assert ops.count(OP_BEGIN) == 1 and ops.count(OP_COMMIT) == 1
+
+    restored = MaterializedInstance.restore(
+        root, config=EngineConfig(backend="tuple")
+    )
+    assert restored.restore_stats["replayed_batches"] == 1  # whole txn, once
+    assert restored.restore_stats["replayed_records"] == 2
+    for r in ("arc", "rail", "tc"):
+        assert _as_set(restored.relation(r)) == _as_set(inst.relation(r)), r
+    assert restored.epoch == inst.epoch
+
+
+def test_crash_mid_commit_drops_whole_txn(rng, tmp_path):
+    """BEGIN + op frames without the COMMIT frame (crash mid-commit): the
+    transaction must be dropped whole on recovery — never half-applied."""
+    arc, rail = _two_edb(rng)
+    root = str(tmp_path / "root")
+    inst = MaterializedInstance(
+        TWO_EDB_TC, {"arc": arc[:-2], "rail": rail}, EngineConfig(backend="tuple")
+    )
+    srv = DatalogServer(
+        inst,
+        durability=DurabilityConfig(
+            root=root, checkpoint_every_epochs=0, checkpoint_wal_bytes=0
+        ),
+    )
+    srv.run()
+    srv.close()
+    wal = DeltaWAL(os.path.join(root, "wal.log"), fsync="off")
+    wal.begin_txn(inst.epoch + 1)               # crash before COMMIT lands:
+    wal.append("arc", "insert", arc[-2:], inst.epoch + 1)
+    wal.append("rail", "delete", rail[-2:], inst.epoch + 1)
+    wal.close()
+    restored = MaterializedInstance.restore(
+        root, config=EngineConfig(backend="tuple")
+    )
+    assert restored.restore_stats["replayed_records"] == 0
+    for r in ("arc", "rail", "tc"):
+        assert _as_set(restored.relation(r)) == _as_set(inst.relation(r)), r
+
+
+def test_txn_abort_marker_cancels_on_recovery(rng, tmp_path):
+    """A committed-then-aborted (acknowledged failed) transaction must not
+    be redone by replay — txn-granularity abort."""
+    arc, rail = _two_edb(rng)
+    root = str(tmp_path / "root")
+    inst = MaterializedInstance(
+        TWO_EDB_TC, {"arc": arc[:-2], "rail": rail}, EngineConfig(backend="tuple")
+    )
+    srv = DatalogServer(
+        inst,
+        durability=DurabilityConfig(
+            root=root, checkpoint_every_epochs=0, checkpoint_wal_bytes=0
+        ),
+    )
+    srv.run()
+    srv.close()
+    wal = DeltaWAL(os.path.join(root, "wal.log"), fsync="off")
+    tok = wal.begin_txn(inst.epoch + 1)
+    wal.append("arc", "insert", arc[-2:], inst.epoch + 1)
+    wal.commit_txn(tok, inst.epoch + 1)
+    wal.abort_txn(tok, inst.epoch + 1)
+    wal.close()
+    restored = MaterializedInstance.restore(
+        root, config=EngineConfig(backend="tuple")
+    )
+    assert restored.restore_stats["replayed_records"] == 0
+    assert _as_set(restored.relation("arc")) == _as_set(arc[:-2])
+
+
+def test_truncate_preserves_txn_framing(tmp_path):
+    path = str(tmp_path / "wal.log")
+    wal = DeltaWAL(path, fsync="off")
+    for e in (1, 2):
+        tok = wal.begin_txn(e)
+        wal.append("arc", "insert", np.array([[e, e]], np.int32), e)
+        wal.append("rail", "delete", np.array([[e, 0]], np.int32), e)
+        wal.commit_txn(tok, e)
+    assert wal.truncate(up_to_epoch=1) == 1
+    txns = wal.replay_txns()
+    assert len(txns) == 1 and txns[0].epoch == 2 and txns[0].token is not None
+    assert [(r.rel, r.op) for r in txns[0].ops] == [
+        ("arc", "insert"), ("rail", "delete"),
+    ]
+    wal.close()
+
+
+def test_truncate_racing_append_txn_keeps_brackets_whole(tmp_path):
+    """A checkpoint truncation racing framed appends must never split a
+    bracket: the writer lands whole brackets in one atomic write, so both
+    the truncate scan and its raw-tail copy see whole transactions."""
+    path = str(tmp_path / "wal.log")
+    wal = DeltaWAL(path, fsync="off")
+    n = 40
+
+    def writer():
+        for e in range(1, n + 1):
+            wal.append_txn(
+                [
+                    ("arc", "insert", np.array([[e, 1]], np.int32)),
+                    ("rail", "delete", np.array([[e, 2]], np.int32)),
+                ],
+                e,
+            )
+
+    th = threading.Thread(target=writer)
+    th.start()
+    while th.is_alive():
+        wal.truncate(up_to_epoch=0)        # drops nothing; exercises the swap
+    th.join()
+    wal.truncate(up_to_epoch=0)
+    txns = wal.replay_txns()
+    assert sorted(t.epoch for t in txns) == list(range(1, n + 1))
+    assert all(t.token is not None and len(t.ops) == 2 for t in txns)
+    wal.close()
+
+
+def test_reopen_trims_torn_bracket_so_later_records_survive(tmp_path):
+    """A crash mid-commit leaves a torn BEGIN at the tail; records appended
+    after the restart must still replay — reopening trims the dead bracket
+    instead of letting it swallow them positionally."""
+    path = str(tmp_path / "wal.log")
+    wal = DeltaWAL(path, fsync="off")
+    wal.append("arc", "insert", np.array([[9, 9]], np.int32), 4)
+    wal.begin_txn(5)
+    wal.append("arc", "insert", np.array([[1, 2]], np.int32), 5)
+    wal.close()                            # crash: COMMIT never landed
+    wal2 = DeltaWAL(path, fsync="off")     # restart trims the torn bracket
+    wal2.append("arc", "insert", np.array([[3, 4]], np.int32), 6)
+    assert [(r.epoch, r.rows.tolist()) for r in wal2.replay()] == [
+        (4, [[9, 9]]),
+        (6, [[3, 4]]),
+    ]
+    wal2.close()
+
+
+def test_legacy_bare_records_still_replay(tmp_path):
+    """Pre-framing logs (bare op records) must keep replaying, including
+    record-granularity abort pairs."""
+    path = str(tmp_path / "wal.log")
+    wal = DeltaWAL(path, fsync="off")
+    wal.append("arc", "insert", np.array([[1, 2]], np.int32), 1)
+    wal.append("arc", "insert", np.array([[3, 4]], np.int32), 2)
+    wal.append("arc", "insert", np.array([[3, 4]], np.int32), 2, abort=True)
+    txns = wal.replay_txns()
+    assert [(t.token, t.epoch) for t in txns] == [(None, 1)]
+    assert [r.epoch for r in wal.replay()] == [1]
+    wal.close()
+
+
+# --------------------------------------------------------------------------
+# deprecation shims
+# --------------------------------------------------------------------------
+
+
+def test_shims_warn_and_match_txn_results(rng):
+    arc, rail = _two_edb(rng)
+    cfg = EngineConfig(backend="tuple")
+    a = MaterializedInstance(TWO_EDB_TC, {"arc": arc[:-2], "rail": rail}, cfg)
+    b = MaterializedInstance(TWO_EDB_TC, {"arc": arc[:-2], "rail": rail}, cfg)
+    with pytest.warns(DeprecationWarning):
+        st_old = a.insert_facts("arc", arc[-2:])
+    st_new = b.apply_txn([("insert", "arc", arc[-2:])])
+    for f in ("relation", "kind", "requested", "inserted", "derived",
+              "modes", "epoch"):
+        assert getattr(st_old, f) == getattr(st_new, f), f
+    with pytest.warns(DeprecationWarning):
+        st_old = a.retract_facts("rail", rail[-2:])
+    st_new = b.apply_txn([("delete", "rail", rail[-2:])])
+    for f in ("relation", "kind", "requested", "removed", "retracted",
+              "modes", "epoch"):
+        assert getattr(st_old, f) == getattr(st_new, f), f
+    for r in ("arc", "rail", "tc"):
+        assert _as_set(a.relation(r)) == _as_set(b.relation(r)), r
+
+
+def test_server_shims_warn(rng):
+    edges = random_edges(rng, 12, 24)
+    inst = MaterializedInstance(
+        "tc(x,y) :- arc(x,y).  tc(x,y) :- tc(x,z), arc(z,y).",
+        {"arc": edges[:-2]},
+        EngineConfig(backend="tuple"),
+    )
+    srv = DatalogServer(inst)
+    with pytest.warns(DeprecationWarning):
+        srv.submit_insert("arc", edges[-2:-1])
+    with pytest.warns(DeprecationWarning):
+        srv.submit_delete("arc", edges[:1])
+    done = srv.run()
+    assert all(not isinstance(v, RequestError) for v in done.values())
+
+
+# --------------------------------------------------------------------------
+# conflict-detection substrate
+# --------------------------------------------------------------------------
+
+
+def test_epoch_write_sets_drive_conflict_detection(rng):
+    arc, rail = _two_edb(rng)
+    inst = MaterializedInstance(
+        TWO_EDB_TC, {"arc": arc[:-2], "rail": rail}, EngineConfig(backend="tuple")
+    )
+    base = inst.epoch
+    st = inst.apply_txn([("insert", "arc", arc[-2:])])
+    assert inst.vstore.conflicts_since(base, {"owner"}) == []
+    assert inst.vstore.conflicts_since(base, {"arc"}) == [st.epoch]
+    assert inst.vstore.conflicts_since(base, set(st.write_set)) == [st.epoch]
+    assert inst.vstore.conflicts_since(st.epoch, {"arc"}) == []
+
+
+# --------------------------------------------------------------------------
+# property test: random interleaved multi-relation mixed transactions
+# (hypothesis-driven where available; seeded-random fallback otherwise)
+# --------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAS_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAS_HYPOTHESIS = False
+
+
+def _txn_property(seed, txns, inject_failure=False, crash_mid_commit=False,
+                  tmp_root=None):
+    """Interleaved mixed multi-relation transactions == from-scratch, readers
+    never see a partial transaction, failed/crashed transactions leave no
+    trace."""
+    rng = np.random.default_rng(seed)
+    arc, rail = _two_edb(rng)
+    edb = {"arc": arc, "rail": rail}
+    cfg = EngineConfig(backend="tuple")
+    inst = MaterializedInstance(TWO_EDB_TC, dict(edb), cfg)
+    srv = None
+    if tmp_root is not None:
+        srv = DatalogServer(
+            inst,
+            durability=DurabilityConfig(
+                root=tmp_root, checkpoint_every_epochs=0, checkpoint_wal_bytes=0
+            ),
+        )
+    cur = {k: _as_set(v) for k, v in edb.items()}
+    for i, raw in enumerate(txns):
+        # drop in-txn insert/retract conflicts (the API rejects them)
+        ins_seen: dict[str, set] = {"arc": set(), "rail": set()}
+        del_seen: dict[str, set] = {"arc": set(), "rail": set()}
+        ops = []
+        for op, rel, pairs in raw:
+            rows = {tuple(p) for p in pairs}
+            if op == "insert":
+                rows -= del_seen[rel]
+                ins_seen[rel] |= rows
+            else:
+                rows -= ins_seen[rel]
+                del_seen[rel] |= rows
+            if rows:
+                ops.append((op, rel, np.array(sorted(rows), np.int32)))
+        if not ops:
+            continue
+        if inject_failure and i % 2 == 1 and cur["arc"]:
+            e0 = inst.epoch
+            orig = inst.engine.dred_stratum
+
+            def boom(*a, **k):
+                raise RuntimeError("mid-txn failure injection")
+
+            inst.engine.dred_stratum = boom
+            try:
+                with pytest.raises(RuntimeError):
+                    inst.apply_txn([("delete", "arc", np.array([next(iter(cur["arc"]))], np.int32).reshape(1, 2))])
+                assert inst.epoch == e0            # nothing published
+            finally:
+                inst.engine.dred_stratum = orig
+        if srv is not None:
+            rid = srv.submit_txn(ops)
+            done = srv.run()
+            assert not isinstance(done[rid], RequestError)
+        else:
+            inst.apply_txn(ops)
+        for op, rel, rows in ops:
+            if op == "insert":
+                cur[rel] |= _as_set(rows)
+            else:
+                cur[rel] -= _as_set(rows)
+    final = {
+        k: np.array(sorted(v), np.int32).reshape(-1, 2) for k, v in cur.items()
+    }
+    if srv is not None:
+        if crash_mid_commit:
+            # simulate a crash between WAL-append and publish of one more txn
+            wal = srv.durability.wal
+            wal.begin_txn(inst.epoch + 1)
+            wal.append("arc", "insert", np.array([[0, 1]], np.int32),
+                       inst.epoch + 1)
+            srv.close()                            # commit frame never lands
+            restored = MaterializedInstance.restore(tmp_root, config=cfg)
+            inst = restored
+        else:
+            srv.close()
+            inst = MaterializedInstance.restore(tmp_root, config=cfg)
+    oracle = _oracle(TWO_EDB_TC, final)
+    for name, want in oracle.items():
+        assert _as_set(inst.relation(name)) == _as_set(want), name
+    for name, want in final.items():
+        assert _as_set(inst.relation(name)) == _as_set(want), name
+
+
+if HAS_HYPOTHESIS:
+    txn_strategy = st.lists(
+        st.lists(
+            st.tuples(
+                st.sampled_from(["insert", "delete"]),
+                st.sampled_from(["arc", "rail"]),
+                st.lists(
+                    st.tuples(st.integers(0, 11), st.integers(0, 11)),
+                    min_size=1,
+                    max_size=4,
+                ),
+            ),
+            min_size=1,
+            max_size=3,
+        ),
+        min_size=1,
+        max_size=4,
+    )
+
+    @settings(deadline=None, max_examples=8)
+    @given(seed=st.integers(0, 3), txns=txn_strategy)
+    def test_interleaved_mixed_txns_match_scratch(seed, txns):
+        _txn_property(seed, txns)
+
+else:
+
+    def test_interleaved_mixed_txns_match_scratch():
+        rng = np.random.default_rng(29)
+        for seed in range(2):
+            txns = [
+                [
+                    (
+                        rng.choice(["insert", "delete"]),
+                        rng.choice(["arc", "rail"]),
+                        [tuple(p) for p in rng.integers(0, 12, size=(3, 2))],
+                    )
+                    for _ in range(rng.integers(1, 3))
+                ]
+                for _ in range(3)
+            ]
+            _txn_property(seed, txns)
+
+
+def test_txn_property_with_failure_injection(rng):
+    rng = np.random.default_rng(11)
+    txns = [
+        [
+            (
+                rng.choice(["insert", "delete"]),
+                rng.choice(["arc", "rail"]),
+                [tuple(p) for p in rng.integers(0, 12, size=(3, 2))],
+            )
+            for _ in range(2)
+        ]
+        for _ in range(3)
+    ]
+    _txn_property(5, txns, inject_failure=True)
+
+
+def test_txn_property_with_crash_mid_commit(tmp_path):
+    rng = np.random.default_rng(13)
+    txns = [
+        [
+            (
+                rng.choice(["insert", "delete"]),
+                rng.choice(["arc", "rail"]),
+                [tuple(p) for p in rng.integers(0, 12, size=(4, 2))],
+            )
+            for _ in range(2)
+        ]
+        for _ in range(2)
+    ]
+    _txn_property(3, txns, crash_mid_commit=True, tmp_root=str(tmp_path / "r"))
