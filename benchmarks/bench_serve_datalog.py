@@ -44,12 +44,14 @@ Sections can be selected individually:
     python -m benchmarks.run serve --sections insert,warm-start
 
 with sections ``insert`` (the four update workloads), ``delete``, ``query``,
-``concurrent``, ``warm-start``, and ``txn``.
+``concurrent``, ``warm-start``, ``txn``, and ``obs`` (tracing-disabled
+overhead vs. an instrumentation-bypassed baseline, rows
+``serve_obs_bypassed_p50`` / ``serve_obs_disabled_p50`` /
+``serve_obs_overhead_ratio`` — the < 3% CI gate).
 """
 
 from __future__ import annotations
 
-import math
 import shutil
 import tempfile
 import threading
@@ -60,6 +62,7 @@ import numpy as np
 
 from benchmarks.common import emit, timer
 from repro.configs.datalog_workloads import ALL as WORKLOADS
+from repro.obs.stats import percentile
 from repro.core import Engine, EngineConfig
 from repro.data.graphs import gnp_graph
 from repro.data.program_facts import csda_facts
@@ -70,7 +73,7 @@ from repro.serve_datalog import (
     MaterializedInstance,
 )
 
-SECTIONS = ("insert", "delete", "query", "concurrent", "warm-start", "txn")
+SECTIONS = ("insert", "delete", "query", "concurrent", "warm-start", "txn", "obs")
 
 # Two EDB relations feeding ONE recursive stratum — the shape where a mixed
 # transaction's single Δ/∇ pass beats sequential per-relation submissions
@@ -84,9 +87,8 @@ tc(x,y) :- tc(x,z), rail(z,y).
 
 
 def _p50(lats: list[float]) -> float:
-    """Nearest-rank median (matches ``ServerStats.latency``'s convention)."""
-    lats = sorted(lats)
-    return lats[max(math.ceil(0.5 * len(lats)) - 1, 0)]
+    """Nearest-rank median — shared convention lives in ``repro.obs.stats``."""
+    return percentile(lats, 0.50)
 
 
 def _bench_update(name, prog, edb_full, rel, config, warm_k=None):
@@ -423,6 +425,77 @@ def _bench_txn() -> None:
     )
 
 
+def _bench_obs_overhead() -> None:
+    """Tracing-disabled query p50 vs. the instrumentation bypassed entirely.
+
+    The observability subsystem promises a no-op fast path when tracing is
+    off: every span site costs one ``enabled`` check.  This section measures
+    that promise on the batched point-query path — the latency-sensitive
+    serving surface with the densest span coverage — by interleaving rounds
+    of two arms against one warm server:
+
+    * *bypassed*: ``TRACER.span``/``TRACER.instant`` rebound to bare
+      no-op callables, approximating a build with no instrumentation;
+    * *disabled*: the real code path with tracing off (the production
+      default).
+
+    The headline row is the ratio of min-over-rounds p50s (min filters
+    scheduler noise; interleaving makes thermal/clock drift hit both arms
+    equally).  CI gates the ratio below 1.03 — parse it from the derived
+    column (``ratio=...x``), not the µs column.
+    """
+    from repro.obs.trace import NOOP_SPAN, TRACER
+
+    inst = MaterializedInstance(
+        WORKLOADS["tc"].program,
+        {"arc": gnp_graph(512, p=0.004, seed=0)},
+        EngineConfig(backend="auto"),
+    )
+    srv = DatalogServer(inst, max_batch=32)
+    rng = np.random.default_rng(0)
+    srcs = [int(s) for s in rng.integers(0, 512, size=256)]
+    TRACER.disable()
+
+    def round_p50() -> float:
+        n_before = len(srv.stats.snapshot())
+        for s in srcs:
+            srv.submit_query("tc", src=s)
+        srv.run()
+        return percentile(
+            [
+                r.service_seconds
+                for r in srv.stats.snapshot()[n_before:]
+                if r.kind == "query"
+            ],
+            0.50,
+        )
+
+    def bypass() -> None:
+        TRACER.span = lambda *a, **k: NOOP_SPAN
+        TRACER.instant = lambda *a, **k: None
+
+    def unbypass() -> None:
+        TRACER.__dict__.pop("span", None)
+        TRACER.__dict__.pop("instant", None)
+
+    round_p50()                                    # shapes warm, traces hot
+    disabled: list[float] = []
+    bypassed: list[float] = []
+    try:
+        for _ in range(5):
+            bypass()
+            bypassed.append(round_p50())
+            unbypass()
+            disabled.append(round_p50())
+    finally:
+        unbypass()
+    d, b = min(disabled), min(bypassed)
+    ratio = d / max(b, 1e-12)
+    emit("serve_obs_bypassed_p50", b, f"n={len(srcs)}x5")
+    emit("serve_obs_disabled_p50", d, f"ratio={ratio:.4f}x n={len(srcs)}x5")
+    emit("serve_obs_overhead_ratio", ratio, f"ratio={ratio:.4f}x gate=1.03")
+
+
 def _timed_query(inst: MaterializedInstance, rel: str, src: int) -> float:
     t0 = time.perf_counter()
     inst.query(rel, src=src)
@@ -501,6 +574,11 @@ def run(sections: list[str] | None = None) -> None:
         # transactional writes: one mixed multi-relation pass vs. sequential
         # per-relation submissions
         _bench_txn()
+
+    if "obs" in sel:
+        # observability: tracing-disabled overhead vs. instrumentation
+        # bypassed (the CI-gated < 3% promise)
+        _bench_obs_overhead()
 
 
 if __name__ == "__main__":

@@ -1,11 +1,22 @@
-"""Benchmark helpers: timing + CSV emission (one row per measurement)."""
+"""Benchmark helpers: timing + CSV emission (one row per measurement).
+
+``emit`` both prints the CSV row and appends it to the module-level ``ROWS``
+accumulator so a driver (``benchmarks.run``) can collect headline numbers
+into a ``BENCH_*.json`` trajectory record after the run (see
+``benchmarks/trajectory.py``).
+"""
 
 from __future__ import annotations
 
 import time
 
+# (name, seconds, derived) for every emit() since process start; the run
+# driver snapshots len(ROWS) around each section to attribute rows.
+ROWS: list[tuple[str, float, str]] = []
+
 
 def emit(name: str, seconds: float, derived: str = "") -> None:
+    ROWS.append((name, seconds, derived))
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
 
 

@@ -1,0 +1,36 @@
+"""Print per-metric deltas between the last two records of a trajectory file.
+
+    python -m benchmarks.compare_trajectory BENCH_serve.json
+
+Exits 0 always (the trajectory is a report, not a gate — perf gates live in
+CI next to the benchmark that owns them); exits 2 only on usage errors.
+With fewer than two records it says so and still exits 0, so a first CI run
+with a fresh cache passes.
+"""
+
+from __future__ import annotations
+
+import sys
+
+from benchmarks.trajectory import format_compare, load
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 1:
+        print("usage: python -m benchmarks.compare_trajectory BENCH_FILE.json",
+              file=sys.stderr)
+        return 2
+    records = load(argv[0])
+    if len(records) < 2:
+        print(
+            f"{argv[0]}: {len(records)} record(s) — need 2 to compare; "
+            "deltas will appear on the next run"
+        )
+        return 0
+    print(format_compare(records[-2], records[-1]))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

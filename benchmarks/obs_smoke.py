@@ -1,0 +1,164 @@
+"""Observability smoke: traced server workload + export-format validation.
+
+Runs a small durable ``DatalogServer`` workload with tracing enabled, then
+validates the observable surfaces end to end:
+
+* the Chrome trace-event export is schema-valid (required keys, known
+  phases, non-negative µs durations) and contains the request-lifecycle
+  span names — enqueue through admission, txn apply, per-stratum
+  evaluation, WAL fsync, epoch publish, and the query batch;
+* same-thread spans nest (every child lies inside its parent's interval);
+* the Prometheus exposition parses line by line against the text-format
+  grammar and covers the headline metric families;
+* the JSON metrics snapshot round-trips through ``json.dumps``.
+
+Prints ``OBS_SMOKE_OK`` as the last line on success (CI greps for it);
+any failure raises.
+
+    PYTHONPATH=src python -m benchmarks.obs_smoke [trace_out.json]
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import sys
+import tempfile
+
+import numpy as np
+
+REQUIRED_SPANS = {
+    "enqueue",
+    "admission",
+    "writer.apply",
+    "txn.apply",
+    "stratum",
+    "iteration",
+    "wal.fsync",
+    "epoch.publish",
+    "serve.queries",
+}
+REQUIRED_METRICS = {
+    "datalog_requests_total",
+    "datalog_queue_depth",
+    "datalog_reader_pins",
+    "datalog_plan_cache_hit_rate",
+    "datalog_wal_fsync_seconds",
+    "datalog_checkpoint_seconds",
+    "datalog_query_seconds",
+    "datalog_update_seconds",
+}
+
+# Prometheus text-format line grammar (comment | sample | blank)
+_PROM_LINE = re.compile(
+    r"^(# (HELP|TYPE) [a-zA-Z_:][a-zA-Z0-9_:]* .*"
+    r"|[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^{}]*\})? [0-9.eE+-]+( [0-9]+)?"
+    r"|)$"
+)
+
+
+def validate_chrome_trace(trace: dict) -> set[str]:
+    """Schema-check a Chrome trace-event export; returns the span names."""
+    assert isinstance(trace, dict) and "traceEvents" in trace, (
+        "export must be the JSON-object form with a traceEvents array"
+    )
+    events = trace["traceEvents"]
+    assert isinstance(events, list) and events, "traceEvents empty"
+    names: set[str] = set()
+    for e in events:
+        assert {"name", "ph", "pid", "tid"} <= e.keys(), f"missing keys: {e}"
+        assert e["ph"] in ("X", "i", "M"), f"unknown phase {e['ph']!r}"
+        if e["ph"] == "M":
+            continue
+        assert isinstance(e["ts"], (int, float)) and e["ts"] >= 0, e
+        if e["ph"] == "X":
+            assert isinstance(e["dur"], (int, float)) and e["dur"] >= 0, e
+        names.add(e["name"])
+    return names
+
+
+def validate_nesting(trace: dict) -> int:
+    """Every complete span must lie inside its parent's interval (same tid)."""
+    evs = [e for e in trace["traceEvents"] if e["ph"] == "X"]
+    by_id = {e["args"]["span_id"]: e for e in evs}
+    checked = 0
+    for e in evs:
+        parent_id = e["args"].get("parent_id")
+        p = by_id.get(parent_id) if parent_id else None
+        if p is None:
+            continue
+        assert p["tid"] == e["tid"], f"cross-thread parent: {e}"
+        # ±1µs tolerance: ts/dur are rounded independently to whole µs
+        assert p["ts"] <= e["ts"] + 1 and (
+            e["ts"] + e["dur"] <= p["ts"] + p["dur"] + 1
+        ), f"span {e['args']['span_id']} escapes parent {parent_id}"
+        checked += 1
+    return checked
+
+
+def validate_prometheus(text: str) -> set[str]:
+    """Line-grammar check; returns the sample metric families seen."""
+    families: set[str] = set()
+    for line in text.splitlines():
+        assert _PROM_LINE.match(line), f"bad exposition line: {line!r}"
+        if line and not line.startswith("#"):
+            name = line.split("{")[0].split(" ")[0]
+            families.add(re.sub(r"_(bucket|sum|count)$", "", name))
+    return families
+
+
+def run(trace_out: str | None = None) -> None:
+    from repro.core.engine import EngineConfig
+    from repro.obs.trace import TRACER
+    from repro.serve_datalog import DatalogServer, MaterializedInstance
+
+    prog = """
+    tc(x,y) :- arc(x,y).
+    tc(x,y) :- tc(x,z), arc(z,y).
+    """
+    rng = np.random.default_rng(7)
+    arc = rng.integers(0, 96, size=(160, 2)).astype(np.int32)
+    root = tempfile.mkdtemp(prefix="repro_obs_smoke_")
+    inst = MaterializedInstance(prog, {"arc": arc},
+                                EngineConfig(backend="tuple"))
+    srv = DatalogServer(inst, durability=root)
+    TRACER.enable()
+    try:
+        held = arc[:4]
+        srv.submit_txn([("delete", "arc", held)])
+        for s in range(8):
+            srv.submit_query("tc", src=int(arc[s, 0]))
+        srv.run()
+        srv.submit_txn([("insert", "arc", held)])
+        srv.run()
+        srv.checkpoint_now()
+
+        trace = TRACER.export_chrome(trace_out)
+        names = validate_chrome_trace(trace)
+        missing = REQUIRED_SPANS - names
+        assert not missing, f"missing required spans: {sorted(missing)}"
+        nested = validate_nesting(trace)
+        assert nested > 0, "no parent/child span pairs recorded"
+        print(f"chrome trace: {len(trace['traceEvents'])} events, "
+              f"{len(names)} span names, {nested} nested spans validated")
+
+        families = validate_prometheus(srv.metrics_prometheus())
+        missing = REQUIRED_METRICS - families
+        assert not missing, f"missing required metrics: {sorted(missing)}"
+        print(f"prometheus exposition: {len(families)} families validated")
+
+        snap = srv.metrics()
+        json.dumps(snap)
+        assert snap['datalog_requests_total{kind="query"}'] == 8.0, snap
+        assert snap['datalog_requests_total{kind="txn"}'] == 2.0, snap
+        assert snap["datalog_wal_fsync_seconds"]["count"] >= 2, snap
+        assert snap["datalog_checkpoint_seconds"]["count"] >= 1, snap
+        print(f"json snapshot: {len(snap)} series")
+    finally:
+        TRACER.disable()
+        srv.close()
+    print("OBS_SMOKE_OK")
+
+
+if __name__ == "__main__":
+    run(sys.argv[1] if len(sys.argv) > 1 else None)

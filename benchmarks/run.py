@@ -13,7 +13,11 @@ The growing ``serve`` section takes a sub-section filter, e.g.
 
   python -m benchmarks.run serve --sections insert,warm-start
 
-picking from insert / delete / query / concurrent / warm-start / txn.
+picking from insert / delete / query / concurrent / warm-start / txn / obs.
+
+``--bench-json PATH`` appends one perf-trajectory record (git rev,
+``--timestamp``, section -> headline seconds) to PATH after the run and
+prints the delta vs. the previous record — see ``benchmarks/trajectory.py``.
 """
 
 from __future__ import annotations
@@ -24,29 +28,47 @@ import sys
 import traceback
 
 
-def _parse_args(argv: list[str]) -> tuple[list[str], list[str] | None]:
-    """Split section names from the serve ``--sections a,b`` filter."""
+def _parse_args(
+    argv: list[str],
+) -> tuple[list[str], list[str] | None, str | None, str | None]:
+    """Split section names from ``--sections`` / ``--bench-json`` / ``--timestamp``."""
     sections: list[str] = []
     serve_sections: list[str] | None = None
+    bench_json: str | None = None
+    timestamp: str | None = None
+
+    def take_value(flag: str, i: int) -> tuple[str, int]:
+        if i + 1 >= len(argv):
+            raise SystemExit(f"{flag} needs a value")
+        return argv[i + 1], i + 2
+
     i = 0
     while i < len(argv):
         arg = argv[i]
         if arg == "--sections":
-            if i + 1 >= len(argv):
-                raise SystemExit("--sections needs a comma-separated value")
-            serve_sections = [s for s in argv[i + 1].split(",") if s]
-            i += 2
+            val, i = take_value(arg, i)
+            serve_sections = [s for s in val.split(",") if s]
         elif arg.startswith("--sections="):
             serve_sections = [s for s in arg.split("=", 1)[1].split(",") if s]
+            i += 1
+        elif arg == "--bench-json":
+            bench_json, i = take_value(arg, i)
+        elif arg.startswith("--bench-json="):
+            bench_json = arg.split("=", 1)[1]
+            i += 1
+        elif arg == "--timestamp":
+            timestamp, i = take_value(arg, i)
+        elif arg.startswith("--timestamp="):
+            timestamp = arg.split("=", 1)[1]
             i += 1
         else:
             sections.append(arg)
             i += 1
-    return sections, serve_sections
+    return sections, serve_sections, bench_json, timestamp
 
 
 def main() -> None:
-    sections, serve_sections = _parse_args(sys.argv[1:])
+    sections, serve_sections, bench_json, timestamp = _parse_args(sys.argv[1:])
     sections = sections or [
         "fig2",
         "fig10",
@@ -56,8 +78,12 @@ def main() -> None:
         "serve",
         "roofline",
     ]
+    from benchmarks import common
+
+    section_rows: dict[str, dict[str, float]] = {}
     print("name,us_per_call,derived")
     for sec in sections:
+        mark = len(common.ROWS)
         try:
             if sec == "fig2":
                 from benchmarks.bench_optimizations import run as r
@@ -86,6 +112,21 @@ def main() -> None:
         except Exception as e:
             traceback.print_exc(file=sys.stderr)
             print(f"{sec}_FAILED,0,{type(e).__name__}")
+        rows = common.ROWS[mark:]
+        if rows:
+            # last value wins on duplicate names within a section
+            section_rows[sec] = {name: secs for name, secs, _ in rows}
+
+    if bench_json:
+        from benchmarks import trajectory
+
+        record = trajectory.make_record(section_rows, timestamp=timestamp)
+        records = trajectory.append_record(bench_json, record)
+        print(f"# trajectory: appended record {len(records)} to {bench_json}",
+              file=sys.stderr)
+        if len(records) >= 2:
+            print(trajectory.format_compare(records[-2], records[-1]),
+                  file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,125 @@
+"""Perf-trajectory records: append benchmark headlines to a BENCH_*.json file.
+
+A trajectory file is a JSON array of records, one per benchmark run:
+
+    {
+      "git_rev":   "abc1234",
+      "timestamp": "2026-08-08T12:00:00Z",      # passed in by the runner
+      "sections":  {"serve": {"serve_query_p50": 0.0012, ...}, ...}
+    }
+
+``benchmarks.run --bench-json BENCH_serve.json`` appends one record per
+invocation; CI caches the file across runs so the array accumulates a
+history, and ``benchmarks.compare_trajectory`` prints per-metric deltas
+between the last two records.
+
+The file format is deliberately flat: metric values are the raw ``seconds``
+column from ``benchmarks.common.emit`` (NOT the printed µs), keyed by row
+name, grouped by section.  Ratio-valued rows (e.g. ``serve_txn_speedup``)
+store the ratio itself.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import tempfile
+
+
+def git_rev() -> str:
+    """Current commit: env override first (CI), then ``git rev-parse``."""
+    for var in ("BENCH_GIT_REV", "GITHUB_SHA"):
+        rev = os.environ.get(var, "")
+        if rev:
+            return rev[:12]
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short=12", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+        )
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except OSError:
+        pass
+    return "unknown"
+
+
+def load(path: str) -> list[dict]:
+    """Read a trajectory file; missing or corrupt files read as empty."""
+    try:
+        with open(path) as f:
+            records = json.load(f)
+    except (OSError, ValueError):
+        return []
+    return records if isinstance(records, list) else []
+
+
+def make_record(
+    sections: dict[str, dict[str, float]],
+    timestamp: str | None = None,
+    rev: str | None = None,
+) -> dict:
+    return {
+        "git_rev": rev if rev is not None else git_rev(),
+        "timestamp": timestamp or "",
+        "sections": sections,
+    }
+
+
+def append_record(path: str, record: dict) -> list[dict]:
+    """Append one record atomically (tmp file + rename); returns the array."""
+    records = load(path)
+    records.append(record)
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".bench_", suffix=".json")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(records, f, indent=1)
+            f.write("\n")
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    return records
+
+
+def compare(prev: dict, cur: dict) -> list[tuple[str, str, float, float, float]]:
+    """Per-metric (section, name, prev, cur, pct_change) between two records.
+
+    Only metrics present in BOTH records compare; pct_change is
+    ``(cur - prev) / prev * 100`` (0.0 when prev is 0).
+    """
+    rows = []
+    psec = prev.get("sections", {})
+    for sec, metrics in sorted(cur.get("sections", {}).items()):
+        old = psec.get(sec, {})
+        for name, val in sorted(metrics.items()):
+            if name not in old:
+                continue
+            p = old[name]
+            pct = (val - p) / p * 100.0 if p else 0.0
+            rows.append((sec, name, p, val, pct))
+    return rows
+
+
+def format_compare(prev: dict, cur: dict) -> str:
+    """Human-readable delta table between two trajectory records."""
+    rows = compare(prev, cur)
+    head = (
+        f"trajectory: {prev.get('git_rev', '?')} ({prev.get('timestamp', '?')})"
+        f" -> {cur.get('git_rev', '?')} ({cur.get('timestamp', '?')})"
+    )
+    if not rows:
+        return head + "\n  (no overlapping metrics)"
+    width = max(len(f"{sec}/{name}") for sec, name, *_ in rows)
+    lines = [head]
+    for sec, name, p, v, pct in rows:
+        lines.append(
+            f"  {sec + '/' + name:<{width}}  {p:>12.6f} -> {v:>12.6f}"
+            f"  {pct:+7.1f}%"
+        )
+    return "\n".join(lines)

@@ -56,6 +56,7 @@ from repro.core.seminaive import (
     rederive_seed_variants,
 )
 from repro.core.setdiff import DSDState, set_difference
+from repro.obs.trace import TRACER as _TRACE
 from repro.relational.sort import SENTINEL
 
 
@@ -189,17 +190,23 @@ class Engine:
                 resume_from, strat, store
             )
 
-        for stratum in strat.strata:
-            if stratum.index < start_stratum:
-                continue
-            it0 = start_iter if stratum.index == start_stratum else 0
-            self._eval_stratum(strat, stratum, store, start_iteration=it0)
+        with _TRACE.span(
+            "engine.run", "engine", strata=len(strat.strata), domain=domain
+        ):
+            for stratum in strat.strata:
+                if stratum.index < start_stratum:
+                    continue
+                it0 = start_iter if stratum.index == start_stratum else 0
+                self._eval_stratum(strat, stratum, store, start_iteration=it0)
 
         self.stats.total_seconds = time.perf_counter() - t_start
         # expose materialized state for incremental maintenance (serve_datalog)
         self.strat = strat
         self.store = store
-        return self._to_numpy(strat, program, store) if return_numpy else None
+        if not return_numpy:
+            return None
+        with _TRACE.span("device.sync", "engine", what="to_numpy"):
+            return self._to_numpy(strat, program, store)
 
     def take_store(self) -> dict[str, Any]:
         """Hand off the materialized handle map to the caller.
@@ -239,7 +246,12 @@ class Engine:
 
         plan = eligible_plan(stratum, self.domain, cfg)
         if plan is not None:
-            plan.execute(store, self)
+            with _TRACE.span(
+                "stratum.eval", "engine",
+                stratum=stratum.index, backend="bitmatrix",
+            ) as sp:
+                plan.execute(store, self)
+                sp.set(iterations=plan.iterations)
             self.stats.backend_used[stratum.preds[0]] = "bitmatrix"
             self.stats.iterations[stratum.index] = plan.iterations
             return
@@ -257,10 +269,16 @@ class Engine:
                 {p: v for p, v in self._resume_deltas.items() if p in deltas}
             )
             self._resume_deltas = None
-        self._seminaive_loop(
-            strat, stratum, store, handles, deltas, dsd_state, groups,
-            start_iteration=start_iteration,
-        )
+        with _TRACE.span(
+            "stratum.eval", "engine",
+            stratum=stratum.index, backend="tuple",
+            recursive=stratum.recursive,
+        ) as sp:
+            self._seminaive_loop(
+                strat, stratum, store, handles, deltas, dsd_state, groups,
+                start_iteration=start_iteration,
+            )
+            sp.set(iterations=self.stats.iterations.get(stratum.index, 0))
 
     def _seminaive_loop(
         self,
@@ -284,25 +302,42 @@ class Engine:
         iteration = start_iteration
         while True:
             any_delta = False
-            for pred in stratum.preds:
-                t0 = time.perf_counter()
-                variants = [
-                    v
-                    for v in groups[pred]
-                    if (v.delta_idx is None) == (iteration == 0)
-                ]
-                if not variants and iteration > 0:
-                    # pred only has base rules — no recursion on it
-                    self._note(stratum, iteration, pred, 0, 0, 0, store, t0)
-                    continue
-                rec = self._eval_idb_iteration(
-                    strat, stratum, store, handles, deltas, dsd_state,
-                    pred, variants, iteration,
-                )
-                rec.seconds = time.perf_counter() - t0
-                self.stats.records.append(rec)
-                if rec.delta > 0:
-                    any_delta = True
+            it_span = _TRACE.span(
+                "iteration", "engine", stratum=stratum.index, iteration=iteration
+            )
+            it_deltas: dict[str, int] = {}
+            with it_span:
+                for pred in stratum.preds:
+                    t0 = time.perf_counter()
+                    variants = [
+                        v
+                        for v in groups[pred]
+                        if (v.delta_idx is None) == (iteration == 0)
+                    ]
+                    if not variants and iteration > 0:
+                        # pred only has base rules — no recursion on it
+                        self._note(stratum, iteration, pred, 0, 0, 0, store, t0)
+                        continue
+                    with _TRACE.span(
+                        "rule", "engine",
+                        pred=pred, stratum=stratum.index,
+                        iteration=iteration, variants=len(variants),
+                    ) as rule_span:
+                        rec = self._eval_idb_iteration(
+                            strat, stratum, store, handles, deltas, dsd_state,
+                            pred, variants, iteration,
+                        )
+                        rule_span.set(
+                            candidates=rec.candidates, delta=rec.delta,
+                            full=rec.full, dsd=rec.dsd_strategy,
+                        )
+                    rec.seconds = time.perf_counter() - t0
+                    self.stats.records.append(rec)
+                    if _TRACE.enabled:
+                        it_deltas[pred] = rec.delta
+                    if rec.delta > 0:
+                        any_delta = True
+                it_span.set(deltas=it_deltas, any_delta=any_delta)
             iteration += 1
             self.stats.iterations[stratum.index] = iteration
 
@@ -516,6 +551,32 @@ class Engine:
         handles: dict[str, str],
         loop_groups: dict[str, list[RuleVariant]] | None = None,
     ) -> tuple[int, dict[str, "TupleView"], dict[str, "TupleView"]]:
+        with _TRACE.span(
+            "dred", "engine", stratum=stratum.index,
+            seeds_deleted=len(deleted), seeds_changed=len(changed),
+        ) as sp:
+            iters, net_deleted, net_added = self._dred_stratum_impl(
+                strat, stratum, store, store_old, deleted, changed,
+                handles, loop_groups,
+            )
+            sp.set(
+                iterations=iters,
+                net_deleted=sum(v.count for v in net_deleted.values()),
+                net_added=sum(v.count for v in net_added.values()),
+            )
+            return iters, net_deleted, net_added
+
+    def _dred_stratum_impl(
+        self,
+        strat: Stratification,
+        stratum: Stratum,
+        store: dict[str, Any],
+        store_old: dict[str, Any],
+        deleted: dict[str, "TupleView"],
+        changed: dict[str, "TupleView"],
+        handles: dict[str, str],
+        loop_groups: dict[str, list[RuleVariant]] | None = None,
+    ) -> tuple[int, dict[str, "TupleView"], dict[str, "TupleView"]]:
         """Delete-and-rederive for one tuple-backed stratum (DRed).
 
         ``deleted`` maps externally-shrunk relations (EDB or upstream IDBs) to
@@ -551,32 +612,41 @@ class Engine:
         rounds = 0
         while frontier:
             rounds += 1
-            groups_del = deletion_variants(stratum, set(frontier))
-            next_frontier: dict[str, TupleView] = {}
-            for pred in stratum.preds:
-                bufs = []
-                for var in groups_del[pred]:
-                    res = self._eval_variant(strat, stratum, store_old, frontier, var)
-                    if res is not None:
-                        bufs.append(res)
-                if not bufs:
-                    continue
-                cand = jnp.concatenate([b[0] for b in bufs], axis=0)
-                cand = _sort_pad(
-                    cand, next_bucket(cand.shape[0], cfg.capacity_min), self.domain
-                )
-                cand, _ = _dedup_sorted(cand, self.domain)
-                new_h, removed, r_count = store[pred].delete_rows(cand)
-                if r_count == 0:
-                    continue
-                store[pred] = new_h
-                dcap = next_bucket(r_count, cfg.capacity_min)
-                next_frontier[pred] = TupleView(removed[:dcap], r_count, self.domain)
-                acc = nabla.get(pred) or TupleRelation.empty(
-                    pred, strat.pred_arity(pred), self.domain, cfg.capacity_min
-                )
-                nabla[pred] = acc.merge(removed, r_count)
-            frontier = next_frontier
+            with _TRACE.span(
+                "overdelete", "engine", stratum=stratum.index, round=rounds,
+                frontier={p: v.count for p, v in frontier.items()}
+                if _TRACE.enabled else None,
+            ):
+                groups_del = deletion_variants(stratum, set(frontier))
+                next_frontier: dict[str, TupleView] = {}
+                for pred in stratum.preds:
+                    bufs = []
+                    for var in groups_del[pred]:
+                        res = self._eval_variant(
+                            strat, stratum, store_old, frontier, var
+                        )
+                        if res is not None:
+                            bufs.append(res)
+                    if not bufs:
+                        continue
+                    cand = jnp.concatenate([b[0] for b in bufs], axis=0)
+                    cand = _sort_pad(
+                        cand, next_bucket(cand.shape[0], cfg.capacity_min), self.domain
+                    )
+                    cand, _ = _dedup_sorted(cand, self.domain)
+                    new_h, removed, r_count = store[pred].delete_rows(cand)
+                    if r_count == 0:
+                        continue
+                    store[pred] = new_h
+                    dcap = next_bucket(r_count, cfg.capacity_min)
+                    next_frontier[pred] = TupleView(
+                        removed[:dcap], r_count, self.domain
+                    )
+                    acc = nabla.get(pred) or TupleRelation.empty(
+                        pred, strat.pred_arity(pred), self.domain, cfg.capacity_min
+                    )
+                    nabla[pred] = acc.merge(removed, r_count)
+                frontier = next_frontier
 
         # -- pass 2: ∇-guarded re-derivation + upstream-Δ ingest, then loop --
         deltas: dict[str, TupleView | None] = {p: None for p in stratum.preds}
@@ -588,10 +658,15 @@ class Engine:
         for pred in stratum.preds:
             if not seed_groups[pred]:
                 continue
-            rec = self._eval_idb_iteration(
-                strat, stratum, store, handles, deltas, dsd_state,
-                pred, seed_groups[pred], 0,
-            )
+            with _TRACE.span(
+                "rule", "engine", pred=pred, stratum=stratum.index,
+                phase="rederive", variants=len(seed_groups[pred]),
+            ) as rule_span:
+                rec = self._eval_idb_iteration(
+                    strat, stratum, store, handles, deltas, dsd_state,
+                    pred, seed_groups[pred], 0,
+                )
+                rule_span.set(candidates=rec.candidates, delta=rec.delta)
             self.stats.records.append(rec)
         if stratum.recursive:
             self._seminaive_loop(

@@ -45,6 +45,8 @@ from dataclasses import dataclass, field
 from types import MappingProxyType
 from typing import Any, Iterable, Mapping
 
+from repro.obs.trace import TRACER as _TRACE
+
 
 def handle_buffers(handle: Any) -> tuple:
     """The device arrays owned by one relation handle.
@@ -225,12 +227,20 @@ class VersionedStore:
         (``None`` = unknown, treated as conflicting with everything).
         Superseded unpinned epochs are reclaimed immediately.
         """
-        with self._lock:
-            self._latest += 1
-            self._epochs[self._latest] = _Epoch(dict(handles), domain, meta=meta)
-            self._writes_log.append((self._latest, writes))
-            self._reclaim_locked()
-            return self._latest
+        with _TRACE.span("epoch.publish", "store") as sp:
+            with self._lock:
+                self._latest += 1
+                self._epochs[self._latest] = _Epoch(
+                    dict(handles), domain, meta=meta
+                )
+                self._writes_log.append((self._latest, writes))
+                self._reclaim_locked()
+                sp.set(
+                    epoch=self._latest, domain=domain,
+                    relations=len(handles),
+                    writes=sorted(writes) if writes else None,
+                )
+                return self._latest
 
     def conflicts_since(
         self, base_epoch: int, names: Iterable[str]

@@ -1,0 +1,31 @@
+"""Observability: span tracing, metrics, shared latency statistics.
+
+Stdlib-only by design — ``core``, ``serve_datalog``, and ``persist`` all
+import this package, so it must never import back into them (or into JAX).
+"""
+
+from repro.obs.metrics import (
+    DEFAULT_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from repro.obs.stats import latency_summary, nearest_rank, percentile
+from repro.obs.trace import NOOP_SPAN, Span, Tracer, TRACER, get_tracer
+
+__all__ = [
+    "Counter",
+    "DEFAULT_BUCKETS",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NOOP_SPAN",
+    "Span",
+    "TRACER",
+    "Tracer",
+    "get_tracer",
+    "latency_summary",
+    "nearest_rank",
+    "percentile",
+]

@@ -28,6 +28,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.obs.trace import TRACER as _TRACE
 from repro.persist.codec import (
     list_snapshots,
     prune_snapshots,
@@ -67,6 +68,8 @@ class DurabilityStats:
 
 class DurabilityManager:
     """WAL + snapshot lifecycle for one served instance."""
+
+    checkpoint_histogram = None     # optional obs.metrics.Histogram sink
 
     def __init__(self, config: DurabilityConfig | str):
         if isinstance(config, str):
@@ -152,12 +155,14 @@ class DurabilityManager:
         the writer thread and with readers; concurrent checkpoint calls
         serialize on an internal lock.
         """
-        with self._ckpt_lock:
+        with self._ckpt_lock, _TRACE.span("checkpoint", "persist") as sp:
             t0 = time.perf_counter()
             snap = instance.pin()
             try:
                 if snap.epoch <= self.last_snapshot_epoch:
+                    sp.set(epoch=snap.epoch, skipped=True)
                     return None
+                sp.set(epoch=snap.epoch)
                 bm = {
                     idx: {
                         "arc": np.asarray(st["arc"]),
@@ -189,9 +194,12 @@ class DurabilityManager:
             retained = list_snapshots(self.config.root)
             floor = snapshot_dir_epoch(retained[0]) if retained else snap.epoch
             self.wal.truncate(up_to_epoch=floor)
+            dt = time.perf_counter() - t0
             self._stats.checkpoints += 1
             self._stats.last_checkpoint_epoch = snap.epoch
-            self._stats.last_checkpoint_seconds = time.perf_counter() - t0
+            self._stats.last_checkpoint_seconds = dt
+            if self.checkpoint_histogram is not None:
+                self.checkpoint_histogram.observe(dt)
             return path
 
     def ensure_baseline(self, instance) -> str | None:
@@ -257,6 +265,8 @@ class DurabilityManager:
             "wal_records": self.wal.appended_records,
             "wal_bytes": self.wal.size_bytes(),
             "wal_syncs": self.wal.syncs,
+            "wal_sync_seconds_total": self.wal.sync_seconds_total,
+            "wal_last_sync_seconds": self.wal.last_sync_seconds,
             "checkpoints": s.checkpoints,
             "checkpoint_failures": s.checkpoint_failures,
             "last_checkpoint_epoch": self.last_snapshot_epoch,

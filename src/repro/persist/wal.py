@@ -57,6 +57,7 @@ from __future__ import annotations
 import os
 import struct
 import threading
+import time
 import uuid
 import zlib
 from collections import Counter
@@ -64,6 +65,8 @@ from dataclasses import dataclass, field
 from typing import Iterator
 
 import numpy as np
+
+from repro.obs.trace import TRACER as _TRACE
 
 _MAGIC = 0x57414C31                       # "WAL1"
 _HEADER = struct.Struct("<IIqBBHI")       # magic crc epoch op arity rel_len nrows
@@ -183,6 +186,13 @@ def _resolve_txns(
 
 class DeltaWAL:
     """Append-only, CRC-framed, torn-tail-tolerant update log."""
+
+    # class-attribute defaults: ``truncate`` builds its tmp-file writer via
+    # ``__new__`` (bypassing ``__init__``), so observability state must not
+    # be required instance state (same pattern as ``_closed_size``)
+    fsync_histogram = None          # optional obs.metrics.Histogram sink
+    sync_seconds_total = 0.0
+    last_sync_seconds = 0.0
 
     def __init__(self, path: str, fsync: str = "batch"):
         if fsync not in ("batch", "always", "off"):
@@ -353,10 +363,18 @@ class DeltaWAL:
                 self._f.flush()
 
     def _sync_locked(self) -> None:
-        self._f.flush()
-        os.fsync(self._f.fileno())
+        t0 = time.perf_counter()
+        with _TRACE.span("wal.fsync", "persist") as sp:
+            self._f.flush()
+            os.fsync(self._f.fileno())
+            sp.set(records=self.appended_records - self.synced_records)
+        dt = time.perf_counter() - t0
         self.syncs += 1
         self.synced_records = self.appended_records
+        self.sync_seconds_total += dt
+        self.last_sync_seconds = dt
+        if self.fsync_histogram is not None:
+            self.fsync_histogram.observe(dt)
 
     # -- read side -----------------------------------------------------------
 

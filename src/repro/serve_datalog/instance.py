@@ -92,6 +92,7 @@ from repro.core.relation import (
 from repro.core.seminaive import ingest_variants
 from repro.core.setdiff import DSDState, set_difference
 from repro.core.versioned_store import Snapshot, VersionedStore
+from repro.obs.trace import TRACER as _TRACE
 from repro.relational.sort import SENTINEL
 from repro.serve_datalog.plan_cache import CompiledPlan, PlanCache, default_cache
 
@@ -705,9 +706,20 @@ class MaterializedInstance:
         if stats.requested == 0:
             stats.epoch = self.epoch
             return self._finish_update(stats, t0)
-        return self._transactional(
-            stats, lambda txn: self._apply_ops(txn, norm, stats, t0)
-        )
+        with _TRACE.span(
+            "txn.apply", "serve",
+            kind=stats.kind, relation=stats.relation,
+            requested=stats.requested, ops=len(norm),
+        ) as sp:
+            result = self._transactional(
+                stats, lambda txn: self._apply_ops(txn, norm, stats, t0)
+            )
+            sp.set(
+                epoch=stats.epoch, inserted=stats.inserted,
+                removed=stats.removed, derived=stats.derived,
+                retracted=stats.retracted, full_rebuild=stats.full_rebuild,
+            )
+            return result
 
     #: Set (by the server's writer loop) to suppress the shims' per-batch
     #: DeprecationWarning when delegation was already warned about at
@@ -843,19 +855,32 @@ class MaterializedInstance:
                 if mode == "skip":
                     continue
                 reads |= refs
-                if mode == "delta" and stratum.index in txn.bm and self._bm_applies(
-                    txn, stratum, changed
-                ):
-                    iters, derived = self._bitmatrix_delta(txn, stratum, changed)
-                    stats.modes[stratum.index] = "bitmatrix"
-                elif mode == "delta":
-                    iters, derived = self._delta_stratum(
-                        txn, stratum, changed, nonmono, kinds
+                with _TRACE.span(
+                    "stratum", "serve",
+                    index=stratum.index, resident=stratum.index in txn.bm,
+                    delta_in=sum(
+                        v.count for r, v in changed.items() if r in refs
+                    ) if _TRACE.enabled else 0,
+                ) as sp:
+                    if mode == "delta" and stratum.index in txn.bm and (
+                        self._bm_applies(txn, stratum, changed)
+                    ):
+                        iters, derived = self._bitmatrix_delta(txn, stratum, changed)
+                        stats.modes[stratum.index] = "bitmatrix"
+                    elif mode == "delta":
+                        iters, derived = self._delta_stratum(
+                            txn, stratum, changed, nonmono, kinds
+                        )
+                        stats.modes[stratum.index] = "delta"
+                    else:
+                        iters, derived = self._full_stratum(
+                            txn, stratum, changed, nonmono
+                        )
+                        stats.modes[stratum.index] = "full"
+                    sp.set(
+                        mode=stats.modes[stratum.index],
+                        iterations=iters, derived=derived,
                     )
-                    stats.modes[stratum.index] = "delta"
-                else:
-                    iters, derived = self._full_stratum(txn, stratum, changed, nonmono)
-                    stats.modes[stratum.index] = "full"
                 stats.iterations[stratum.index] = iters
                 stats.derived += derived
             return reads
@@ -867,35 +892,47 @@ class MaterializedInstance:
             if mode == "skip":
                 continue
             reads |= refs
-            if mode == "delta" and stratum.index in txn.bm and self._bm_applies(
-                txn, stratum, changed
-            ):
-                iters, derived = self._bitmatrix_delta(txn, stratum, changed)
-                stats.modes[stratum.index] = "bitmatrix"
-                stats.derived += derived
-            elif mode == "delta":
-                iters, derived = self._delta_stratum(
-                    txn, stratum, changed, nonmono, kinds
-                )
-                stats.modes[stratum.index] = "delta"
-                stats.derived += derived
-            elif mode == "dred":
-                iters, net_del, net_add = self.engine.dred_stratum(
-                    self.strat, stratum, txn.store, store_old,
-                    deleted, changed, kinds, self.plan.groups_for(stratum.index),
-                )
-                deleted.update(net_del)
-                changed.update(net_add)
-                stats.modes[stratum.index] = "dred"
-                stats.retracted += sum(v.count for v in net_del.values())
-                stats.derived += sum(v.count for v in net_add.values())
-            else:
-                iters, n_add, n_del = self._full_stratum_diff(
-                    txn, stratum, deleted, changed
-                )
-                stats.modes[stratum.index] = "full"
-                stats.derived += n_add
-                stats.retracted += n_del
+            with _TRACE.span(
+                "stratum", "serve",
+                index=stratum.index, resident=stratum.index in txn.bm,
+                delta_in=sum(
+                    v.count for r, v in changed.items() if r in refs
+                ) if _TRACE.enabled else 0,
+                nabla_in=sum(
+                    v.count for r, v in deleted.items() if r in refs
+                ) if _TRACE.enabled else 0,
+            ) as sp:
+                if mode == "delta" and stratum.index in txn.bm and (
+                    self._bm_applies(txn, stratum, changed)
+                ):
+                    iters, derived = self._bitmatrix_delta(txn, stratum, changed)
+                    stats.modes[stratum.index] = "bitmatrix"
+                    stats.derived += derived
+                elif mode == "delta":
+                    iters, derived = self._delta_stratum(
+                        txn, stratum, changed, nonmono, kinds
+                    )
+                    stats.modes[stratum.index] = "delta"
+                    stats.derived += derived
+                elif mode == "dred":
+                    iters, net_del, net_add = self.engine.dred_stratum(
+                        self.strat, stratum, txn.store, store_old,
+                        deleted, changed, kinds,
+                        self.plan.groups_for(stratum.index),
+                    )
+                    deleted.update(net_del)
+                    changed.update(net_add)
+                    stats.modes[stratum.index] = "dred"
+                    stats.retracted += sum(v.count for v in net_del.values())
+                    stats.derived += sum(v.count for v in net_add.values())
+                else:
+                    iters, n_add, n_del = self._full_stratum_diff(
+                        txn, stratum, deleted, changed
+                    )
+                    stats.modes[stratum.index] = "full"
+                    stats.derived += n_add
+                    stats.retracted += n_del
+                sp.set(mode=stats.modes[stratum.index], iterations=iters)
             stats.iterations[stratum.index] = iters
         return reads
 
@@ -1152,6 +1189,7 @@ class MaterializedInstance:
         the rebuild publishes.
         """
         stats.full_rebuild = True
+        _TRACE.instant("full_rebuild", "serve", relation=stats.relation)
         old_counts = {
             p: getattr(txn.store.get(p), "count", 0) for p in self.strat.idb
         }

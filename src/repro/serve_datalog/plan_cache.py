@@ -33,6 +33,7 @@ from repro.core.analyzer import Stratification, analyze
 from repro.core.ast import Program
 from repro.core.relation import _dedup_sorted, _merge_sorted, _sort_pad, next_bucket
 from repro.core.seminaive import RuleVariant, delta_variants
+from repro.obs.trace import TRACER as _TRACE
 from repro.relational.sort import SENTINEL
 
 
@@ -103,24 +104,27 @@ class PlanCache:
     # -- logical plans -----------------------------------------------------
 
     def get(self, program: Program | str) -> CompiledPlan:
-        if isinstance(program, str):
-            from repro.core.parser import parse
+        with _TRACE.span("plan_cache.get", "serve") as sp:
+            if isinstance(program, str):
+                from repro.core.parser import parse
 
-            program = parse(program)
-        fp = fingerprint(program)
-        if fp in self._plans:
-            self.hits += 1
-            self._plans.move_to_end(fp)
-            return self._plans[fp]
-        self.misses += 1
-        strat = analyze(program)
-        plan = CompiledPlan(
-            fp, program, strat, [delta_variants(s) for s in strat.strata]
-        )
-        self._plans[fp] = plan
-        while len(self._plans) > self.capacity:
-            self._plans.popitem(last=False)
-        return plan
+                program = parse(program)
+            fp = fingerprint(program)
+            if fp in self._plans:
+                self.hits += 1
+                self._plans.move_to_end(fp)
+                sp.set(fingerprint=fp, hit=True)
+                return self._plans[fp]
+            self.misses += 1
+            sp.set(fingerprint=fp, hit=False)
+            strat = analyze(program)
+            plan = CompiledPlan(
+                fp, program, strat, [delta_variants(s) for s in strat.strata]
+            )
+            self._plans[fp] = plan
+            while len(self._plans) > self.capacity:
+                self._plans.popitem(last=False)
+            return plan
 
     # -- physical plans ----------------------------------------------------
 
@@ -138,6 +142,17 @@ class PlanCache:
         still trace on first touch.  Returns the number of executables
         traced (0 on a fully warm cache).
         """
+        with _TRACE.span(
+            "plan_cache.warm", "serve",
+            fingerprint=plan.fingerprint, buckets=list(buckets),
+        ) as sp:
+            traced = self._warm_impl(plan, domain, buckets)
+            sp.set(traced=traced)
+            return traced
+
+    def _warm_impl(
+        self, plan: CompiledPlan, domain: int, buckets: tuple[int, ...]
+    ) -> int:
         arities = {plan.strat.pred_arity(p) for p in plan.strat.idb} | {
             plan.program.arity_of(p) for p in plan.strat.edb
         }

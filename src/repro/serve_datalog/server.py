@@ -54,7 +54,6 @@ somehow left published state behind.
 
 from __future__ import annotations
 
-import math
 import threading
 import time
 import warnings
@@ -63,6 +62,9 @@ from dataclasses import dataclass, field, replace
 
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.stats import latency_summary
+from repro.obs.trace import TRACER as _TRACE
 from repro.serve_datalog.instance import MaterializedInstance, UpdateStats
 
 
@@ -187,10 +189,28 @@ class ServerStats:
     queries — by whether the batch was served while a writer was in flight,
     which is how the serving benchmark separates idle-read latency from
     read-during-update latency.
+
+    Concurrency: the serving loop appends through :meth:`add` and every
+    read surface (``latency``, ``snapshot``, ``mvcc_stats``) copies the
+    deque under the same lock — iterating a deque another thread is
+    appending to raises ``RuntimeError`` mid-iteration, which is exactly
+    what reader threads polling stats during a run used to hit.
     """
 
     # bounded: long-lived servers must not accumulate per-request state
     records: deque = field(default_factory=lambda: deque(maxlen=65536))
+    _lock: threading.Lock = field(
+        default_factory=threading.Lock, repr=False, compare=False
+    )
+
+    def add(self, record: RequestRecord) -> None:
+        with self._lock:
+            self.records.append(record)
+
+    def snapshot(self) -> list[RequestRecord]:
+        """Copy-under-lock view — safe to iterate from any thread."""
+        with self._lock:
+            return list(self.records)
 
     def latency(
         self,
@@ -198,24 +218,12 @@ class ServerStats:
         include_queue: bool = True,
         concurrent: bool | None = None,
     ) -> dict:
-        lats = sorted(
+        return latency_summary(
             (r.queued_seconds if include_queue else 0.0) + r.service_seconds
-            for r in self.records
+            for r in self.snapshot()
             if (kind is None or r.kind == kind)
             and (concurrent is None or r.concurrent == concurrent)
         )
-        if not lats:
-            return {"count": 0}
-        # nearest-rank percentile: ceil(q·n)-1 is the smallest sample with at
-        # least q·n samples ≤ it (int(q·n) is biased high for small n — the
-        # p50 of 2 samples must be the lower one, not the max)
-        pick = lambda q: lats[max(math.ceil(q * len(lats)) - 1, 0)]
-        return {
-            "count": len(lats),
-            "p50_ms": pick(0.50) * 1e3,
-            "p95_ms": pick(0.95) * 1e3,
-            "max_ms": lats[-1] * 1e3,
-        }
 
 
 class DatalogServer:
@@ -244,12 +252,14 @@ class DatalogServer:
         self._next_id = 0
         # (thread, group, out, t0, base_epoch) of the one in-flight update
         self._writer: tuple | None = None
+        self._init_metrics()
         # -- durability (optional): WAL + background checkpointer -------------
         self.durability = None
         self._ckpt_thread: threading.Thread | None = None
         self._ckpt_stop = threading.Event()
         self._ckpt_wake = threading.Event()
         self.checkpoint_errors: list[str] = []
+        self._ckpt_err_lock = threading.Lock()
         if durability is not None:
             from repro.persist.manager import DurabilityManager
 
@@ -261,12 +271,129 @@ class DatalogServer:
             # a WAL with no base snapshot cannot rebuild the instance — the
             # initial fixpoint is snapshotted once at attach time
             self.durability.ensure_baseline(instance)
+            self._init_durability_metrics()
             self._ckpt_thread = threading.Thread(
                 target=self._checkpoint_loop,
                 name="datalog-checkpointer",
                 daemon=True,
             )
             self._ckpt_thread.start()
+
+    # -- metrics --------------------------------------------------------------
+
+    def _init_metrics(self) -> None:
+        """One registry unifying the server's scattered stat surfaces.
+
+        Counters/histograms are updated on the serving and writer threads;
+        gauges are callback-backed and read the live value at collection
+        time, so the hot path pays nothing for them.
+        """
+        reg = self.metrics_registry = MetricsRegistry()
+        self._m_requests = {
+            kind: reg.counter(
+                "datalog_requests_total", "Requests served, by kind",
+                labels={"kind": kind},
+            )
+            for kind in ("query", "txn", "insert", "delete")
+        }
+        self._m_errors = reg.counter(
+            "datalog_request_errors_total", "Requests that returned an error"
+        )
+        self._m_groups = reg.counter(
+            "datalog_update_groups_total", "Coalesced update groups applied"
+        )
+        self._m_coalesced = reg.counter(
+            "datalog_coalesced_requests_total",
+            "Requests that rode in update groups",
+        )
+        self._m_inserted = reg.counter(
+            "datalog_rows_inserted_total", "EDB rows inserted"
+        )
+        self._m_removed = reg.counter(
+            "datalog_rows_removed_total", "EDB rows removed"
+        )
+        self._m_derived = reg.counter(
+            "datalog_rows_derived_total", "IDB rows derived incrementally"
+        )
+        self._m_retracted = reg.counter(
+            "datalog_rows_retracted_total", "IDB rows retracted (DRed)"
+        )
+        self._m_rebuilds = reg.counter(
+            "datalog_full_rebuilds_total", "Domain-growth full rebuilds"
+        )
+        self._m_query_seconds = reg.histogram(
+            "datalog_query_seconds", "Per-query service time (seconds)"
+        )
+        self._m_update_seconds = reg.histogram(
+            "datalog_update_seconds", "Per-update-request service time (seconds)"
+        )
+        self._m_queue_wait = reg.histogram(
+            "datalog_queue_wait_seconds", "Time from submit to admission"
+        )
+        vstore = self.instance.vstore
+        cache = self.instance.cache
+        reg.gauge("datalog_queue_depth", "Requests waiting for admission",
+                  fn=lambda: len(self.queue))
+        reg.gauge("datalog_reader_pins", "Snapshots currently pinned",
+                  fn=vstore.active_pins)
+        reg.gauge("datalog_epoch", "Latest published epoch",
+                  fn=lambda: vstore.epoch)
+        reg.gauge("datalog_live_epochs", "Epochs retained (latest + pinned)",
+                  fn=lambda: vstore.stats()["live_epochs"])
+        reg.gauge("datalog_domain", "Active-domain size",
+                  fn=lambda: self.instance.domain)
+        reg.gauge(
+            "datalog_plan_cache_hit_rate", "Plan-cache hits / lookups",
+            fn=lambda: (
+                cache.hits / (cache.hits + cache.misses)
+                if cache.hits + cache.misses else 0.0
+            ),
+        )
+        reg.gauge("datalog_plan_cache_hits", "Plan-cache hits",
+                  fn=lambda: cache.hits)
+        reg.gauge("datalog_plan_cache_misses", "Plan-cache misses",
+                  fn=lambda: cache.misses)
+        reg.gauge("datalog_plan_cache_warmed_buckets",
+                  "Pre-traced (fingerprint, bucket, arity, domain) combos",
+                  fn=lambda: cache.stats()["warmed_buckets"])
+
+    def _init_durability_metrics(self) -> None:
+        reg = self.metrics_registry
+        wal = self.durability.wal
+        # the WAL / manager observe directly into these histogram sinks
+        wal.fsync_histogram = reg.histogram(
+            "datalog_wal_fsync_seconds", "WAL flush+fsync duration"
+        )
+        self.durability.checkpoint_histogram = reg.histogram(
+            "datalog_checkpoint_seconds", "Checkpoint duration",
+            buckets=(0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0,
+                     10.0, 30.0, 60.0),
+        )
+        reg.gauge("datalog_wal_records", "Records appended to the WAL",
+                  fn=lambda: wal.appended_records)
+        reg.gauge("datalog_wal_syncs", "WAL fsync calls",
+                  fn=lambda: wal.syncs)
+        reg.gauge("datalog_wal_bytes", "WAL file size",
+                  fn=wal.size_bytes)
+        reg.gauge("datalog_checkpoints_total", "Checkpoints taken",
+                  fn=lambda: self.durability._stats.checkpoints)
+        reg.gauge("datalog_checkpoint_failures_total", "Checkpoints failed",
+                  fn=lambda: self.durability._stats.checkpoint_failures)
+        reg.gauge("datalog_last_checkpoint_epoch", "Epoch of newest snapshot",
+                  fn=lambda: self.durability.last_snapshot_epoch)
+
+    def metrics(self) -> dict:
+        """JSON-serialisable snapshot of every server metric.
+
+        The unified replacement for :meth:`mvcc_stats` and
+        :meth:`durability_stats` — counters, callback gauges, and histogram
+        buckets in one dict keyed by Prometheus-style metric names.
+        """
+        return self.metrics_registry.snapshot()
+
+    def metrics_prometheus(self) -> str:
+        """Prometheus text exposition of :meth:`metrics` (scrape-ready)."""
+        return self.metrics_registry.to_prometheus()
 
     # -- submission ----------------------------------------------------------
 
@@ -276,6 +403,7 @@ class DatalogServer:
         self.queue.append(
             _Request(rid, "query", rel, {"where": where, "kw": kw}, time.perf_counter())
         )
+        _TRACE.instant("enqueue", "serve", rid=rid, kind="query", rel=rel)
         return rid
 
     def transaction(self) -> ServerTransaction:
@@ -305,6 +433,7 @@ class DatalogServer:
         self.queue.append(
             _Request(rid, "txn", rels, norm, time.perf_counter())
         )
+        _TRACE.instant("enqueue", "serve", rid=rid, kind="txn", rel=rels)
         return rid
 
     def submit_insert(self, rel: str, rows: np.ndarray) -> int:
@@ -356,6 +485,7 @@ class DatalogServer:
         rid = self._next_id
         self._next_id += 1
         self.queue.append(_Request(rid, kind, rel, rows, time.perf_counter()))
+        _TRACE.instant("enqueue", "serve", rid=rid, kind=kind, rel=rel)
         return rid
 
     # -- the serving loop ----------------------------------------------------
@@ -398,7 +528,13 @@ class DatalogServer:
                 # legacy mode: apply inline — a thread would be join()ed
                 # immediately anyway
                 t0 = time.perf_counter()
-                results = self._apply_update_group(group)
+                with _TRACE.span(
+                    "writer.apply", "serve",
+                    kind=group[0].kind, batch=len(group),
+                    base_epoch=self.instance.epoch,
+                ) as sp:
+                    results = self._apply_update_group(group)
+                    sp.set(epoch=self.instance.epoch)
                 self._record(
                     group, results, t0, time.perf_counter(),
                     self.instance.epoch, False,
@@ -451,18 +587,22 @@ class DatalogServer:
             writer is not None and writer[0].is_alive() and snap.epoch == writer[4]
         )
         try:
-            results = {
-                r.rid: self._apply(
-                    lambda r=r: self.instance.query(
-                        r.rel,
-                        where=r.payload["where"],
-                        snapshot=snap,
-                        **r.payload["kw"],
-                    ),
-                    r.rid,
-                )
-                for r in group
-            }
+            with _TRACE.span(
+                "serve.queries", "serve",
+                batch=len(group), epoch=snap.epoch, concurrent=concurrent,
+            ):
+                results = {
+                    r.rid: self._apply(
+                        lambda r=r: self.instance.query(
+                            r.rel,
+                            where=r.payload["where"],
+                            snapshot=snap,
+                            **r.payload["kw"],
+                        ),
+                        r.rid,
+                    )
+                    for r in group
+                }
         finally:
             snap.release()
         self._record(group, results, t0, time.perf_counter(), snap.epoch, concurrent)
@@ -472,16 +612,24 @@ class DatalogServer:
     def _start_writer(self, group: list[_Request]) -> None:
         t0 = time.perf_counter()
         out: dict = {}
+        base_epoch = self.instance.epoch
 
         def work() -> None:
-            try:
-                out["results"] = self._apply_update_group(group)
-            finally:
-                out["t1"] = time.perf_counter()
-                out["epoch"] = self.instance.epoch
+            # epoch lineage: base_epoch is what this group builds on;
+            # the published epoch lands on the span when the apply returns
+            with _TRACE.span(
+                "writer.apply", "serve",
+                kind=group[0].kind, batch=len(group), base_epoch=base_epoch,
+            ) as sp:
+                try:
+                    out["results"] = self._apply_update_group(group)
+                finally:
+                    out["t1"] = time.perf_counter()
+                    out["epoch"] = self.instance.epoch
+                    sp.set(epoch=out["epoch"])
 
         th = threading.Thread(target=work, name="datalog-writer", daemon=True)
-        self._writer = (th, group, out, t0, self.instance.epoch)
+        self._writer = (th, group, out, t0, base_epoch)
         th.start()
 
     def _reap_writer(self) -> None:
@@ -501,9 +649,35 @@ class DatalogServer:
         )
 
     def _apply_update_group(self, group: list[_Request]):
+        self._m_groups.inc()
+        self._m_coalesced.inc(len(group))
         if group[0].kind == "txn":
-            return self._apply_txn_group(group)
-        return self._apply_legacy_group(group)
+            results = self._apply_txn_group(group)
+        else:
+            results = self._apply_legacy_group(group)
+        self._observe_updates(results)
+        return results
+
+    def _observe_updates(self, results: dict) -> None:
+        """Row-level counters from the distinct batches in one result set.
+
+        A coalesced group replicates ONE batch's stats per rid (per-rid
+        copies of the same applied epoch), so batches are deduped by the
+        epoch they published — counting per rid would multiply the row
+        totals by the group size.  Per-request fallback applications each
+        publish their own epoch and count once.
+        """
+        seen: set[int] = set()
+        for res in results.values():
+            if not isinstance(res, UpdateStats) or res.epoch in seen:
+                continue
+            seen.add(res.epoch)
+            self._m_inserted.inc(res.inserted)
+            self._m_removed.inc(res.removed)
+            self._m_derived.inc(res.derived)
+            self._m_retracted.inc(res.retracted)
+            if res.full_rebuild:
+                self._m_rebuilds.inc()
 
     def _apply_txn_group(self, group: list[_Request]):
         """One group-commit of coalesced transactions.
@@ -674,17 +848,29 @@ class DatalogServer:
         concurrent: bool,
     ) -> None:
         per_req = (t1 - t0) / len(group)
+        is_update = group[0].kind in self._UPDATE_KINDS
+        service_hist = self._m_update_seconds if is_update else self._m_query_seconds
         for r in group:
             self.done[r.rid] = results[r.rid]
-            self.stats.records.append(
+            self.stats.add(
                 RequestRecord(
                     r.rid, r.kind, r.rel, len(group),
                     t0 - r.submitted, per_req, epoch, concurrent,
                 )
             )
+            counter = self._m_requests.get(r.kind)
+            if counter is None:     # future kinds get a labeled counter lazily
+                counter = self._m_requests[r.kind] = self.metrics_registry.counter(
+                    "datalog_requests_total", labels={"kind": r.kind}
+                )
+            counter.inc()
+            if isinstance(results[r.rid], RequestError):
+                self._m_errors.inc()
+            self._m_queue_wait.observe(t0 - r.submitted)
+            service_hist.observe(per_req)
         while len(self.done) > self.history:     # evict oldest results
             self.done.pop(next(iter(self.done)))
-        if self.durability is not None and group[0].kind in self._UPDATE_KINDS:
+        if self.durability is not None and is_update:
             self._ckpt_wake.set()       # nudge the checkpointer's policy check
 
     @staticmethod
@@ -704,6 +890,14 @@ class DatalogServer:
         valid transaction, i.e. no row inserted by one member and retracted
         by another — and the whole group commits as one epoch.
         """
+        with _TRACE.span(
+            "admission", "serve", queue_depth=len(self.queue)
+        ) as sp:
+            group = self._admit_impl()
+            sp.set(kind=group[0].kind, batch=len(group))
+            return group
+
+    def _admit_impl(self) -> list[_Request]:
         head = self.queue.popleft()
         group = [head]
         if head.kind == "txn":
@@ -731,10 +925,19 @@ class DatalogServer:
     def mvcc_stats(self) -> dict:
         """Epoch/pin/reclamation counters plus how many query *requests*
         were served while an update was in flight (per-request, matching
-        ``ServerStats.latency(concurrent=True)['count']``)."""
+        ``ServerStats.latency(concurrent=True)['count']``).
+
+        .. deprecated::
+            Prefer :meth:`metrics` — the unified registry carries the same
+            epoch/pin gauges (``datalog_epoch``, ``datalog_reader_pins``,
+            ``datalog_live_epochs``) plus everything else in one snapshot.
+            Kept (no warning) for dashboards scraping the historical shape.
+        """
         s = self.instance.vstore.stats()
+        # copy-under-lock: iterating the live deque from a reader thread
+        # while the serving loop appends raises RuntimeError mid-iteration
         s["concurrent_reads"] = sum(
-            1 for r in self.stats.records if r.kind == "query" and r.concurrent
+            1 for r in self.stats.snapshot() if r.kind == "query" and r.concurrent
         )
         return s
 
@@ -759,8 +962,9 @@ class DatalogServer:
                 if self.durability.should_checkpoint(self.instance.epoch):
                     self.durability.checkpoint(self.instance)
             except Exception as e:      # noqa: BLE001 — keep serving on failure
-                self.checkpoint_errors.append(f"{type(e).__name__}: {e}")
-                del self.checkpoint_errors[:-64]
+                with self._ckpt_err_lock:
+                    self.checkpoint_errors.append(f"{type(e).__name__}: {e}")
+                    del self.checkpoint_errors[:-64]
 
     def checkpoint_now(self) -> str | None:
         """Force a checkpoint of the latest published epoch (blocking)."""
@@ -769,11 +973,20 @@ class DatalogServer:
         return self.durability.checkpoint(self.instance)
 
     def durability_stats(self) -> dict:
-        """WAL/checkpoint counters (empty dict when durability is off)."""
+        """WAL/checkpoint counters (empty dict when durability is off).
+
+        .. deprecated::
+            Prefer :meth:`metrics` — the unified registry carries the WAL
+            and checkpoint surfaces (``datalog_wal_*``,
+            ``datalog_checkpoint*``) including fsync/checkpoint duration
+            histograms this dict never had.  Kept (no warning) for callers
+            scraping the historical shape.
+        """
         if self.durability is None:
             return {}
         s = self.durability.stats()
-        s["checkpoint_errors"] = len(self.checkpoint_errors)
+        with self._ckpt_err_lock:
+            s["checkpoint_errors"] = len(self.checkpoint_errors)
         return s
 
     def close(self) -> None:
