@@ -73,7 +73,10 @@ from repro.serve_datalog import (
     MaterializedInstance,
 )
 
-SECTIONS = ("insert", "delete", "query", "concurrent", "warm-start", "txn", "obs")
+SECTIONS = (
+    "insert", "delete", "query", "concurrent", "warm-start", "txn", "obs",
+    "analysis",
+)
 
 # Two EDB relations feeding ONE recursive stratum — the shape where a mixed
 # transaction's single Δ/∇ pass beats sequential per-relation submissions
@@ -496,6 +499,70 @@ def _bench_obs_overhead() -> None:
     emit("serve_obs_overhead_ratio", ratio, f"ratio={ratio:.4f}x gate=1.03")
 
 
+def _bench_analysis() -> None:
+    """Static-analysis admission cost and rewrite payoff.
+
+    Rows:
+
+        serve_analysis_admission_p50 — full analyzer (errors + lints +
+                                       rewrites + PBME explainer) on CSPA,
+                                       the largest paper program; this is
+                                       the per-admission cost, paid once
+                                       per plan-cache miss
+        serve_analysis_noisy_eval    — CSDA with injected duplicate + dead
+                                       rules, evaluated as written
+        serve_analysis_rewritten_eval— the analyzer's rewrite of the same
+                                       program (derived: speedup + exact
+                                       result equality — the rewrites'
+                                       bit-for-bit promise on a real
+                                       workload)
+    """
+    from repro.analysis import analyze_program
+
+    lats = []
+    for _ in range(20):
+        t0 = time.perf_counter()
+        report = analyze_program(WORKLOADS["cspa"].program)
+        lats.append(time.perf_counter() - t0)
+    assert report.ok
+    emit(
+        "serve_analysis_admission_p50", _p50(lats),
+        f"diags={len(report.diagnostics)} passes={len(report.pass_times)}",
+    )
+
+    noisy = WORKLOADS["csda"].program + """
+    null(a,b) :- nullEdge(a,b).
+    null(x,y) :- nullEdge(x,y), 0 == 1.
+    null(x,y) :- null(x,w), arc(w,y), 0 == 1.
+    """
+    edb = csda_facts(3000, seed=0)
+    report = analyze_program(noisy)
+    removed = len(report.program.rules) - len(report.rewritten.rules)
+    config = EngineConfig(backend="tuple")
+
+    eng = Engine(config)
+    eng.run(report.program, dict(edb))          # warm the jit caches
+    with timer() as t_noisy:
+        before = Engine(config).run(report.program, dict(edb))
+    emit("serve_analysis_noisy_eval", t_noisy.seconds,
+         f"rules={len(report.program.rules)}")
+
+    Engine(config).run(report.rewritten, dict(edb))
+    with timer() as t_rw:
+        after = Engine(config).run(report.rewritten, dict(edb))
+    match = all(
+        np.array_equal(
+            np.unique(before[p], axis=0), np.unique(after[p], axis=0)
+        )
+        for p in report.program.idb_preds
+    )
+    emit(
+        "serve_analysis_rewritten_eval", t_rw.seconds,
+        f"speedup={t_noisy.seconds / t_rw.seconds:.2f}x "
+        f"rules_removed={removed} match={match}",
+    )
+
+
 def _timed_query(inst: MaterializedInstance, rel: str, src: int) -> float:
     t0 = time.perf_counter()
     inst.query(rel, src=src)
@@ -579,6 +646,10 @@ def run(sections: list[str] | None = None) -> None:
         # observability: tracing-disabled overhead vs. instrumentation
         # bypassed (the CI-gated < 3% promise)
         _bench_obs_overhead()
+
+    if "analysis" in sel:
+        # static analysis: admission cost + rewrite payoff (bit-for-bit)
+        _bench_analysis()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,58 @@
+"""Static-analysis front-end for the Datalog engine.
+
+Three layers over the :mod:`repro.core` AST:
+
+1. **Diagnostics** (:mod:`repro.analysis.diagnostics`) — structured
+   findings with stable ``DL...`` codes, severities, and source spans.
+2. **Passes** (:mod:`repro.analysis.passes`) — safety/arity/
+   stratification errors (the single source of truth behind
+   ``Program.validate``) plus lint warnings and the PBME explainer.
+3. **Rewrites** (:mod:`repro.analysis.rewrites`) — semantics-preserving
+   program transformations (dead-rule elimination, dedup, constant
+   folding, join reordering), verified bit-for-bit against the
+   unoptimized fixpoint.
+
+``python -m repro.analysis file.dl`` runs the linter from the command
+line; the serving layer runs :func:`analyze_program` at admission (see
+``repro.serve_datalog.plan_cache``).
+"""
+
+from repro.analysis.diagnostics import (
+    CODES,
+    ERROR,
+    INFO,
+    WARNING,
+    AnalysisReport,
+    Diagnostic,
+)
+from repro.analysis.linter import (
+    DEFAULT_CONFIG,
+    AnalysisConfig,
+    analyze_program,
+    lint_program,
+)
+from repro.analysis.rewrites import (
+    DEFAULT_REWRITES,
+    NO_REWRITES,
+    RewriteConfig,
+    rewrite_program,
+    verify_rewrite,
+)
+
+__all__ = [
+    "AnalysisConfig",
+    "AnalysisReport",
+    "CODES",
+    "DEFAULT_CONFIG",
+    "DEFAULT_REWRITES",
+    "Diagnostic",
+    "ERROR",
+    "INFO",
+    "NO_REWRITES",
+    "RewriteConfig",
+    "WARNING",
+    "analyze_program",
+    "lint_program",
+    "rewrite_program",
+    "verify_rewrite",
+]

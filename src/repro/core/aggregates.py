@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.ast import Agg, Const, Rule, Var
+from repro.core.ast import Agg, Const, Rule
 from repro.core.joins import Bindings
 from repro.relational.sort import SENTINEL, lexsort_rows, unique_mask
 

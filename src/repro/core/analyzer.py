@@ -12,7 +12,7 @@ from dataclasses import dataclass, field
 
 import networkx as nx
 
-from repro.core.ast import Agg, Atom, Program, Rule
+from repro.core.ast import Agg, Program, Rule
 
 
 @dataclass
@@ -41,10 +41,15 @@ class Stratification:
         return self.program.arity_of(pred)
 
 
-def analyze(program: Program) -> Stratification:
-    program.validate()
-    idb = set(program.idb_preds)
+def dependency_graph(program: Program) -> nx.DiGraph:
+    """Predicate dependency graph: edge ``body_pred -> head_pred`` per IDB
+    body occurrence, with ``negated=True`` if *any* occurrence is negated.
 
+    Shared by :func:`analyze` and the ``repro.analysis`` lint passes so the
+    stratifier and the diagnostics front-end can never disagree on the
+    dependency structure.
+    """
+    idb = set(program.idb_preds)
     g = nx.DiGraph()
     for p in program.idb_preds:
         g.add_node(p)
@@ -58,6 +63,28 @@ def analyze(program: Program) -> Stratification:
                         atom.pred, rule.head_pred, {}
                     ).get("negated", False),
                 )
+    return g
+
+
+def negative_cycle_witness(g: nx.DiGraph, head_pred: str, neg_pred: str) -> str:
+    """Render the dependency cycle violating stratified negation.
+
+    ``head_pred`` negates ``neg_pred`` inside their shared SCC; the witness
+    is a dependency path ``head_pred -> ... -> neg_pred`` closed by the
+    negated edge back to ``head_pred`` (every node on a shortest path
+    between two members of an SCC lies inside that SCC).
+    """
+    try:
+        path = nx.shortest_path(g, head_pred, neg_pred)
+    except (nx.NetworkXNoPath, nx.NodeNotFound):
+        path = [head_pred, neg_pred]
+    return " -> ".join(path) + f" -[negated]-> {head_pred}"
+
+
+def analyze(program: Program) -> Stratification:
+    program.validate()
+
+    g = dependency_graph(program)
 
     sccs = list(nx.strongly_connected_components(g))
     cond = nx.condensation(g, scc=sccs)
@@ -78,9 +105,11 @@ def analyze(program: Program) -> Stratification:
         for r in rules:
             for a in r.atoms:
                 if a.negated and a.pred in pred_set:
+                    witness = negative_cycle_witness(g, r.head_pred, a.pred)
                     raise ValueError(
                         f"unstratifiable negation: {a.pred} negated within "
-                        f"its own stratum in rule {r}"
+                        f"its own stratum in rule {r} "
+                        f"(negative cycle: {witness})"
                     )
         nonlinear = any(
             sum(1 for a in r.positive_atoms if a.pred in pred_set) > 1

@@ -12,6 +12,22 @@ from dataclasses import dataclass, field
 
 
 @dataclass(frozen=True)
+class Span:
+    """Source location (1-based line/col) of a rule or body item.
+
+    Attached by the parser; never part of equality/hash/repr, so two
+    occurrences of the same rule at different locations still compare (and
+    fingerprint) identically.
+    """
+
+    line: int
+    col: int
+
+    def __repr__(self) -> str:
+        return f"{self.line}:{self.col}"
+
+
+@dataclass(frozen=True)
 class Var:
     name: str
 
@@ -74,6 +90,7 @@ class Atom:
     pred: str
     terms: tuple[Term, ...]
     negated: bool = False
+    span: Span | None = field(default=None, compare=False)
 
     @property
     def arity(self) -> int:
@@ -98,6 +115,7 @@ class Cmp:
     op: str
     lhs: Term
     rhs: Term
+    span: Span | None = field(default=None, compare=False)
 
     def __post_init__(self) -> None:
         if self.op not in CMP_OPS:
@@ -118,6 +136,7 @@ class Rule:
     head_pred: str
     head_terms: tuple[HeadTerm, ...]
     body: tuple[BodyItem, ...]
+    span: Span | None = field(default=None, compare=False)
 
     @property
     def atoms(self) -> tuple[Atom, ...]:
@@ -146,20 +165,17 @@ class Rule:
         return tuple(out)
 
     def check_safety(self) -> None:
-        """All head vars (and negated/comparison vars) bound by positive atoms."""
-        bound = {v for a in self.positive_atoms for v in a.vars()}
-        for v in self.head_vars():
-            if v not in bound:
-                raise ValueError(f"unsafe rule (head var {v} unbound): {self}")
-        for a in self.atoms:
-            if a.negated:
-                for v in a.vars():
-                    if v not in bound:
-                        raise ValueError(f"unsafe negation (var {v} unbound): {self}")
-        for c in self.comparisons:
-            for v in c.vars():
-                if v not in bound:
-                    raise ValueError(f"unsafe comparison (var {v} unbound): {self}")
+        """All head vars (and negated/comparison vars) bound by positive atoms.
+
+        Compat shim: the checks live in ``repro.analysis.passes`` as coded
+        diagnostics (DL002/DL003/DL004/DL008 with source spans); this method
+        preserves the historical raise-on-first-error contract by raising a
+        ``ValueError`` with the first error diagnostic's message.
+        """
+        from repro.analysis.passes import rule_safety_diagnostics
+
+        for diag in rule_safety_diagnostics(self):
+            raise ValueError(diag.message)
 
     def __repr__(self) -> str:
         head = f"{self.head_pred}({', '.join(map(repr, self.head_terms))})"
@@ -198,17 +214,18 @@ class Program:
         raise KeyError(pred)
 
     def validate(self) -> None:
+        """Raise ``ValueError`` on the first safety or arity violation.
+
+        Compat shim over the coded diagnostics in ``repro.analysis.passes``
+        (see :meth:`Rule.check_safety`); ``repro.analysis.lint_program``
+        collects *all* violations instead of stopping at the first.
+        """
         for r in self.rules:
             r.check_safety()
-        # consistent arities
-        arities: dict[str, int] = {}
-        for r in self.rules:
-            for a in r.atoms:
-                if arities.setdefault(a.pred, a.arity) != a.arity:
-                    raise ValueError(f"arity mismatch for {a.pred}")
-            ha = len(r.head_terms)
-            if arities.setdefault(r.head_pred, ha) != ha:
-                raise ValueError(f"arity mismatch for {r.head_pred}")
+        from repro.analysis.passes import arity_diagnostics
+
+        for diag in arity_diagnostics(self):
+            raise ValueError(diag.message)
 
     def __repr__(self) -> str:
         return "\n".join(map(repr, self.rules))

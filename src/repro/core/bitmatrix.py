@@ -20,7 +20,6 @@ unions, with no aggregation.  Everything else falls back to the tuple path.
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Any
 
@@ -29,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.analyzer import Stratum
-from repro.core.ast import Atom, Cmp, Const, Rule, Var
+from repro.core.ast import Var
 
 
 # --------------------------------------------------------------------------
@@ -407,32 +406,88 @@ def eligible_plan(
     scope, so no plan qualifies and the serving layer recomputes the stratum
     from scratch; growing support starts by returning a plan here.
     """
+    plan, _reason = explain_eligibility(stratum, domain, config, deleting=deleting)
+    return plan
+
+
+def explain_eligibility(
+    stratum: Stratum, domain: int | None, config, *, deleting: bool = False
+) -> tuple[BitmatrixPlan | None, str]:
+    """:func:`eligible_plan` plus the *reason* — the PBME-eligibility
+    explainer behind the ``DL201`` diagnostic (``repro.analysis``).
+
+    Returns ``(plan, reason)``; exactly one of them is meaningful (``plan``
+    is ``None`` iff the stratum is ineligible, and ``reason`` then states
+    the first gate it failed).  ``domain=None`` skips the runtime memory
+    gate (static analysis runs before any data is seen).
+    """
     if deleting:
-        return None
-    if config.backend not in ("auto", "bitmatrix") or stratum.has_recursive_agg:
-        return None
-    plan = match_bitmatrix_stratum(stratum, domain, config)
-    if plan is not None and (
-        config.backend == "bitmatrix" or domain <= config.max_bitmatrix_n
+        return None, (
+            "decremental closure is unsupported: edge deletions recompute "
+            "the stratum from scratch"
+        )
+    if config.backend not in ("auto", "bitmatrix"):
+        return None, f"backend={config.backend!r} disables the bit-matrix path"
+    if stratum.has_recursive_agg:
+        return None, "stratum contains a recursive aggregate"
+    plan, reason = explain_bitmatrix_stratum(stratum, domain, config)
+    if plan is None:
+        return None, reason
+    if (
+        config.backend != "bitmatrix"
+        and domain is not None
+        and domain > config.max_bitmatrix_n
     ):
-        return plan
-    return None
+        return None, (
+            f"active domain {domain} exceeds max_bitmatrix_n "
+            f"{config.max_bitmatrix_n} (n^2-bit matrix would not fit the "
+            "memory policy)"
+        )
+    return plan, reason
 
 
 def match_bitmatrix_stratum(stratum: Stratum, domain: int, config) -> BitmatrixPlan | None:
     """Recognize TC-shaped and SG-shaped strata (paper's PBME targets)."""
-    if not stratum.recursive or stratum.mutual or len(stratum.preds) != 1:
-        return None
+    plan, _reason = explain_bitmatrix_stratum(stratum, domain, config)
+    return plan
+
+
+def explain_bitmatrix_stratum(
+    stratum: Stratum, domain: int | None, config
+) -> tuple[BitmatrixPlan | None, str]:
+    """Shape matcher with a reason for every rejection (see
+    :func:`explain_eligibility`)."""
+    if not stratum.recursive:
+        return None, "stratum is not recursive"
+    if stratum.mutual or len(stratum.preds) != 1:
+        return None, (
+            f"mutual recursion over {stratum.preds} (PBME handles a single "
+            "self-recursive predicate)"
+        )
     idb = stratum.preds[0]
     rules = stratum.rules
-    if any(r.has_aggregate or any(a.negated for a in r.atoms) for r in rules):
-        return None
+    if any(r.has_aggregate for r in rules):
+        return None, "stratum contains an aggregate head"
+    if any(a.negated for r in rules for a in r.atoms):
+        return None, "stratum contains a negated body atom"
     if len(rules) != 2:
-        return None
+        return None, (
+            f"expected exactly 2 rules (one base, one recursive), found "
+            f"{len(rules)}"
+        )
     base = next((r for r in rules if all(a.pred != idb for a in r.atoms)), None)
     rec = next((r for r in rules if any(a.pred == idb for a in r.atoms)), None)
-    if base is None or rec is None:
-        return None
+    if base is None:
+        return None, "no non-recursive base rule"
+    if rec is None:
+        return None, "no recursive rule"
+    return _match_shapes(stratum, idb, base, rec, domain, config)
+
+
+def _match_shapes(
+    stratum: Stratum, idb: str, base, rec, domain: int | None, config
+) -> tuple[BitmatrixPlan | None, str]:
+    n = domain if domain is not None else 0
 
     # TC:  idb(x,y) :- e(x,y).   idb(x,y) :- idb(x,z), e(z,y).
     if (
@@ -456,8 +511,11 @@ def match_bitmatrix_stratum(stratum: Stratum, domain: int, config) -> BitmatrixP
             and a0.terms[1] == a1.terms[0]
             and a1.terms[1] == h[1]
         ):
-            return BitmatrixPlan(
-                "tc", idb, base.atoms[0].pred, domain, config.use_pallas_bitmm
+            return (
+                BitmatrixPlan(
+                    "tc", idb, base.atoms[0].pred, n, config.use_pallas_bitmm
+                ),
+                "TC-shaped stratum (packed boolean matrix closure)",
             )
 
     # SG:  idb(x,y) :- e(p,x), e(p,y), x != y.
@@ -489,6 +547,9 @@ def match_bitmatrix_stratum(stratum: Stratum, domain: int, config) -> BitmatrixP
             and r2.terms[1] == hr[1]
         )
         if sg_base_ok and sg_rec_ok:
-            return BitmatrixPlan("sg", idb, e, domain, config.use_pallas_bitmm)
+            return (
+                BitmatrixPlan("sg", idb, e, n, config.use_pallas_bitmm),
+                "SG-shaped stratum (packed boolean matrix closure)",
+            )
 
-    return None
+    return None, "rule shapes match neither the TC nor the SG pattern"

@@ -20,8 +20,6 @@ statistically by 2-D sharding (see DESIGN.md).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

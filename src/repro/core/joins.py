@@ -21,7 +21,6 @@ import jax.numpy as jnp
 
 from repro.core.ast import Atom, Cmp, Const, Rule, Var
 from repro.relational.sort import SENTINEL, compact_key, lexsort_rows
-from repro.core.relation import next_bucket
 
 
 @dataclass

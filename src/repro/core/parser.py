@@ -11,6 +11,11 @@ Grammar (per paper §3 and §6.2 benchmark programs)::
     expr     := addend ('+' addend)*
 
 Comments: ``// ...`` and ``% ...`` to end of line.
+
+Every rule, atom, and comparison carries a :class:`~repro.core.ast.Span`
+(1-based line/col of its first token) so downstream diagnostics
+(``repro.analysis``) can point at source.  Syntax errors raise
+:class:`DatalogSyntaxError` with ``lineno``/``offset`` set.
 """
 
 from __future__ import annotations
@@ -26,6 +31,7 @@ from repro.core.ast import (
     Expr,
     Program,
     Rule,
+    Span,
     Var,
 )
 
@@ -37,48 +43,121 @@ _TOKEN = re.compile(
     r")"
 )
 
+_NAME = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")
+_INT = re.compile(r"-?\d+")
 
-def _tokenize(text: str) -> list[str]:
-    tokens: list[str] = []
+
+class DatalogSyntaxError(SyntaxError):
+    """Syntax error with source location (``lineno``/``offset``, 1-based)."""
+
+    def __init__(self, message: str, line: int | None = None, col: int | None = None):
+        loc = f" at line {line}, col {col}" if line is not None else ""
+        super().__init__(message + loc)
+        self.lineno = line
+        self.offset = col
+
+    @property
+    def span(self) -> Span | None:
+        if self.lineno is None:
+            return None
+        return Span(self.lineno, self.offset or 1)
+
+
+class _Tok:
+    __slots__ = ("text", "line", "col")
+
+    def __init__(self, text: str, line: int, col: int):
+        self.text = text
+        self.line = line
+        self.col = col
+
+    @property
+    def span(self) -> Span:
+        return Span(self.line, self.col)
+
+
+def _tokenize(text: str) -> list[_Tok]:
+    line_starts = [0]
+    for i, c in enumerate(text):
+        if c == "\n":
+            line_starts.append(i + 1)
+
+    def loc(offset: int) -> tuple[int, int]:
+        lo, hi = 0, len(line_starts) - 1
+        while lo < hi:                      # rightmost line start <= offset
+            mid = (lo + hi + 1) // 2
+            if line_starts[mid] <= offset:
+                lo = mid
+            else:
+                hi = mid - 1
+        return lo + 1, offset - line_starts[lo] + 1
+
+    tokens: list[_Tok] = []
     pos = 0
     while pos < len(text):
         m = _TOKEN.match(text, pos)
-        if not m:
-            if text[pos:].strip() == "":
+        if not m or m.lastgroup is None:
+            rest = text[pos:]
+            if rest.strip() == "":
                 break
-            raise SyntaxError(f"bad token at: {text[pos:pos+30]!r}")
+            bad = pos + len(rest) - len(rest.lstrip())
+            line, col = loc(bad)
+            raise DatalogSyntaxError(
+                f"bad token at: {text[bad:bad + 30]!r}", line, col
+            )
         pos = m.end()
-        if m.lastgroup == "comment" or m.group().strip() == "":
+        if m.lastgroup == "comment":
             continue
-        tokens.append(m.group().strip())
+        start = m.start(m.lastgroup)
+        line, col = loc(start)
+        tokens.append(_Tok(m.group(m.lastgroup), line, col))
     return tokens
 
 
 class _Parser:
-    def __init__(self, tokens: list[str]):
+    def __init__(self, tokens: list[_Tok]):
         self.toks = tokens
         self.i = 0
 
     def peek(self) -> str | None:
-        return self.toks[self.i] if self.i < len(self.toks) else None
+        return self.toks[self.i].text if self.i < len(self.toks) else None
+
+    def peek_at(self, offset: int) -> str | None:
+        j = self.i + offset
+        return self.toks[j].text if j < len(self.toks) else None
+
+    def span(self) -> Span | None:
+        if self.i < len(self.toks):
+            return self.toks[self.i].span
+        if self.toks:
+            return self.toks[-1].span
+        return None
+
+    def _error(self, message: str) -> DatalogSyntaxError:
+        sp = self.span()
+        return DatalogSyntaxError(
+            message, sp.line if sp else None, sp.col if sp else None
+        )
 
     def pop(self, expect: str | None = None) -> str:
         if self.i >= len(self.toks):
-            raise SyntaxError("unexpected end of program")
-        t = self.toks[self.i]
+            raise self._error("unexpected end of program")
+        t = self.toks[self.i].text
         if expect is not None and t != expect:
-            raise SyntaxError(f"expected {expect!r}, got {t!r}")
+            raise self._error(f"expected {expect!r}, got {t!r}")
         self.i += 1
         return t
 
-    def parse_program(self) -> Program:
+    def parse_program(self, validate: bool = True) -> Program:
         prog = Program()
         while self.peek() is not None:
             prog.rules.append(self.parse_rule())
-        prog.validate()
+        if validate:
+            prog.validate()
         return prog
 
     def parse_rule(self) -> Rule:
+        span = self.span()
         head_pred, head_terms = self.parse_head()
         body: list = []
         if self.peek() == ":-":
@@ -88,7 +167,7 @@ class _Parser:
                 self.pop(",")
                 body.append(self.parse_body_item())
         self.pop(".")
-        return Rule(head_pred, tuple(head_terms), tuple(body))
+        return Rule(head_pred, tuple(head_terms), tuple(body), span=span)
 
     def parse_head(self):
         pred = self.pop()
@@ -105,8 +184,9 @@ class _Parser:
 
     def parse_head_term(self):
         t = self.peek()
-        assert t is not None
-        if t.upper() in AGG_OPS and self.toks[self.i + 1] == "(":
+        if t is None:
+            raise self._error("unexpected end of program")
+        if t.upper() in AGG_OPS and self.peek_at(1) == "(":
             self.pop()
             self.pop("(")
             expr = self.parse_expr()
@@ -131,25 +211,25 @@ class _Parser:
 
     def parse_term(self):
         t = self.pop()
-        if re.fullmatch(r"-?\d+", t):
+        if _INT.fullmatch(t):
             return Const(int(t))
-        if not re.fullmatch(r"[A-Za-z_][A-Za-z0-9_]*", t):
-            raise SyntaxError(f"expected term, got {t!r}")
+        if not _NAME.fullmatch(t):
+            raise self._error(f"expected term, got {t!r}")
         return Var(t)
 
     def parse_body_item(self):
+        span = self.span()
         negated = False
         if self.peek() in ("!", "¬"):
             # negation only if followed by a predicate atom
-            nxt = self.toks[self.i + 1 : self.i + 3]
-            if len(nxt) == 2 and nxt[1] == "(":
+            if self.peek_at(1) is not None and self.peek_at(2) == "(":
                 self.pop()
                 negated = True
         # lookahead: atom `p(...)` vs comparison `t op t`
         if (
-            re.fullmatch(r"[A-Za-z_][A-Za-z0-9_]*", self.toks[self.i])
-            and self.i + 1 < len(self.toks)
-            and self.toks[self.i + 1] == "("
+            self.peek() is not None
+            and _NAME.fullmatch(self.toks[self.i].text)
+            and self.peek_at(1) == "("
         ):
             pred = self.pop()
             self.pop("(")
@@ -158,15 +238,23 @@ class _Parser:
                 self.pop(",")
                 terms.append(self.parse_term())
             self.pop(")")
-            return Atom(pred, tuple(terms), negated=negated)
+            return Atom(pred, tuple(terms), negated=negated, span=span)
         lhs = self.parse_term()
         op = self.pop()
         if op == "=":
             op = "=="
         rhs = self.parse_term()
-        return Cmp(op, lhs, rhs)
+        if op not in ("==", "!=", "<", "<=", ">", ">="):
+            raise self._error(f"expected comparison operator, got {op!r}")
+        return Cmp(op, lhs, rhs, span=span)
 
 
-def parse(text: str) -> Program:
-    """Parse Datalog source text into a validated :class:`Program`."""
-    return _Parser(_tokenize(text)).parse_program()
+def parse(text: str, validate: bool = True) -> Program:
+    """Parse Datalog source text into a :class:`Program`.
+
+    ``validate=True`` (the default) raises ``ValueError`` on the first
+    safety/arity violation, preserving the historical contract.  The
+    ``repro.analysis`` front-end passes ``validate=False`` and collects
+    *every* violation as a coded diagnostic instead.
+    """
+    return _Parser(_tokenize(text)).parse_program(validate=validate)

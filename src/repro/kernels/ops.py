@@ -8,7 +8,6 @@ oracles the tests compare against.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -15,9 +15,8 @@ from __future__ import annotations
 
 import threading
 from bisect import bisect_left
-from typing import Callable, Iterable, Sequence
+from typing import Callable, Sequence
 
-from repro.obs.stats import nearest_rank
 
 #: Default histogram buckets (seconds) — Prometheus' classic latency ladder.
 DEFAULT_BUCKETS = (

@@ -1,0 +1,31 @@
+"""Serving-layer error types.
+
+Lives in its own module so ``plan_cache`` (admission) can raise
+:class:`RequestError` without importing ``server`` (which imports
+``instance``, which imports ``plan_cache`` — a cycle otherwise).
+``server`` re-exports it, so ``from repro.serve_datalog.server import
+RequestError`` keeps working.
+"""
+
+from __future__ import annotations
+
+
+class RequestError(Exception):
+    """Terminal per-request failure.
+
+    Delivered in ``done`` like a result for failures that surface at apply
+    time, and *raised* at submission time by ``tx.submit()``/``submit_txn``
+    for malformed transactions (which never reach the queue or the WAL —
+    those carry ``rid == -1``).
+
+    Admission failures (a program rejected by the static analyzer) carry
+    the full coded diagnostic list in ``diagnostics`` — each entry is a
+    ``repro.analysis.Diagnostic`` with a stable ``DL...`` code and source
+    span, so clients can render or match on them.
+    """
+
+    def __init__(self, rid: int, error: str, diagnostics: list | None = None):
+        super().__init__(error)
+        self.rid = rid
+        self.error = error
+        self.diagnostics: list = diagnostics or []

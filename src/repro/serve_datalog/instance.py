@@ -93,8 +93,13 @@ from repro.core.seminaive import ingest_variants
 from repro.core.setdiff import DSDState, set_difference
 from repro.core.versioned_store import Snapshot, VersionedStore
 from repro.obs.trace import TRACER as _TRACE
-from repro.relational.sort import SENTINEL
-from repro.serve_datalog.plan_cache import CompiledPlan, PlanCache, default_cache
+from repro.analysis import AnalysisConfig
+from repro.serve_datalog.plan_cache import (
+    ADMISSION_CONFIG,
+    CompiledPlan,
+    PlanCache,
+    default_cache,
+)
 
 
 @dataclass(frozen=True)
@@ -190,9 +195,10 @@ class MaterializedInstance:
         edb: dict[str, np.ndarray],
         config: EngineConfig | None = None,
         cache: PlanCache | None = None,
+        analysis: "AnalysisConfig | None" = ADMISSION_CONFIG,
     ):
         self.cache = cache or default_cache()
-        self.plan: CompiledPlan = self.cache.get(program)
+        self.plan: CompiledPlan = self.cache.get(program, analysis=analysis)
         self.engine = Engine(config)
         self.engine.run(self.plan.program, edb, strat=self.plan.strat,
                         return_numpy=False)
@@ -260,6 +266,7 @@ class MaterializedInstance:
         config: EngineConfig | None = None,
         cache: PlanCache | None = None,
         replay: bool = True,
+        analysis: "AnalysisConfig | None" = ADMISSION_CONFIG,
     ) -> "MaterializedInstance":
         """Warm-start from a durability root: snapshot load + WAL replay.
 
@@ -292,7 +299,7 @@ class MaterializedInstance:
 
         self = cls.__new__(cls)
         self.cache = cache or default_cache()
-        self.plan = self.cache.get(source)
+        self.plan = self.cache.get(source, analysis=analysis)
         if snap.fingerprint and self.plan.fingerprint != snap.fingerprint:
             raise SnapshotError(
                 f"{snap.path}: snapshot fingerprint {snap.fingerprint} does "

@@ -29,12 +29,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import AnalysisConfig, AnalysisReport, analyze_program
 from repro.core.analyzer import Stratification, analyze
 from repro.core.ast import Program
-from repro.core.relation import _dedup_sorted, _merge_sorted, _sort_pad, next_bucket
+from repro.core.relation import _dedup_sorted, _merge_sorted, _sort_pad
 from repro.core.seminaive import RuleVariant, delta_variants
 from repro.obs.trace import TRACER as _TRACE
 from repro.relational.sort import SENTINEL
+from repro.serve_datalog.errors import RequestError
+
+# Admission default: full error + lint passes, semantics-preserving
+# rewrites on, no PBME explainer (that re-runs stratification; ``lint``
+# requests get it instead).
+ADMISSION_CONFIG = AnalysisConfig(explain_pbme=False)
 
 
 def fingerprint(program: Program | str) -> str:
@@ -53,12 +60,21 @@ def fingerprint(program: Program | str) -> str:
 
 @dataclass
 class CompiledPlan:
-    """Logical plan: everything derivable from the program text alone."""
+    """Logical plan: everything derivable from the program text alone.
+
+    ``program`` (and ``fingerprint``) are the analyzer's *rewritten*
+    program — the one actually planned and evaluated.  Because every
+    rewrite is idempotent, re-admitting a rewritten program (e.g. a
+    snapshot manifest's ``program_source`` on warm start) maps to the
+    same fingerprint.  ``report`` carries the admission diagnostics
+    (``None`` when analysis was bypassed).
+    """
 
     fingerprint: str
     program: Program
     strat: Stratification
     delta_groups: list[dict[str, list[RuleVariant]]] = field(repr=False)
+    report: AnalysisReport | None = field(default=None, repr=False)
 
     def groups_for(self, stratum_index: int) -> dict[str, list[RuleVariant]]:
         return self.delta_groups[stratum_index]
@@ -103,25 +119,70 @@ class PlanCache:
 
     # -- logical plans -----------------------------------------------------
 
-    def get(self, program: Program | str) -> CompiledPlan:
+    def get(
+        self,
+        program: Program | str,
+        analysis: AnalysisConfig | None = ADMISSION_CONFIG,
+    ) -> CompiledPlan:
+        """Admit ``program``: analyze, rewrite, stratify, cache.
+
+        The static analyzer runs on every cache miss; a program with any
+        ``DL0xx`` error diagnostic is rejected with a :class:`RequestError`
+        carrying the full diagnostic list and is never cached.  What gets
+        planned (and fingerprinted) is the analyzer's rewritten program,
+        so the LRU key pairs the *source* fingerprint with the analysis
+        config's — two admissions under different rewrite configs never
+        share a slot.  ``analysis=None`` bypasses the analyzer (legacy
+        validate-only admission); plain ``ValueError`` from validation
+        still surfaces as a structured :class:`RequestError`.
+        """
         with _TRACE.span("plan_cache.get", "serve") as sp:
             if isinstance(program, str):
-                from repro.core.parser import parse
+                from repro.core.parser import DatalogSyntaxError, parse
 
-                program = parse(program)
-            fp = fingerprint(program)
-            if fp in self._plans:
+                try:
+                    program = parse(program, validate=False)
+                except DatalogSyntaxError as e:
+                    raise RequestError(
+                        -1, f"program rejected: {e.args[0]}"
+                    ) from e
+            source_fp = fingerprint(program)
+            key = f"{source_fp}:{analysis.fingerprint() if analysis else 'raw'}"
+            if key in self._plans:
                 self.hits += 1
-                self._plans.move_to_end(fp)
-                sp.set(fingerprint=fp, hit=True)
-                return self._plans[fp]
+                self._plans.move_to_end(key)
+                sp.set(fingerprint=self._plans[key].fingerprint, hit=True)
+                return self._plans[key]
             self.misses += 1
+            report: AnalysisReport | None = None
+            if analysis is not None:
+                report = analyze_program(program, analysis)
+                if not report.ok:
+                    first = report.errors[0]
+                    raise RequestError(
+                        -1,
+                        f"program rejected by static analysis "
+                        f"({len(report.errors)} error(s), first: "
+                        f"{first.render()})",
+                        diagnostics=report.diagnostics,
+                    )
+                program = report.rewritten
+            fp = fingerprint(program)
             sp.set(fingerprint=fp, hit=False)
-            strat = analyze(program)
+            try:
+                strat = analyze(program)
+            except ValueError as e:
+                # unreachable when the analyzer ran (it mirrors these
+                # checks), load-bearing for the bypass path
+                raise RequestError(-1, f"program rejected: {e}") from e
             plan = CompiledPlan(
-                fp, program, strat, [delta_variants(s) for s in strat.strata]
+                fp,
+                program,
+                strat,
+                [delta_variants(s) for s in strat.strata],
+                report=report,
             )
-            self._plans[fp] = plan
+            self._plans[key] = plan
             while len(self._plans) > self.capacity:
                 self._plans.popitem(last=False)
             return plan

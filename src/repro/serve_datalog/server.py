@@ -65,6 +65,7 @@ import numpy as np
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.stats import latency_summary
 from repro.obs.trace import TRACER as _TRACE
+from repro.serve_datalog.errors import RequestError
 from repro.serve_datalog.instance import MaterializedInstance, UpdateStats
 
 
@@ -77,19 +78,9 @@ class _Request:
     submitted: float
 
 
-class RequestError(Exception):
-    """Terminal per-request failure.
-
-    Delivered in ``done`` like a result for failures that surface at apply
-    time, and *raised* at submission time by ``tx.submit()``/``submit_txn``
-    for malformed transactions (which never reach the queue or the WAL —
-    those carry ``rid == -1``).
-    """
-
-    def __init__(self, rid: int, error: str):
-        super().__init__(error)
-        self.rid = rid
-        self.error = error
+# RequestError lives in errors.py (admission needs it without a module
+# cycle); re-exported here for compatibility.
+__all__ = ["DatalogServer", "RequestError", "ServerStats", "ServerTransaction"]
 
 
 class ServerTransaction:
@@ -356,6 +347,29 @@ class DatalogServer:
         reg.gauge("datalog_plan_cache_warmed_buckets",
                   "Pre-traced (fingerprint, bucket, arity, domain) combos",
                   fn=lambda: cache.stats()["warmed_buckets"])
+        # -- static analysis (admission diagnostics + lint traffic) ----------
+        self._m_lint_requests = reg.counter(
+            "datalog_lint_requests_total", "lint() calls served"
+        )
+        plan = self.instance.plan
+        for severity in ("error", "warning", "info"):
+            reg.gauge(
+                "datalog_admission_diagnostics",
+                "Diagnostics from this instance's admission analysis",
+                labels={"severity": severity},
+                fn=lambda s=severity: (
+                    len(plan.report.by_severity(s)) if plan.report else 0
+                ),
+            )
+        reg.gauge(
+            "datalog_admission_rewrites",
+            "Rewrites the analyzer applied at admission (DL3xx)",
+            fn=lambda: (
+                sum(1 for d in plan.report.diagnostics
+                    if d.code.startswith("DL3"))
+                if plan.report else 0
+            ),
+        )
 
     def _init_durability_metrics(self) -> None:
         reg = self.metrics_registry
@@ -394,6 +408,29 @@ class DatalogServer:
     def metrics_prometheus(self) -> str:
         """Prometheus text exposition of :meth:`metrics` (scrape-ready)."""
         return self.metrics_registry.to_prometheus()
+
+    # -- static analysis ------------------------------------------------------
+
+    def lint(self, source=None, *, outputs=None, config=None) -> list:
+        """Lint a program (default: this instance's admitted program).
+
+        Read-only and synchronous — never touches the queue, the WAL, or
+        the store.  Returns the full coded diagnostic list (errors,
+        warnings, infos — including the DL201 PBME-eligibility explainer);
+        a broken candidate program produces error diagnostics here rather
+        than raising, so clients can pre-flight programs before
+        re-admission.  ``outputs`` enables reachability linting (DL103).
+        """
+        from repro.analysis import DEFAULT_CONFIG, lint_program
+
+        self._m_lint_requests.inc()
+        with _TRACE.span("server.lint", "serve"):
+            target = source if source is not None else self.instance.plan.program
+            return lint_program(
+                target,
+                config if config is not None else DEFAULT_CONFIG,
+                outputs=outputs,
+            )
 
     # -- submission ----------------------------------------------------------
 

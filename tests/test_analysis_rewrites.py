@@ -1,0 +1,200 @@
+"""Rewrite soundness: every rewrite preserves the fixpoint bit-for-bit.
+
+The load-bearing property (ISSUE 7 acceptance): for randomly generated
+safe programs and random EDBs, the optimized (rewritten) program's
+fixpoint equals the unoptimized one's on every original IDB predicate —
+verified via hypothesis when available, a seeded sweep otherwise
+(pattern from ``test_transactions.py``; hypothesis is pinned in
+requirements-dev.txt but absent from the runtime container).
+
+Plus targeted units: each rewrite flags independently, the pipeline is
+idempotent (the property plan fingerprints rely on), PBME-shaped strata
+are never reordered, and the CSDA-family acceptance case (dead + dup
+rules injected into CSDA) eliminates them with identical results.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    NO_REWRITES,
+    RewriteConfig,
+    analyze_program,
+    rewrite_program,
+    verify_rewrite,
+)
+from repro.core.parser import parse
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# -- unit: independent flags -------------------------------------------------
+
+DUP_DEAD = """
+p(x) :- e(x).
+p(y) :- e(y).
+p(x) :- e(x), 1 == 2.
+q(x) :- e(x), x == 3.
+"""
+
+
+def _codes(diags):
+    return sorted({d.code for d in diags})
+
+
+def test_flags_independent():
+    prog = parse(DUP_DEAD)
+    only_dedup = RewriteConfig(fold_constants=False, dead_rules=False, reorder=False)
+    p, d = rewrite_program(prog, only_dedup)
+    assert _codes(d) == ["DL302"] and len(p.rules) == 3
+
+    only_dead = RewriteConfig(fold_constants=False, dedup=False, reorder=False)
+    p, d = rewrite_program(prog, only_dead)
+    assert _codes(d) == ["DL301"] and len(p.rules) == 3
+
+    only_fold = RewriteConfig(dedup=False, dead_rules=False, reorder=False)
+    p, d = rewrite_program(prog, only_fold)
+    assert _codes(d) == ["DL303"]
+    assert "e(3)" in repr(p.rules[-1])
+
+    p, d = rewrite_program(prog, NO_REWRITES)
+    assert d == [] and repr(p) == repr(prog)
+
+
+def test_reorder_puts_constant_atom_first():
+    prog = parse("q(x) :- e(x,y), f(y,3).")
+    p, d = rewrite_program(prog, RewriteConfig())
+    assert _codes(d) == ["DL304"]
+    assert p.rules[0].atoms[0].pred == "f"
+
+
+def test_reorder_skips_pbme_shaped_strata():
+    tc = parse("tc(x,y) :- e(x,y). tc(x,y) :- tc(x,z), e(z,y).")
+    p, d = rewrite_program(tc, RewriteConfig())
+    assert d == [] and repr(p) == repr(tc)
+
+
+def test_unsat_rule_kept_when_last_for_its_pred():
+    # eliminating the only rule for `p` would change the program's IDB
+    # relation set (queryability); the pass must keep it
+    prog = parse("p(x) :- e(x), 1 == 2.")
+    p, d = rewrite_program(prog, RewriteConfig())
+    assert len(p.rules) == 1 and not [x for x in d if x.code == "DL301"]
+
+
+def test_reachability_elimination_needs_outputs():
+    src = "p(x) :- e(x). q(x) :- f(x)."
+    p, d = rewrite_program(parse(src), RewriteConfig())
+    assert len(p.rules) == 2
+    p, d = rewrite_program(parse(src), RewriteConfig(outputs=("p",)))
+    assert [r.head_pred for r in p.rules] == ["p"]
+    assert _codes(d) == ["DL301"]
+
+
+def test_pipeline_idempotent():
+    for src in (
+        DUP_DEAD,
+        "q(x) :- e(x,y), f(y,3).",
+        "tc(x,y) :- e(x,y). tc(x,y) :- tc(x,z), e(z,y).",
+        "s(y) :- e(x,y), x == 2, f(y,z).",
+    ):
+        cfg = RewriteConfig()
+        once, _ = rewrite_program(parse(src), cfg)
+        twice, d = rewrite_program(once, cfg)
+        assert repr(twice) == repr(once), src
+        assert d == [], src
+
+
+# -- CSDA-family acceptance case --------------------------------------------
+
+CSDA_NOISY = """
+null(x,y) :- nullEdge(x,y).
+null(x,y) :- null(x,w), arc(w,y).
+null(a,b) :- nullEdge(a,b).
+null(x,y) :- nullEdge(x,y), 0 == 1.
+null(x,y) :- null(x,w), arc(w,y), nullEdge(x,y).
+"""
+
+
+def test_csda_dead_dup_subsumed_eliminated_bit_for_bit(rng):
+    report = analyze_program(CSDA_NOISY)
+    assert {d.code for d in report.warnings} >= {"DL104", "DL105", "DL106"}
+    assert len(report.rewritten.rules) == 3   # dup + dead gone (subsumed kept)
+    arc = rng.integers(0, 40, size=(120, 2)).astype(np.int32)
+    nul = rng.integers(0, 40, size=(15, 2)).astype(np.int32)
+    edb = {"arc": arc, "nullEdge": nul}
+    assert verify_rewrite(report.program, report.rewritten, edb) == []
+
+
+# -- the property: random safe programs, random EDBs -------------------------
+
+
+def _random_program(rnd: random.Random) -> str:
+    """A random safe positive program over EDB preds e/2 and f/2.
+
+    Layered so every referenced predicate is defined: p-rules read only
+    EDB; q-rules may also read p.  Bodies get optional constant-equality
+    selections and duplicate/dead/cross-product noise — exactly the shapes
+    the rewrites fire on.
+    """
+    vars_ = ["x", "y", "z", "w"]
+    rules = []
+
+    def atom(pred, bound):
+        a, b = rnd.choice(vars_), rnd.choice(vars_)
+        bound.update((a, b))
+        return f"{pred}({a},{b})"
+
+    for head, preds in (("p", ["e", "f"]), ("q", ["e", "f", "p"])):
+        for _ in range(rnd.randint(1, 3)):
+            bound: set = set()
+            body = [atom(rnd.choice(preds), bound) for _ in range(rnd.randint(1, 3))]
+            bvars = sorted(bound)
+            if rnd.random() < 0.5:
+                body.append(f"{rnd.choice(bvars)} == {rnd.randint(0, 5)}")
+            if rnd.random() < 0.3:
+                body.append(f"{rnd.choice(bvars)} != {rnd.choice(bvars)}")
+            h = (rnd.choice(bvars), rnd.choice(bvars))
+            rules.append(f"{head}({h[0]},{h[1]}) :- {', '.join(body)}.")
+    if rnd.random() < 0.5:
+        rules.append(rules[rnd.randrange(len(rules))])        # duplicate
+    if rnd.random() < 0.5:
+        r = rules[rnd.randrange(len(rules))]
+        rules.append(r[:-1] + ", 1 == 2.")                    # dead variant
+    return "\n".join(rules)
+
+
+def _check_rewrite_soundness(seed: int) -> None:
+    rnd = random.Random(seed)
+    src = _random_program(rnd)
+    report = analyze_program(src)
+    assert report.ok, (src, report.errors)
+    npr = np.random.default_rng(seed)
+    edb = {
+        "e": npr.integers(0, 6, size=(rnd.randint(1, 10), 2)).astype(np.int32),
+        "f": npr.integers(0, 6, size=(rnd.randint(1, 10), 2)).astype(np.int32),
+    }
+    problems = verify_rewrite(report.program, report.rewritten, edb)
+    assert problems == [], (src, problems)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=8)
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    def test_rewrite_soundness_property(seed):
+        _check_rewrite_soundness(seed)
+
+else:
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_rewrite_soundness_property(seed):
+        _check_rewrite_soundness(seed)
