@@ -7,6 +7,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   fig15  — program analyses (Andersen scaling, CSPA, CSDA)
   fig8   — device-count scale-up of sharded PBME (+ Table 4 CPU efficiency)
   serve  — incremental serving: update-batch latency vs. full recompute
+  scenarios — hostile-traffic scenario harness: seeded arrival traces vs.
+              admission control (p50/p99 sojourn + shed/exactness verdicts)
   roofline — three-term roofline per dry-run cell (needs results/dryrun.json)
 
 The growing ``serve`` section takes a sub-section filter, e.g.
@@ -14,6 +16,9 @@ The growing ``serve`` section takes a sub-section filter, e.g.
   python -m benchmarks.run serve --sections insert,warm-start
 
 picking from insert / delete / query / concurrent / warm-start / txn / obs.
+``scenarios`` reuses the same flag to pick scenarios, e.g.
+
+  python -m benchmarks.run scenarios --sections steady,burst
 
 ``--bench-json PATH`` appends one perf-trajectory record (git rev,
 ``--timestamp``, section -> headline seconds) to PATH after the run and
@@ -97,6 +102,11 @@ def main() -> None:
                 from benchmarks.bench_scaleup import run as r
             elif sec == "serve":
                 from benchmarks.bench_serve_datalog import run as r
+
+                if serve_sections is not None:
+                    r = functools.partial(r, sections=serve_sections)
+            elif sec == "scenarios":
+                from benchmarks.bench_scenarios import run as r
 
                 if serve_sections is not None:
                     r = functools.partial(r, sections=serve_sections)

@@ -62,6 +62,15 @@ arrived EDB facts is treated as an externally-seeded Δ, and the fixpoint is
    recorded with nearest-rank percentiles (split idle vs.
    concurrent-with-update).  ``submit_insert``/``submit_delete`` survive
    as deprecated single-op shims with the historical coalescing.
+   ``DatalogServer(limits=ServerLimits(...))`` opts into admission
+   control for hostile traffic: a bounded queue with an explicit
+   overload policy (``reject`` raises ``OverloadError``; ``block``
+   applies cooperative backpressure), graceful degradation that sheds
+   query load before update load, per-request deadlines enforced at
+   submission, at admission (before the WAL), and between strata in
+   flight (``DeadlineError``), plus seeded-jitter retries for transient
+   fallback failures.  ``repro.loadgen`` replays deterministic hostile
+   arrival traces against all of it.
 
 6. Durability (``repro.persist``) turns the server from a cache into a
    system of record: ``DatalogServer(durability=...)`` appends every
@@ -92,7 +101,10 @@ from repro.serve_datalog.instance import (
 from repro.serve_datalog.plan_cache import CompiledPlan, PlanCache, default_cache
 from repro.serve_datalog.server import (
     DatalogServer,
+    DeadlineError,
+    OverloadError,
     RequestError,
+    ServerLimits,
     ServerStats,
     ServerTransaction,
 )
@@ -107,7 +119,10 @@ __all__ = [
     "default_cache",
     "DatalogServer",
     "ServerTransaction",
+    "ServerLimits",
     "RequestError",
+    "OverloadError",
+    "DeadlineError",
     "ServerStats",
     "Snapshot",
     "VersionedStore",

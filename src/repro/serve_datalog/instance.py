@@ -681,7 +681,7 @@ class MaterializedInstance:
             finally:
                 base.release()
 
-    def apply_txn(self, ops) -> UpdateStats:
+    def apply_txn(self, ops, deadline_check=None) -> UpdateStats:
         """Apply one transaction atomically; publish exactly one epoch.
 
         ``ops`` is an iterable of ``(op, rel, rows)`` tuples (or
@@ -694,6 +694,11 @@ class MaterializedInstance:
         fixpoint publishes as one epoch; on failure nothing publishes and
         a retry starts from an untouched base.  Results are bit-for-bit
         identical to a from-scratch evaluation of the post-transaction EDB.
+
+        ``deadline_check`` (optional zero-arg callable) is invoked between
+        strata of the propagation pass; raising from it aborts the
+        transaction with nothing published — the serving layer uses this to
+        enforce per-request deadlines without instrumenting the kernels.
         """
         t0 = time.perf_counter()
         norm = self.normalize_txn_ops(ops)
@@ -719,7 +724,10 @@ class MaterializedInstance:
             requested=stats.requested, ops=len(norm),
         ) as sp:
             result = self._transactional(
-                stats, lambda txn: self._apply_ops(txn, norm, stats, t0)
+                stats,
+                lambda txn: self._apply_ops(
+                    txn, norm, stats, t0, deadline_check
+                ),
             )
             sp.set(
                 epoch=stats.epoch, inserted=stats.inserted,
@@ -776,7 +784,10 @@ class MaterializedInstance:
         norm: list[tuple[str, str, np.ndarray]],
         stats: UpdateStats,
         t0: float,
+        deadline_check=None,
     ) -> UpdateStats:
+        if deadline_check is not None:
+            deadline_check()        # before any storage effect is staged
         if any(
             op == "insert" and len(rows) and int(rows.max()) >= txn.domain
             for op, _, rows in norm
@@ -807,7 +818,11 @@ class MaterializedInstance:
             return self._finish_update(stats, t0)
         changed = {r: self._merge_views(p, txn.domain) for r, p in delta_parts.items()}
         deleted = {r: self._merge_views(p, txn.domain) for r, p in nabla_parts.items()}
-        reads = self._propagate(txn, store_old, changed, deleted, stats)
+        reads = self._propagate(
+            txn, store_old, changed, deleted, stats, deadline_check
+        )
+        if deadline_check is not None:
+            deadline_check()        # last gate: never publish past deadline
         stats.write_set = tuple(
             sorted(
                 {slot.rel for slot in stats.ops if slot.applied}
@@ -841,6 +856,7 @@ class MaterializedInstance:
         changed: dict[str, TupleView],
         deleted: dict[str, TupleView],
         stats: UpdateStats,
+        deadline_check=None,
     ) -> set[str]:
         """One pass over the stratification for a mixed Δ/∇ seed set.
 
@@ -858,6 +874,8 @@ class MaterializedInstance:
         nonmono: set[str] = set()
         if not deleted:
             for stratum in self.strat.strata:
+                if deadline_check is not None:
+                    deadline_check()    # stratum boundary: abort point
                 mode, kinds, refs = self._update_mode(txn, stratum, changed, nonmono)
                 if mode == "skip":
                     continue
@@ -893,6 +911,8 @@ class MaterializedInstance:
             return reads
 
         for stratum in self.strat.strata:
+            if deadline_check is not None:
+                deadline_check()        # stratum boundary: abort point
             mode, kinds, refs = self._retract_mode(
                 txn, stratum, deleted, changed, nonmono
             )

@@ -54,6 +54,7 @@ somehow left published state behind.
 
 from __future__ import annotations
 
+import random
 import threading
 import time
 import warnings
@@ -65,8 +66,9 @@ import numpy as np
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.stats import latency_summary
 from repro.obs.trace import TRACER as _TRACE
-from repro.serve_datalog.errors import RequestError
+from repro.serve_datalog.errors import DeadlineError, OverloadError, RequestError
 from repro.serve_datalog.instance import MaterializedInstance, UpdateStats
+from repro.serve_datalog.limits import ServerLimits
 
 
 @dataclass
@@ -76,11 +78,20 @@ class _Request:
     rel: str
     payload: dict | np.ndarray | list
     submitted: float
+    deadline: float | None = None    # absolute, on the server's clock
 
 
 # RequestError lives in errors.py (admission needs it without a module
 # cycle); re-exported here for compatibility.
-__all__ = ["DatalogServer", "RequestError", "ServerStats", "ServerTransaction"]
+__all__ = [
+    "DatalogServer",
+    "DeadlineError",
+    "OverloadError",
+    "RequestError",
+    "ServerLimits",
+    "ServerStats",
+    "ServerTransaction",
+]
 
 
 class ServerTransaction:
@@ -120,10 +131,14 @@ class ServerTransaction:
                 self._rid, "transaction already submitted; build a new one"
             )
 
-    def submit(self) -> int:
-        """Validate and enqueue the transaction; returns its request id."""
+    def submit(self, deadline: float | None = None) -> int:
+        """Validate and enqueue the transaction; returns its request id.
+
+        ``deadline`` is seconds-from-now on the server's clock (see
+        :meth:`DatalogServer.submit_txn`).
+        """
         self._check_open()
-        self._rid = self._server.submit_txn(self._ops)
+        self._rid = self._server.submit_txn(self._ops, deadline=deadline)
         return self._rid
 
 
@@ -232,15 +247,32 @@ class DatalogServer:
         history: int = 4096,
         snapshot_reads: bool = True,
         durability=None,
+        limits: ServerLimits | None = None,
+        clock=None,
     ):
         self.instance = instance
         self.max_batch = max_batch
         self.history = history       # completed results retained for pickup
         self.snapshot_reads = snapshot_reads
+        self.limits = limits
+        # the clock every timestamp/deadline decision reads: a callable
+        # returning seconds (default wall clock), or an object with .now()
+        # — a loadgen VirtualClock makes scenario replays deterministic
+        self._clock = (
+            time.perf_counter if clock is None
+            else clock if callable(clock) else clock.now
+        )
+        # sleeping (retry backoff) must advance the SAME notion of time: a
+        # virtual clock advances, the wall clock blocks the thread
+        self._sleep = getattr(clock, "sleep", time.sleep)
+        self._retry_rng = random.Random(limits.retry_seed if limits else 0)
         self.queue: deque[_Request] = deque()
         self.done: dict[int, np.ndarray | UpdateStats | RequestError] = {}
-        self.stats = ServerStats()
+        self.stats = ServerStats(
+            records=deque(maxlen=limits.stats_records_cap if limits else 65536)
+        )
         self._next_id = 0
+        self._queue_high_water = 0
         # (thread, group, out, t0, base_epoch) of the one in-flight update
         self._writer: tuple | None = None
         self._init_metrics()
@@ -320,6 +352,32 @@ class DatalogServer:
         )
         self._m_queue_wait = reg.histogram(
             "datalog_queue_wait_seconds", "Time from submit to admission"
+        )
+        # -- admission control (ServerLimits) ---------------------------------
+        self._m_shed = {
+            kind: reg.counter(
+                "datalog_requests_shed_total",
+                "Requests shed by admission control, by kind",
+                labels={"kind": kind},
+            )
+            for kind in ("query", "txn", "insert", "delete")
+        }
+        self._m_deadline = {
+            stage: reg.counter(
+                "datalog_deadline_misses_total",
+                "Requests failed past their deadline, by stage",
+                labels={"stage": stage},
+            )
+            for stage in ("submit", "admission", "inflight")
+        }
+        self._m_retries = reg.counter(
+            "datalog_update_retries_total",
+            "Per-request fallback retries after transient writer failures",
+        )
+        reg.gauge(
+            "datalog_queue_high_water",
+            "Deepest the request queue has ever been",
+            fn=lambda: self._queue_high_water,
         )
         vstore = self.instance.vstore
         cache = self.instance.cache
@@ -434,20 +492,93 @@ class DatalogServer:
 
     # -- submission ----------------------------------------------------------
 
-    def submit_query(self, rel: str, *, where: dict | None = None, **kw) -> int:
+    def now(self) -> float:
+        """Current time on the server's clock (deadlines are relative to it)."""
+        return self._clock()
+
+    def _enqueue(
+        self, kind: str, rel: str, payload, deadline: float | None
+    ) -> int:
+        """The one admission gate every submission goes through.
+
+        Resolves the request's absolute deadline (explicit ``deadline=``
+        seconds-from-now, else the limits' ``default_deadline``), applies
+        the overload policy when the queue is at its bound (``reject`` →
+        :class:`OverloadError`; ``block`` → cooperatively drain admission
+        groups until there is room), and — in graceful degradation —
+        sheds *query* load at the lower ``degrade_at`` watermark while
+        updates still fill the remaining headroom.  Without ``limits`` this
+        is exactly the historical unbounded enqueue.
+        """
+        submitted = self._clock()
+        abs_deadline: float | None = None
+        lim = self.limits
+        rel_deadline = (
+            deadline if deadline is not None
+            else (lim.default_deadline if lim else None)
+        )
+        if rel_deadline is not None:
+            abs_deadline = submitted + rel_deadline
         rid = self._next_id
         self._next_id += 1
+        if abs_deadline is not None and rel_deadline <= 0:
+            # already dead on arrival: fail at the submitter, queue nothing
+            self._m_deadline["submit"].inc()
+            _TRACE.instant("deadline.miss", "serve", rid=rid, stage="submit")
+            raise DeadlineError(
+                rid, f"deadline expired {-rel_deadline:.6f}s before submission",
+                stage="submit",
+            )
+        if lim is not None and lim.max_queue_depth is not None:
+            # queries shed at the degradation watermark; updates at the bound
+            bound = (
+                lim.degrade_depth if kind == "query" else lim.max_queue_depth
+            )
+            if len(self.queue) >= bound:
+                if lim.overload_policy == "reject":
+                    self._m_shed[kind].inc()
+                    _TRACE.instant(
+                        "shed", "serve", rid=rid, kind=kind,
+                        queue_depth=len(self.queue),
+                    )
+                    raise OverloadError(
+                        rid,
+                        f"queue at {len(self.queue)}/{bound} ({kind} bound); "
+                        "overload policy is reject",
+                    )
+                # backpressure: the submitter drains the server's own queue
+                # until there is room — a fast producer pays for the backlog
+                # it created instead of growing it
+                while len(self.queue) >= bound and self.step():
+                    pass
         self.queue.append(
-            _Request(rid, "query", rel, {"where": where, "kw": kw}, time.perf_counter())
+            _Request(rid, kind, rel, payload, submitted, abs_deadline)
         )
-        _TRACE.instant("enqueue", "serve", rid=rid, kind="query", rel=rel)
+        self._queue_high_water = max(self._queue_high_water, len(self.queue))
+        _TRACE.instant("enqueue", "serve", rid=rid, kind=kind, rel=rel)
         return rid
+
+    def submit_query(
+        self,
+        rel: str,
+        *,
+        where: dict | None = None,
+        deadline: float | None = None,
+        **kw,
+    ) -> int:
+        """Queue one point/range query.
+
+        ``deadline`` is seconds-from-now on the server's clock: a query
+        still queued past it is failed cheaply (a :class:`DeadlineError` in
+        ``done``) without touching the store.
+        """
+        return self._enqueue("query", rel, {"where": where, "kw": kw}, deadline)
 
     def transaction(self) -> ServerTransaction:
         """A builder for one atomic multi-relation write transaction."""
         return ServerTransaction(self)
 
-    def submit_txn(self, ops) -> int:
+    def submit_txn(self, ops, deadline: float | None = None) -> int:
         """Queue one transaction (iterable of ``(op, rel, rows)``/``TxnOp``).
 
         The whole transaction is validated here — empty transactions,
@@ -457,6 +588,12 @@ class DatalogServer:
         the WAL.  When applied, the transaction commits as exactly one
         epoch; its result in ``done`` is one ``UpdateStats`` with per-op
         slices.
+
+        ``deadline`` is seconds-from-now on the server's clock.  A
+        transaction still queued past it is failed *before* it is
+        WAL-logged (recovery can never replay it); a transaction whose
+        propagation pass crosses it between strata aborts and publishes
+        nothing.
         """
         try:
             norm = self.instance.normalize_txn_ops(ops)
@@ -464,14 +601,8 @@ class DatalogServer:
             # KeyError reprs its message in quotes — unwrap via args
             msg = e.args[0] if e.args else str(e)
             raise RequestError(-1, f"invalid transaction: {msg}") from e
-        rid = self._next_id
-        self._next_id += 1
         rels = "+".join(dict.fromkeys(rel for _, rel, _ in norm))
-        self.queue.append(
-            _Request(rid, "txn", rels, norm, time.perf_counter())
-        )
-        _TRACE.instant("enqueue", "serve", rid=rid, kind="txn", rel=rels)
-        return rid
+        return self._enqueue("txn", rels, norm, deadline)
 
     def submit_insert(self, rel: str, rows: np.ndarray) -> int:
         """Deprecated: queue one single-relation insert (use transactions).
@@ -519,11 +650,9 @@ class DatalogServer:
                 f"payload of shape {rows.shape} does not match "
                 f"{rel!r} arity {arity}"
             ) from e
-        rid = self._next_id
-        self._next_id += 1
-        self.queue.append(_Request(rid, kind, rel, rows, time.perf_counter()))
-        _TRACE.instant("enqueue", "serve", rid=rid, kind=kind, rel=rel)
-        return rid
+        # legacy requests ride the same admission gate (queue bound, default
+        # deadline at admission); in-flight deadline checks are txn-only
+        return self._enqueue(kind, rel, rows, None)
 
     # -- the serving loop ----------------------------------------------------
 
@@ -543,41 +672,155 @@ class DatalogServer:
         update has published (or failed) — subsequent reads see the final
         fixpoint.
         """
-        while self.queue or self._writer is not None:
-            if self.snapshot_reads:
-                qgroup = self._pop_query_run()
-                if qgroup:
-                    # MVCC read path: never wait on the in-flight writer
-                    self._serve_queries(qgroup)
-                    continue
-            if not self.queue:
-                self._reap_writer()
-                continue
-            # updates serialize behind the in-flight writer (and in legacy
-            # mode, queries do too)
-            self._reap_writer()
-            group = self._admit()
-            if group[0].kind not in self._UPDATE_KINDS:
-                self._serve_queries(group)
-            elif self.snapshot_reads:
-                self._start_writer(group)
-            else:
-                # legacy mode: apply inline — a thread would be join()ed
-                # immediately anyway
-                t0 = time.perf_counter()
-                with _TRACE.span(
-                    "writer.apply", "serve",
-                    kind=group[0].kind, batch=len(group),
-                    base_epoch=self.instance.epoch,
-                ) as sp:
-                    results = self._apply_update_group(group)
-                    sp.set(epoch=self.instance.epoch)
-                self._record(
-                    group, results, t0, time.perf_counter(),
-                    self.instance.epoch, False,
-                )
+        while self.step():
+            pass
         self._reap_writer()
         return self.done
+
+    def step(self) -> bool:
+        """Serve at most one admission group; True while work remains.
+
+        One iteration of :meth:`run`'s loop, exposed so a load generator
+        (``repro.loadgen``) can interleave arrivals with service — and so
+        the ``block`` overload policy can drain cooperatively from inside a
+        blocked submission.  Semantics are identical to :meth:`run`:
+        calling ``step()`` until it returns False is exactly one ``run()``.
+        """
+        if not self.queue and self._writer is None:
+            return False
+        if self.snapshot_reads:
+            qgroup = self._pop_query_run()
+            if qgroup:
+                # MVCC read path: never wait on the in-flight writer
+                self._serve_queries(qgroup)
+                return bool(self.queue or self._writer is not None)
+        if not self.queue:
+            self._reap_writer()
+            return bool(self.queue or self._writer is not None)
+        # updates serialize behind the in-flight writer (and in legacy
+        # mode, queries do too)
+        self._reap_writer()
+        group = self._admit()
+        if group[0].kind not in self._UPDATE_KINDS:
+            self._serve_queries(group)
+            return bool(self.queue or self._writer is not None)
+        # deadline check at admission: an expired update is failed cheaply
+        # HERE — before the writer, before the WAL — so recovery can never
+        # replay a request whose submitter was told it timed out
+        group = self._expire(group)
+        if not group:
+            return bool(self.queue or self._writer is not None)
+        if self.snapshot_reads:
+            self._start_writer(group)
+        else:
+            # legacy mode: apply inline — a thread would be join()ed
+            # immediately anyway
+            t0 = self._clock()
+            with _TRACE.span(
+                "writer.apply", "serve",
+                kind=group[0].kind, batch=len(group),
+                base_epoch=self.instance.epoch,
+            ) as sp:
+                results = self._apply_update_group(group)
+                sp.set(epoch=self.instance.epoch)
+            self._record(
+                group, results, t0, self._clock(),
+                self.instance.epoch, False,
+            )
+        return bool(self.queue or self._writer is not None)
+
+    # -- deadlines -----------------------------------------------------------
+
+    def _expire(self, group: list[_Request]) -> list[_Request]:
+        """Split expired members out of one admission group (recorded as
+        admission-stage :class:`DeadlineError`); returns the live rest."""
+        now = self._clock()
+        expired = [
+            r for r in group if r.deadline is not None and now > r.deadline
+        ]
+        if not expired:
+            return group
+        results = {}
+        for r in expired:
+            self._m_deadline["admission"].inc()
+            _TRACE.instant(
+                "deadline.miss", "serve", rid=r.rid, stage="admission",
+                kind=r.kind,
+            )
+            results[r.rid] = DeadlineError(
+                r.rid,
+                f"deadline expired {now - r.deadline:.6f}s before admission",
+                stage="admission",
+            )
+        self._record(expired, results, now, now, -1, False)
+        return [r for r in group if r.deadline is None or now <= r.deadline]
+
+    def _deadline_checker(self, deadline: float | None, rid: int = -1):
+        """A between-strata callback for ``MaterializedInstance.apply_txn``.
+
+        Raises inflight-stage :class:`DeadlineError` once the clock passes
+        ``deadline`` — the transaction aborts mid-propagation and publishes
+        nothing (MVCC rollback), so a deadline-failed update leaves no
+        trace beyond its WAL abort marker.
+        """
+        if deadline is None:
+            return None
+
+        def check() -> None:
+            now = self._clock()
+            if now > deadline:
+                self._m_deadline["inflight"].inc()
+                _TRACE.instant(
+                    "deadline.miss", "serve", rid=rid, stage="inflight"
+                )
+                raise DeadlineError(
+                    rid,
+                    f"deadline crossed {now - deadline:.6f}s into propagation",
+                    stage="inflight",
+                )
+
+        return check
+
+    @staticmethod
+    def _group_deadline(group: list[_Request]) -> float | None:
+        """The coalesced group's effective in-flight deadline (the soonest
+        member's; the fallback path re-checks each member's own)."""
+        deadlines = [r.deadline for r in group if r.deadline is not None]
+        return min(deadlines) if deadlines else None
+
+    # -- retry (transient writer failures) -------------------------------------
+
+    def _apply_with_retry(self, fn, rid: int, deadline: float | None):
+        """Per-request fallback application with jittered retries.
+
+        Transient failures (anything but a deadline miss) retry up to
+        ``limits.max_retries`` times inside the ``writer_timeout`` budget,
+        sleeping a seeded uniform jitter scaled by the attempt number —
+        the classic collision-avoidance backoff, deterministic under a
+        virtual clock.  Without limits this is exactly one attempt.
+        """
+        lim = self.limits
+        attempts = 1 + (lim.max_retries if lim is not None else 0)
+        t_start = self._clock()
+        result = self._apply(fn, rid)
+        for attempt in range(1, attempts):
+            if not isinstance(result, RequestError):
+                return result
+            if isinstance(result, DeadlineError):
+                return result          # retrying cannot un-miss a deadline
+            if (
+                lim.writer_timeout is not None
+                and self._clock() - t_start >= lim.writer_timeout
+            ):
+                break
+            if deadline is not None and self._clock() > deadline:
+                break
+            self._m_retries.inc()
+            _TRACE.instant("writer.retry", "serve", rid=rid, attempt=attempt)
+            if lim.retry_jitter:
+                self._sleep(lim.retry_jitter * self._retry_rng.random() * attempt)
+            result = self._apply(fn, rid)
+        return result
 
     def _pop_query_run(self) -> list[_Request] | None:
         """The next query run the MVCC loop may serve right now.
@@ -613,7 +856,10 @@ class DatalogServer:
     # -- query batches (reader path) ------------------------------------------
 
     def _serve_queries(self, group: list[_Request]) -> None:
-        t0 = time.perf_counter()
+        group = self._expire(group)
+        if not group:
+            return
+        t0 = self._clock()
         snap = self.instance.pin()
         # "concurrent" = an update is genuinely mid-flight AND this batch
         # pinned the writer's base epoch — a writer that already published
@@ -642,12 +888,12 @@ class DatalogServer:
                 }
         finally:
             snap.release()
-        self._record(group, results, t0, time.perf_counter(), snap.epoch, concurrent)
+        self._record(group, results, t0, self._clock(), snap.epoch, concurrent)
 
     # -- update batches (writer path) -----------------------------------------
 
     def _start_writer(self, group: list[_Request]) -> None:
-        t0 = time.perf_counter()
+        t0 = self._clock()
         out: dict = {}
         base_epoch = self.instance.epoch
 
@@ -661,7 +907,7 @@ class DatalogServer:
                 try:
                     out["results"] = self._apply_update_group(group)
                 finally:
-                    out["t1"] = time.perf_counter()
+                    out["t1"] = self._clock()
                     out["epoch"] = self.instance.epoch
                     sp.set(epoch=out["epoch"])
 
@@ -681,7 +927,7 @@ class DatalogServer:
             for r in group
         }
         self._record(
-            group, results, t0, out.get("t1", time.perf_counter()),
+            group, results, t0, out.get("t1", self._clock()),
             out.get("epoch", -1), False,
         )
 
@@ -738,8 +984,20 @@ class DatalogServer:
             token = self.durability.log_txn(
                 [(rel, op, rows) for op, rel, rows in all_ops], epoch0 + 1
             )
+        # the coalesced pass runs under the SOONEST member's deadline: if any
+        # member would miss, the whole group aborts (publishing nothing) and
+        # the fallback below re-tries each member under its own deadline
+        check = self._deadline_checker(
+            self._group_deadline(group), rid=group[0].rid
+        )
         try:
-            batch = self.instance.apply_txn(all_ops)
+            # the kwarg rides only when a deadline exists: instances (and
+            # test wrappers) predating ``deadline_check`` keep working, and
+            # the deadline-free path stays bit-for-bit the historical call
+            batch = (
+                self.instance.apply_txn(all_ops) if check is None
+                else self.instance.apply_txn(all_ops, deadline_check=check)
+            )
             results: dict = {}
             i = 0
             for r in group:
@@ -753,7 +1011,7 @@ class DatalogServer:
                 )
                 i += n
             return results
-        except Exception:
+        except Exception as exc:
             if self.durability is not None:
                 self.durability.abort_txn(token, epoch0 + 1)
             if self.instance.epoch != epoch0:
@@ -765,8 +1023,30 @@ class DatalogServer:
                     )
                     for r in group
                 }
+            if len(group) == 1 and isinstance(exc, DeadlineError):
+                # single member: the coalesced pass ran under exactly this
+                # request's deadline — its inflight miss IS the verdict
+                exc.rid = group[0].rid
+                return {group[0].rid: exc}
             results = {}
             for r in group:
+                # a member that expired while the coalesced attempt burned
+                # its deadline is failed HERE — before its fallback record
+                # reaches the WAL, so recovery can never replay it
+                now = self._clock()
+                if r.deadline is not None and now > r.deadline:
+                    self._m_deadline["admission"].inc()
+                    _TRACE.instant(
+                        "deadline.miss", "serve", rid=r.rid, stage="admission",
+                        kind=r.kind,
+                    )
+                    results[r.rid] = DeadlineError(
+                        r.rid,
+                        f"deadline expired {now - r.deadline:.6f}s "
+                        "before fallback application",
+                        stage="admission",
+                    )
+                    continue
                 predicted = self.instance.epoch + 1
                 tok: str | None = None
                 if self.durability is not None:
@@ -774,8 +1054,19 @@ class DatalogServer:
                         [(rel, op, rows) for op, rel, rows in r.payload],
                         predicted,
                     )
-                results[r.rid] = self._apply(
-                    lambda r=r: self.instance.apply_txn(r.payload), r.rid
+                results[r.rid] = self._apply_with_retry(
+                    lambda r=r: (
+                        self.instance.apply_txn(r.payload)
+                        if r.deadline is None
+                        else self.instance.apply_txn(
+                            r.payload,
+                            deadline_check=self._deadline_checker(
+                                r.deadline, rid=r.rid
+                            ),
+                        )
+                    ),
+                    r.rid,
+                    r.deadline,
                 )
                 if self.durability is not None and isinstance(
                     results[r.rid], RequestError
@@ -855,13 +1146,31 @@ class DatalogServer:
                 }
             results = {}
             for r in group:
+                now = self._clock()
+                if r.deadline is not None and now > r.deadline:
+                    # expired during the coalesced attempt: fail before the
+                    # fallback record reaches the WAL (same contract as txns)
+                    self._m_deadline["admission"].inc()
+                    _TRACE.instant(
+                        "deadline.miss", "serve", rid=r.rid, stage="admission",
+                        kind=r.kind,
+                    )
+                    results[r.rid] = DeadlineError(
+                        r.rid,
+                        f"deadline expired {now - r.deadline:.6f}s "
+                        "before fallback application",
+                        stage="admission",
+                    )
+                    continue
                 predicted = self.instance.epoch + 1
                 if self.durability is not None:
                     self.durability.log_group(
                         [(r.rel, r.kind, r.payload)], predicted
                     )
-                results[r.rid] = self._apply(
-                    lambda r=r: quiet(lambda: fn(r.rel, r.payload)), r.rid
+                results[r.rid] = self._apply_with_retry(
+                    lambda r=r: quiet(lambda: fn(r.rel, r.payload)),
+                    r.rid,
+                    r.deadline,
                 )
                 if self.durability is not None and isinstance(
                     results[r.rid], RequestError
@@ -914,6 +1223,12 @@ class DatalogServer:
     def _apply(fn, rid: int):
         try:
             return fn()
+        except RequestError as e:
+            # typed serving failures (DeadlineError from an in-flight check,
+            # admission diagnostics) keep their type — and their stage/
+            # diagnostics payload — instead of flattening to RequestError
+            e.rid = rid
+            return e
         except Exception as e:                     # noqa: BLE001 — serving loop
             return RequestError(rid, f"{type(e).__name__}: {e}")
 

@@ -1,0 +1,677 @@
+"""Hostile-traffic serving: admission control, deadlines, scenario harness.
+
+Laws under test (the serving layer's overload contract):
+
+* **No silent drops** — every accepted request resolves in ``done``; every
+  refused submission raises a *typed* error (:class:`OverloadError` /
+  :class:`DeadlineError`) carrying the rid it consumed.
+* **Exactness under adversity** — whatever the arrival pattern, the final
+  fixpoint is bit-for-bit a serial replay of exactly the transactions the
+  server acknowledged as applied (shedding may drop work, never corrupt it).
+* **Deadline staging** — ``submit`` misses raise before anything queues;
+  ``admission`` misses resolve through ``done`` *before the WAL sees the
+  txn* (recovery can never replay them); ``inflight`` misses abort
+  mid-propagation and publish nothing.
+* **Bounded footprint** — ``ServerStats.records``, the ``done`` map, and
+  (with limits) the queue stay bounded through a 100k-request soak.
+* **Opt-in only** — ``limits=None`` is bit-for-bit the historical server.
+
+Random interleavings are hypothesis-driven where available, with a
+seeded-random fallback mirroring ``tests/test_transactions.py``.
+"""
+
+import threading
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from conftest import random_edges
+from repro.core import Engine, EngineConfig
+from repro.loadgen import (
+    Arrival,
+    Scenario,
+    TcWorkload,
+    VirtualClock,
+    bursty_times,
+    hotkey_storm_arrivals,
+    mixed_arrivals,
+    poisson_times,
+    run_scenario,
+    wait_until,
+)
+from repro.persist.wal import DeltaWAL
+from repro.serve_datalog import (
+    DatalogServer,
+    DeadlineError,
+    DurabilityConfig,
+    MaterializedInstance,
+    OverloadError,
+    RequestError,
+    ServerLimits,
+    UpdateStats,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAS_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAS_HYPOTHESIS = False
+
+TC = """
+tc(x,y) :- arc(x,y).
+tc(x,y) :- tc(x,z), arc(z,y).
+"""
+TUPLE = EngineConfig(backend="tuple")
+
+
+def _as_set(rows):
+    return set(map(tuple, np.asarray(rows).tolist()))
+
+
+def _inst(rng, n=14, m=30):
+    edges = random_edges(rng, n, m)
+    return MaterializedInstance(TC, {"arc": edges}, TUPLE), edges
+
+
+def _row(a, b):
+    return np.array([[a, b]], np.int32)
+
+
+# --------------------------------------------------------------------------
+# ServerLimits: validation + admission policies
+# --------------------------------------------------------------------------
+
+
+def test_limits_validation():
+    with pytest.raises(ValueError, match="overload_policy"):
+        ServerLimits(overload_policy="drop")
+    with pytest.raises(ValueError, match="max_queue_depth"):
+        ServerLimits(max_queue_depth=0)
+    with pytest.raises(ValueError, match="degrade_at"):
+        ServerLimits(max_queue_depth=4, degrade_at=0.0)
+    with pytest.raises(ValueError, match="max_retries"):
+        ServerLimits(max_retries=-1)
+    with pytest.raises(ValueError, match="stats_records_cap"):
+        ServerLimits(stats_records_cap=0)
+    assert ServerLimits(max_queue_depth=10, degrade_at=0.5).degrade_depth == 5
+    assert ServerLimits().degrade_depth is None
+
+
+def test_reject_policy_sheds_with_rid_and_counts(rng):
+    inst, edges = _inst(rng)
+    srv = DatalogServer(
+        inst, limits=ServerLimits(max_queue_depth=2), clock=VirtualClock()
+    )
+    r0 = srv.submit_txn([("insert", "arc", _row(0, 5))])
+    r1 = srv.submit_query("tc", src=0)
+    with pytest.raises(OverloadError) as ei:
+        srv.submit_query("tc", src=1)
+    # the shed consumed a rid — a resubmission is distinguishable
+    assert ei.value.rid == r1 + 1
+    with pytest.raises(OverloadError):
+        srv.submit_txn([("insert", "arc", _row(1, 6))])
+    done = srv.run()
+    assert set(done) == {r0, r1}
+    assert not isinstance(done[r0], RequestError)
+    prom = srv.metrics_registry.to_prometheus()
+    assert 'datalog_requests_shed_total{kind="query"} 1' in prom
+    assert 'datalog_requests_shed_total{kind="txn"} 1' in prom
+    # after the drain there is room again
+    r2 = srv.submit_query("tc", src=0)
+    assert not isinstance(srv.run()[r2], RequestError)
+
+
+def test_graceful_degradation_sheds_queries_before_updates(rng):
+    inst, _ = _inst(rng)
+    srv = DatalogServer(
+        inst,
+        limits=ServerLimits(max_queue_depth=4, degrade_at=0.5),
+        clock=VirtualClock(),
+    )
+    srv.submit_txn([("insert", "arc", _row(0, 5))])
+    srv.submit_txn([("insert", "arc", _row(1, 6))])
+    # queue at degrade_depth (2): queries shed, updates still admitted
+    with pytest.raises(OverloadError, match="query bound"):
+        srv.submit_query("tc", src=0)
+    r = srv.submit_txn([("insert", "arc", _row(2, 7))])
+    srv.submit_txn([("insert", "arc", _row(3, 8))])
+    with pytest.raises(OverloadError):      # full bound: updates shed too
+        srv.submit_txn([("insert", "arc", _row(4, 9))])
+    done = srv.run()
+    assert isinstance(done[r], UpdateStats)
+
+
+def test_block_policy_applies_backpressure_not_errors(rng):
+    inst, edges = _inst(rng)
+    srv = DatalogServer(
+        inst,
+        limits=ServerLimits(max_queue_depth=1, overload_policy="block"),
+        clock=VirtualClock(),
+    )
+    rids = [
+        srv.submit_txn([("insert", "arc", _row(i, i + 5))]) for i in range(4)
+    ]
+    done = srv.run()
+    assert all(isinstance(done[r], UpdateStats) for r in rids)
+    # cooperative draining kept the queue at its bound throughout
+    assert srv._queue_high_water <= 1
+    oracle = Engine(EngineConfig(backend="tuple")).run(
+        TC, {"arc": np.concatenate([edges] + [_row(i, i + 5) for i in range(4)])}
+    )
+    assert _as_set(inst.relation("tc")) == _as_set(oracle["tc"])
+
+
+def test_limits_disabled_is_historical_behavior(rng):
+    """limits=None: unbounded queue, no deadlines, same results/epochs."""
+    rng2 = np.random.default_rng(7)
+    edges = random_edges(rng2, 14, 30)
+    insts = [
+        MaterializedInstance(TC, {"arc": edges[:-4]}, TUPLE) for _ in range(2)
+    ]
+    outs = []
+    for inst, limits in zip(insts, (None, ServerLimits())):
+        srv = DatalogServer(inst, limits=limits)
+        for i in range(4):
+            srv.submit_txn([("insert", "arc", edges[-4 + i : -3 + i or None])])
+        q = srv.submit_query("tc")
+        done = srv.run()
+        outs.append((inst.epoch, _as_set(done[q])))
+    assert outs[0] == outs[1]
+
+
+# --------------------------------------------------------------------------
+# deadlines: submit / admission / inflight stages
+# --------------------------------------------------------------------------
+
+
+def test_deadline_submit_stage_raises_immediately(rng):
+    inst, _ = _inst(rng)
+    srv = DatalogServer(inst, clock=VirtualClock())
+    with pytest.raises(DeadlineError) as ei:
+        srv.submit_query("tc", src=0, deadline=-0.1)
+    assert ei.value.stage == "submit"
+    assert ei.value.rid >= 0
+    assert not srv.queue                    # nothing reached the queue
+
+
+def test_deadline_admission_stage_delivered_not_evaluated(rng):
+    inst, _ = _inst(rng)
+    clk = VirtualClock()
+    srv = DatalogServer(inst, clock=clk)
+    e0 = inst.epoch
+    rid = srv.submit_txn([("insert", "arc", _row(0, 9))], deadline=0.5)
+    q = srv.submit_query("tc", src=0, deadline=0.5)
+    clk.advance(1.0)                        # both expire while queued
+    done = srv.run()
+    for r in (rid, q):
+        assert isinstance(done[r], DeadlineError)
+        assert done[r].stage == "admission"
+        assert done[r].rid == r
+    assert inst.epoch == e0                 # the txn was never evaluated
+
+
+def test_default_deadline_applies_when_request_has_none(rng):
+    inst, _ = _inst(rng)
+    clk = VirtualClock()
+    srv = DatalogServer(
+        inst, limits=ServerLimits(default_deadline=0.25), clock=clk
+    )
+    rid = srv.submit_query("tc", src=0)
+    clk.advance(0.5)
+    done = srv.run()
+    assert isinstance(done[rid], DeadlineError)
+
+
+def _fresh_edge(edges, n=14):
+    """An in-domain row not yet in ``edges`` (no no-op, no domain growth)."""
+    have = _as_set(edges)
+    return next(
+        _row(a, b) for a in range(n) for b in range(n)
+        if a != b and (a, b) not in have
+    )
+
+
+def test_deadline_inflight_aborts_mid_propagation(rng, monkeypatch):
+    """The clock crosses the deadline during propagation: the txn aborts via
+    MVCC rollback — nothing publishes, the pre-txn fixpoint survives."""
+    inst, edges = _inst(rng)
+    clk = VirtualClock()
+    srv = DatalogServer(inst, clock=clk)
+    pre_tc = _as_set(inst.relation("tc"))
+    e0 = inst.epoch
+
+    orig = inst._delta_stratum
+
+    def slow(*a, **k):
+        clk.advance(10.0)                   # propagation burns the budget
+        return orig(*a, **k)
+
+    monkeypatch.setattr(inst, "_delta_stratum", slow)
+    rid = srv.submit_txn([("insert", "arc", _fresh_edge(edges))], deadline=1.0)
+    done = srv.run()
+    assert isinstance(done[rid], DeadlineError)
+    assert done[rid].stage == "inflight"
+    assert inst.epoch == e0
+    assert _as_set(inst.relation("tc")) == pre_tc
+    prom = srv.metrics_registry.to_prometheus()
+    assert 'datalog_deadline_misses_total{stage="inflight"}' in prom
+
+
+def test_retry_with_jitter_recovers_transient_failures(rng, monkeypatch):
+    """Coalesced-group fallback retries transient failures with seeded
+    jitter on the server's clock; the request ultimately lands."""
+    inst, edges = _inst(rng)
+    clk = VirtualClock()
+    srv = DatalogServer(
+        inst,
+        limits=ServerLimits(max_retries=3, retry_jitter=0.01, retry_seed=42),
+        clock=clk,
+    )
+    fails = {"n": 2}
+    orig = inst.apply_txn
+
+    def flaky(ops, **kw):
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise RuntimeError("transient")
+        return orig(ops, **kw)
+
+    monkeypatch.setattr(inst, "apply_txn", flaky)
+    rid = srv.submit_txn([("insert", "arc", _row(0, 9))])
+    done = srv.run()
+    # attempt 1 = coalesced group, attempt 2 = first fallback try (fails),
+    # attempt 3 = retry (succeeds)
+    assert isinstance(done[rid], UpdateStats)
+    prom = srv.metrics_registry.to_prometheus()
+    assert "datalog_update_retries_total 1" in prom
+    assert clk() > 0.0                      # jitter advanced the clock
+
+
+def test_retry_never_retries_deadline_misses(rng, monkeypatch):
+    inst, _ = _inst(rng)
+    clk = VirtualClock()
+    srv = DatalogServer(
+        inst,
+        limits=ServerLimits(max_retries=5, retry_jitter=0.01),
+        clock=clk,
+    )
+    calls = {"n": 0}
+
+    def slow_and_flaky(ops, **kw):
+        # every attempt burns 10s, then fails transiently — the deadline
+        # (15s) survives the coalesced attempt but dies during the fallback
+        calls["n"] += 1
+        clk.advance(10.0)
+        check = kw.get("deadline_check")
+        if check is not None:
+            check()
+        raise RuntimeError("transient")
+
+    monkeypatch.setattr(inst, "apply_txn", slow_and_flaky)
+    rid = srv.submit_txn([("insert", "arc", _row(0, 9))], deadline=15.0)
+    done = srv.run()
+    assert isinstance(done[rid], DeadlineError)
+    assert done[rid].stage == "inflight"
+    # coalesced attempt (transient) + one fallback attempt that crosses the
+    # deadline — despite max_retries=5, a deadline miss is never retried
+    assert calls["n"] == 2
+
+
+# --------------------------------------------------------------------------
+# deadlines × WAL: expired txns never reach the log (crash machinery reuse)
+# --------------------------------------------------------------------------
+
+
+def _wal_rows(wal_path):
+    rows = set()
+    for rec in DeltaWAL(wal_path, fsync="off").replay():
+        rows |= _as_set(rec.rows)
+    return rows
+
+
+def test_admission_expired_txn_never_reaches_wal(rng, tmp_path):
+    inst, edges = _inst(rng)
+    clk = VirtualClock()
+    srv = DatalogServer(
+        inst,
+        durability=DurabilityConfig(
+            root=str(tmp_path), checkpoint_every_epochs=0,
+            checkpoint_wal_bytes=0,
+        ),
+        clock=clk,
+    )
+    ok_row = _fresh_edge(edges)
+    dead_row = _fresh_edge(np.concatenate([edges, ok_row]))
+    ok = srv.submit_txn([("insert", "arc", ok_row)])
+    dead = srv.submit_txn([("insert", "arc", dead_row)], deadline=0.5)
+    clk.advance(1.0)                        # `dead` expires in the queue
+    done = srv.run()
+    assert isinstance(done[ok], UpdateStats)
+    assert isinstance(done[dead], DeadlineError)
+    wal_path = srv.durability.wal.path
+    srv.close()
+    logged = _wal_rows(wal_path)
+    assert tuple(ok_row[0]) in logged
+    assert tuple(dead_row[0]) not in logged  # expired pre-WAL: zero residue
+    # recovery replays only the acknowledged txn
+    restored = MaterializedInstance.restore(str(tmp_path), config=TUPLE)
+    assert tuple(dead_row[0]) not in _as_set(restored.relation("arc"))
+    assert tuple(ok_row[0]) in _as_set(restored.relation("arc"))
+    assert _as_set(restored.relation("tc")) == _as_set(inst.relation("tc"))
+
+
+def test_inflight_expired_txn_leaves_only_abort_marker(rng, tmp_path, monkeypatch):
+    inst, edges = _inst(rng)
+    clk = VirtualClock()
+    srv = DatalogServer(
+        inst,
+        durability=DurabilityConfig(
+            root=str(tmp_path), checkpoint_every_epochs=0,
+            checkpoint_wal_bytes=0,
+        ),
+        clock=clk,
+    )
+    orig = inst._delta_stratum
+
+    def slow(*a, **k):
+        clk.advance(10.0)
+        return orig(*a, **k)
+
+    monkeypatch.setattr(inst, "_delta_stratum", slow)
+    row = _fresh_edge(edges)
+    rid = srv.submit_txn([("insert", "arc", row)], deadline=1.0)
+    done = srv.run()
+    assert isinstance(done[rid], DeadlineError)
+    wal_path = srv.durability.wal.path
+    srv.close()
+    # the bracket was logged WAL-before-publish, then aborted: replay of
+    # committed+aborted txns must surface nothing for this txn
+    restored = MaterializedInstance.restore(str(tmp_path), config=TUPLE)
+    assert tuple(row[0]) not in _as_set(restored.relation("arc"))
+    assert _as_set(restored.relation("tc")) == _as_set(inst.relation("tc"))
+
+
+def test_crash_during_load_shedding_restores_cleanly(rng, tmp_path):
+    """Crash (torn WAL tail) while the server is actively shedding: the
+    restore is exactly the acknowledged prefix — shed requests leave no
+    trace, the torn bracket drops whole."""
+    inst, edges = _inst(rng)
+    clk = VirtualClock()
+    srv = DatalogServer(
+        inst,
+        durability=DurabilityConfig(
+            root=str(tmp_path), checkpoint_every_epochs=0,
+            checkpoint_wal_bytes=0,
+        ),
+        limits=ServerLimits(max_queue_depth=2),
+        clock=clk,
+    )
+    applied = []
+    for i in range(6):
+        try:
+            rid = srv.submit_txn([("insert", "arc", _row(i, i + 20))])
+            applied.append((rid, i))
+        except OverloadError:
+            pass
+        if i % 3 == 2:
+            srv.run()                       # drain between shedding waves
+    done = srv.run()
+    acked = [
+        (i,) for rid, i in applied if isinstance(done.get(rid), UpdateStats)
+    ]
+    assert acked                            # some landed, some shed
+    # crash mid-commit: a BEGIN with no COMMIT frame (torn bracket)
+    wal = srv.durability.wal
+    wal.begin_txn(inst.epoch + 1)
+    wal.append("arc", "insert", _row(40, 41), inst.epoch + 1)
+    pre_crash = {r: _as_set(inst.relation(r)) for r in ("arc", "tc")}
+    srv.close()                             # commit frame never lands
+    restored = MaterializedInstance.restore(str(tmp_path), config=TUPLE)
+    for rel, want in pre_crash.items():
+        assert _as_set(restored.relation(rel)) == want, rel
+    assert (40, 41) not in _as_set(restored.relation("arc"))
+
+
+# --------------------------------------------------------------------------
+# bounded footprint: the unbounded-queue footgun
+# --------------------------------------------------------------------------
+
+
+def test_stats_records_cap_is_configurable(rng):
+    inst, _ = _inst(rng)
+    srv = DatalogServer(
+        inst, limits=ServerLimits(stats_records_cap=8), clock=VirtualClock()
+    )
+    assert srv.stats.records.maxlen == 8
+    assert DatalogServer(inst).stats.records.maxlen == 65536
+
+
+def test_100k_request_soak_stays_bounded(rng, monkeypatch):
+    """100k requests through one server: records capped, done evicted,
+    queue bounded — and the whole soak stays under a hard memory ceiling."""
+    inst, _ = _inst(rng)
+    # serving-loop soak, not an engine benchmark: answer queries instantly
+    tiny = np.zeros((1, 2), np.int32)
+    monkeypatch.setattr(inst, "query", lambda *a, **k: tiny)
+    srv = DatalogServer(
+        inst,
+        history=256,
+        limits=ServerLimits(max_queue_depth=512, stats_records_cap=1024),
+        clock=VirtualClock(),
+    )
+    total, shed = 100_000, 0
+    tracemalloc.start()
+    for i in range(total):
+        try:
+            srv.submit_query("tc", src=i % 14)
+        except OverloadError:
+            shed += 1
+        if i % 256 == 255:
+            srv.run()
+    srv.run()
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert len(srv.stats.records) <= 1024
+    assert len(srv.done) <= 256
+    assert srv._queue_high_water <= 512
+    assert srv.stats.records[-1].rid == total - 1 - shed or shed > 0
+    assert peak < 64 * 2**20, f"soak peaked at {peak / 2**20:.1f} MiB"
+
+
+# --------------------------------------------------------------------------
+# scenario harness: determinism + the three laws under random interleavings
+# --------------------------------------------------------------------------
+
+
+def _tc_scenario(arrivals, limits, **kw):
+    return Scenario(
+        "prop",
+        arrivals,
+        limits=limits,
+        workload=TcWorkload(n_nodes=12, p=0.1, seed=3, config=TUPLE),
+        **kw,
+    )
+
+
+def test_scenario_verdicts_are_deterministic():
+    arrivals = mixed_arrivals(rate=50, duration=0.6, seed=9, n_keys=12)
+    limits = ServerLimits(max_queue_depth=4, degrade_at=0.75)
+    a = run_scenario(_tc_scenario(arrivals, limits, service_cost=0.01))
+    b = run_scenario(_tc_scenario(arrivals, limits, service_cost=0.01))
+    assert a.exact and b.exact
+    assert (a.accepted, a.shed, a.deadline_misses, a.final_epoch) == (
+        b.accepted, b.shed, b.deadline_misses, b.final_epoch
+    )
+
+
+def test_burst_scenario_sheds_and_stays_exact():
+    """The acceptance-criteria scenario: bursts beat the service rate, the
+    bounded queue sheds (queries first) — and the fixpoint stays exact."""
+    times = bursty_times(0.5, 300.0, period=0.4, duty=0.25, duration=0.8, seed=21)
+    arrivals = mixed_arrivals(rate=0, duration=0, times=times, seed=21, n_keys=12)
+    limits = ServerLimits(max_queue_depth=8, overload_policy="reject",
+                          degrade_at=0.75)
+    res = run_scenario(_tc_scenario(arrivals, limits, service_cost=0.01))
+    assert res.shed_total > 0               # the burst actually overloaded
+    assert res.exact, res.mismatch
+    assert res.completed == res.accepted    # no accepted request dropped
+    assert res.queue_high_water <= 8
+    # degradation: queries shed at least as hard as updates
+    assert res.shed.get("query", 0) >= res.shed.get("txn", 0)
+
+
+def test_hotkey_storm_defeats_coalescing_but_not_exactness():
+    arrivals = hotkey_storm_arrivals(rate=40, duration=0.6, hot_key=3, seed=23,
+                                     n_keys=12)
+    res = run_scenario(
+        _tc_scenario(arrivals, ServerLimits(max_queue_depth=16),
+                     service_cost=0.005)
+    )
+    assert res.exact, res.mismatch
+    assert res.applied_txns > 0
+
+
+def _arrival_property(seed, trace):
+    """The three laws for one random interleaving: no silent drops, typed
+    refusals with rids, serial-replay exactness."""
+    workload = TcWorkload(n_nodes=12, p=0.1, seed=seed, config=TUPLE)
+    clk = VirtualClock()
+    inst = workload.build_instance()
+    srv = DatalogServer(
+        inst,
+        limits=ServerLimits(
+            max_queue_depth=3, degrade_at=0.7, default_deadline=0.5
+        ),
+        clock=clk,
+        history=len(trace) + 8,
+    )
+    accepted: dict[int, tuple] = {}         # rid -> (kind, ops|None)
+    refused = 0
+    for i, (kind, key, gap, serve) in enumerate(trace):
+        clk.advance(gap)
+        if serve:                           # interleave service with arrivals
+            srv.step()
+        arrival = Arrival(t=clk(), kind=kind, key=key)
+        try:
+            if kind == "query":
+                rel, kw = workload.query_for(arrival, i)
+                rid = srv.submit_query(rel, **kw)
+                accepted[rid] = ("query", None)
+            else:
+                ops = workload.ops_for(arrival, i)
+                rid = srv.submit_txn(ops)
+                accepted[rid] = ("txn", ops)
+        except (OverloadError, DeadlineError) as e:
+            # law 2: refusals are typed and carry the rid they consumed
+            assert isinstance(e, (OverloadError, DeadlineError))
+            assert e.rid >= 0
+            refused += 1
+    done = srv.run()
+    # law 1: every accepted request resolved — no silent drops
+    assert set(accepted) <= set(done)
+    assert srv._next_id == len(accepted) + refused
+    # law 3: final fixpoint == serial replay of acknowledged txns, in order
+    oracle = workload.build_instance()
+    for rid in sorted(accepted):
+        kind, ops = accepted[rid]
+        if kind == "txn" and isinstance(done[rid], UpdateStats):
+            oracle.apply_txn(ops)
+    for rel in workload.relations:
+        assert _as_set(inst.relation(rel)) == _as_set(oracle.relation(rel)), rel
+
+
+if HAS_HYPOTHESIS:
+    trace_strategy = st.lists(
+        st.tuples(
+            st.sampled_from(["query", "txn"]),
+            st.integers(0, 11),                  # key
+            st.sampled_from([0.0, 0.01, 0.3, 1.0]),  # inter-arrival gap
+            st.booleans(),                       # serve a step before submit?
+        ),
+        min_size=1,
+        max_size=16,
+    )
+
+    @settings(deadline=None, max_examples=10)
+    @given(seed=st.integers(0, 3), trace=trace_strategy)
+    def test_random_arrival_interleavings_hold_the_laws(seed, trace):
+        _arrival_property(seed, trace)
+
+else:
+
+    def test_random_arrival_interleavings_hold_the_laws():
+        rng = np.random.default_rng(31)
+        for seed in range(3):
+            trace = [
+                (
+                    str(rng.choice(["query", "txn"])),
+                    int(rng.integers(0, 12)),
+                    float(rng.choice([0.0, 0.01, 0.3, 1.0])),
+                    bool(rng.integers(0, 2)),
+                )
+                for _ in range(12)
+            ]
+            _arrival_property(seed, trace)
+
+
+# --------------------------------------------------------------------------
+# virtual clock + wait_until helpers
+# --------------------------------------------------------------------------
+
+
+def test_virtual_clock_semantics():
+    clk = VirtualClock(start=5.0)
+    assert clk() == 5.0 and clk.now() == 5.0
+    assert clk.advance(1.5) == 6.5
+    assert clk.advance_to(6.0) == 6.5       # time never moves backward
+    clk.sleep(0.5)
+    assert clk() == 7.0
+    with pytest.raises(ValueError):
+        clk.advance(-1.0)
+
+
+def test_virtual_clock_is_thread_safe():
+    clk = VirtualClock()
+    stop = threading.Event()
+    seen = []
+
+    def reader():
+        last = 0.0
+        while not stop.is_set():
+            now = clk()
+            assert now >= last              # monotone under concurrent writes
+            last = now
+        seen.append(last)
+
+    ts = [threading.Thread(target=reader) for _ in range(2)]
+    for t in ts:
+        t.start()
+    for _ in range(2000):
+        clk.advance(0.001)
+    stop.set()
+    for t in ts:
+        t.join()
+    assert all(s <= clk() for s in seen)
+
+
+def test_wait_until_returns_final_truth():
+    assert wait_until(lambda: True, timeout=0.1)
+    assert not wait_until(lambda: False, timeout=0.05, interval=0.01)
+    box = {"n": 0}
+
+    def eventually():
+        box["n"] += 1
+        return box["n"] >= 3
+
+    assert wait_until(eventually, timeout=5.0, interval=0.001)
+
+
+def test_poisson_and_bursty_traces_are_seeded():
+    assert poisson_times(10, 2.0, seed=4) == poisson_times(10, 2.0, seed=4)
+    assert poisson_times(10, 2.0, seed=4) != poisson_times(10, 2.0, seed=5)
+    bt = bursty_times(1.0, 50.0, period=0.5, duty=0.2, duration=2.0, seed=6)
+    assert bt == bursty_times(1.0, 50.0, period=0.5, duty=0.2, duration=2.0,
+                              seed=6)
+    assert bt == sorted(bt) and all(0 <= t < 2.0 for t in bt)

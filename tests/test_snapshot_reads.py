@@ -14,7 +14,6 @@ Three layers under test:
 
 import gc
 import threading
-import time
 import weakref
 
 import numpy as np
@@ -24,6 +23,7 @@ from conftest import adj_of, random_edges, tc_oracle
 from repro.configs.datalog_workloads import ALL as WORKLOADS
 from repro.core import Engine, EngineConfig, VersionedStore
 from repro.core.relation import TupleRelation
+from repro.loadgen import wait_until
 from repro.serve_datalog import DatalogServer, MaterializedInstance
 
 TC = WORKLOADS["tc"].program
@@ -275,9 +275,7 @@ def test_query_during_inflight_update_returns_pre_update_fixpoint(
     def unblock():
         assert entered.wait(timeout=60)
         # hold the writer until the query (behind it in the queue) completes
-        deadline = time.monotonic() + 60
-        while q not in srv.done and time.monotonic() < deadline:
-            time.sleep(0.002)
+        assert wait_until(lambda: q in srv.done)
         release.set()
 
     helper = threading.Thread(target=unblock)
@@ -322,9 +320,7 @@ def test_queries_overtake_blocked_queued_updates(rng, monkeypatch):
 
     def unblock():
         assert entered.wait(timeout=60)
-        deadline = time.monotonic() + 60
-        while q not in srv.done and time.monotonic() < deadline:
-            time.sleep(0.002)
+        assert wait_until(lambda: q in srv.done)
         release.set()
 
     helper = threading.Thread(target=unblock)

@@ -19,7 +19,6 @@ Central invariants:
 
 import os
 import threading
-import time
 import warnings
 
 import numpy as np
@@ -27,6 +26,7 @@ import pytest
 
 from conftest import random_edges
 from repro.core import Engine, EngineConfig
+from repro.loadgen import wait_until
 from repro.persist.wal import OP_BEGIN, OP_COMMIT, DeltaWAL, _raw_frames
 from repro.serve_datalog import (
     DatalogServer,
@@ -311,9 +311,7 @@ def test_readers_never_observe_partial_txn(rng, monkeypatch):
 
     def unblock():
         assert entered.wait(timeout=60)
-        deadline = time.monotonic() + 60
-        while q not in srv.done and time.monotonic() < deadline:
-            time.sleep(0.002)
+        assert wait_until(lambda: q in srv.done)
         release.set()
 
     th = threading.Thread(target=unblock)
