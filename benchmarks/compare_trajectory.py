@@ -1,31 +1,77 @@
-"""Print per-metric deltas between the last two records of a trajectory file.
+"""Compare trajectory records; optionally gate on perf regressions.
+
+Report mode (the default) prints per-metric deltas between the last two
+records of a trajectory file and always exits 0:
 
     python -m benchmarks.compare_trajectory BENCH_serve.json
 
-Exits 0 always (the trajectory is a report, not a gate — perf gates live in
-CI next to the benchmark that owns them); exits 2 only on usage errors.
-With fewer than two records it says so and still exits 0, so a first CI run
-with a fresh cache passes.
+Gate mode compares the trajectory's newest record against the newest record
+of a committed baseline file and exits 1 when any overlapping metric
+regressed more than ``--threshold`` (fractional) in its bad direction —
+durations up, ``*_speedup`` ratios down:
+
+    python -m benchmarks.compare_trajectory BENCH_serve.json --gate \
+        --baseline benchmarks/baseline_serve.json --threshold 0.15
+
+Both modes degrade gracefully: a missing/empty trajectory or baseline is an
+informative no-op with exit 0 (a fresh CI cache, or a repo whose baseline
+was never seeded, must not fail the build).  Exit 2 is reserved for usage
+errors.
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
 
-from benchmarks.trajectory import format_compare, load
+from benchmarks.trajectory import format_compare, format_gate, gate, load
+
+DEFAULT_BASELINE = "benchmarks/baseline_serve.json"
 
 
 def main(argv: list[str] | None = None) -> int:
-    argv = sys.argv[1:] if argv is None else argv
-    if len(argv) != 1:
-        print("usage: python -m benchmarks.compare_trajectory BENCH_FILE.json",
-              file=sys.stderr)
-        return 2
-    records = load(argv[0])
+    parser = argparse.ArgumentParser(
+        prog="python -m benchmarks.compare_trajectory",
+        description="Perf-trajectory deltas and regression gating.",
+    )
+    parser.add_argument("trajectory", help="BENCH_*.json trajectory file")
+    parser.add_argument(
+        "--gate", action="store_true",
+        help="exit 1 if the newest record regressed vs the baseline",
+    )
+    parser.add_argument(
+        "--baseline", default=DEFAULT_BASELINE,
+        help=f"committed baseline trajectory (default {DEFAULT_BASELINE})",
+    )
+    parser.add_argument(
+        "--threshold", type=float, default=0.15,
+        help="fractional regression allowed before failing (default 0.15)",
+    )
+    args = parser.parse_args(argv)
+
+    records = load(args.trajectory)
+
+    if args.gate:
+        if not records:
+            print(
+                f"perf gate: skipped — {args.trajectory} is missing or empty"
+            )
+            return 0
+        baseline = load(args.baseline)
+        if not baseline:
+            print(
+                f"perf gate: skipped — baseline {args.baseline} is missing "
+                "or empty (seed it by committing a benchmark record)"
+            )
+            return 0
+        violations = gate(baseline[-1], records[-1], args.threshold)
+        print(format_gate(violations, args.threshold))
+        return 1 if violations else 0
+
     if len(records) < 2:
         print(
-            f"{argv[0]}: {len(records)} record(s) — need 2 to compare; "
-            "deltas will appear on the next run"
+            f"{args.trajectory}: {len(records)} record(s) — need 2 to "
+            "compare; deltas will appear on the next run"
         )
         return 0
     print(format_compare(records[-2], records[-1]))

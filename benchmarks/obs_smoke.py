@@ -10,7 +10,11 @@ validates the observable surfaces end to end:
 * same-thread spans nest (every child lies inside its parent's interval);
 * the Prometheus exposition parses line by line against the text-format
   grammar and covers the headline metric families;
-* the JSON metrics snapshot round-trips through ``json.dumps``.
+* the JSON metrics snapshot round-trips through ``json.dumps``;
+* the EXPLAIN/ANALYZE surface: ``srv.explain()`` renders an annotated
+  plan tree, a ``profile=True`` request yields a ``FixpointProfile``
+  whose per-rule deltas sum to the engine's reported Δ total, and the
+  misestimation-ratio histograms land in the exposition.
 
 Prints ``OBS_SMOKE_OK`` as the last line on success (CI greps for it);
 any failure raises.
@@ -47,12 +51,15 @@ REQUIRED_METRICS = {
     "datalog_checkpoint_seconds",
     "datalog_query_seconds",
     "datalog_update_seconds",
+    "datalog_misestimation_ratio",
 }
 
-# Prometheus text-format line grammar (comment | sample | blank)
+# Prometheus text-format line grammar (comment | sample | blank); values
+# may be decimals or the spec spellings +Inf / -Inf / NaN
 _PROM_LINE = re.compile(
     r"^(# (HELP|TYPE) [a-zA-Z_:][a-zA-Z0-9_:]* .*"
-    r"|[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^{}]*\})? [0-9.eE+-]+( [0-9]+)?"
+    r"|[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^{}]*\})? ([0-9.eE+-]+|\+Inf|-Inf|NaN)"
+    r"( [0-9]+)?"
     r"|)$"
 )
 
@@ -133,6 +140,38 @@ def run(trace_out: str | None = None) -> None:
         srv.run()
         srv.checkpoint_now()
 
+        # EXPLAIN: static annotated plan tree with cost/cardinality estimates
+        explained = srv.explain(text=True)
+        assert "stratum 0" in explained and "est_rows≈" in explained, explained
+        print(explained.splitlines()[0])
+
+        # ANALYZE: a profiled txn + query; the profile tree's per-rule
+        # deltas must sum to the engine's reported Δ total (an incremental
+        # insert-path invariant: DRed rule spans count re-derivations and a
+        # domain-extending update full-rebuilds, so stay in-domain and new)
+        have = {tuple(r) for r in arc.tolist()}
+        fresh = np.array(
+            [[a, b] for a in range(96) for b in range(96)
+             if (a, b) not in have][:2],
+            np.int32,
+        )
+        prid = srv.submit_txn([("insert", "arc", fresh)], profile=True)
+        pqid = srv.submit_query("tc", src=int(arc[0, 0]), profile=True)
+        srv.run()
+        prof = srv.profile(prid)
+        assert prof.rule_delta_total() == srv.done[prid].derived, (
+            prof.rule_delta_total(), srv.done[prid].derived)
+        assert prof.strata and prof.roots, "profile tree empty"
+        qprof = srv.profile(pqid)
+        assert qprof.rows == len(srv.done[pqid]), qprof.rows
+        assert qprof.est_rows is not None and qprof.ratio is not None
+        for doc in (prof.to_json(), qprof.to_json()):
+            assert {"rid", "kind", "strata", "spans", "ratio"} <= doc.keys()
+            json.dumps(doc)
+        assert "profile rid=" in prof.render_text()
+        print(f"profiles: txn Δ={prof.derived} "
+              f"query rows={qprof.rows} est≈{qprof.est_rows:.3g}")
+
         trace = TRACER.export_chrome(trace_out)
         names = validate_chrome_trace(trace)
         missing = REQUIRED_SPANS - names
@@ -149,8 +188,8 @@ def run(trace_out: str | None = None) -> None:
 
         snap = srv.metrics()
         json.dumps(snap)
-        assert snap['datalog_requests_total{kind="query"}'] == 8.0, snap
-        assert snap['datalog_requests_total{kind="txn"}'] == 2.0, snap
+        assert snap['datalog_requests_total{kind="query"}'] == 9.0, snap
+        assert snap['datalog_requests_total{kind="txn"}'] == 3.0, snap
         assert snap["datalog_wal_fsync_seconds"]["count"] >= 2, snap
         assert snap["datalog_checkpoint_seconds"]["count"] >= 1, snap
         print(f"json snapshot: {len(snap)} series")

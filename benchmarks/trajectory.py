@@ -106,6 +106,56 @@ def compare(prev: dict, cur: dict) -> list[tuple[str, str, float, float, float]]
     return rows
 
 
+def higher_is_better(name: str) -> bool:
+    """Gate direction for one metric row.
+
+    Almost every row is a duration (lower is better); ratio rows named
+    ``*_speedup`` invert.  Verdict-style rows (exactness flags) never gate —
+    they are handled by the scenario smoke, not the perf gate.
+    """
+    return name.endswith("_speedup")
+
+
+def gate(
+    baseline: dict, current: dict, threshold: float = 0.15
+) -> list[tuple[str, str, float, float, float]]:
+    """Regression check of ``current`` against a recorded ``baseline``.
+
+    Returns the violations: rows present in both records where the current
+    value regressed more than ``threshold`` (fractional — 0.15 = 15%) in
+    the metric's bad direction.  An empty list is a pass.
+    """
+    violations = []
+    for sec, name, base, cur, _pct in compare(baseline, current):
+        if base <= 0:
+            continue            # degenerate baseline row: nothing to gate on
+        change = (cur - base) / base
+        regressed = (
+            change < -threshold if higher_is_better(name)
+            else change > threshold
+        )
+        if regressed:
+            violations.append((sec, name, base, cur, change * 100.0))
+    return violations
+
+
+def format_gate(
+    violations: list[tuple[str, str, float, float, float]],
+    threshold: float,
+) -> str:
+    if not violations:
+        return f"perf gate: OK (no metric regressed > {threshold * 100:.0f}%)"
+    lines = [
+        f"perf gate: FAIL — {len(violations)} metric(s) regressed "
+        f"> {threshold * 100:.0f}% vs baseline"
+    ]
+    for sec, name, base, cur, pct in violations:
+        lines.append(
+            f"  {sec}/{name}: {base:.6f} -> {cur:.6f} ({pct:+.1f}%)"
+        )
+    return "\n".join(lines)
+
+
 def format_compare(prev: dict, cur: dict) -> str:
     """Human-readable delta table between two trajectory records."""
     rows = compare(prev, cur)

@@ -102,6 +102,10 @@ class EvalStats:
     iterations: dict[int, int] = field(default_factory=dict)
     backend_used: dict[str, str] = field(default_factory=dict)
     total_seconds: float = 0.0
+    # per-stratum actuals, fed to the EXPLAIN/ANALYZE layer (repro.obs):
+    # wall time and final per-IDB row counts at each stratum boundary
+    stratum_seconds: dict[int, float] = field(default_factory=dict)
+    stratum_rows: dict[int, dict[str, int]] = field(default_factory=dict)
 
     def total_iterations(self) -> int:
         return sum(self.iterations.values())
@@ -142,6 +146,11 @@ def _empty_view(arity: int, domain: int) -> TupleView:
 
 
 class Engine:
+    #: Plan-time cardinality estimates (``repro.obs.explain.PlanEstimate``),
+    #: attached by the serving layer at plan admission; the engine only reads
+    #: ``est_rows`` off it to annotate stratum spans (estimate-vs-actual).
+    estimates = None
+
     def __init__(self, config: EngineConfig | None = None):
         self.config = config or EngineConfig()
         self.stats = EvalStats()
@@ -232,6 +241,24 @@ class Engine:
 
     # -- stratum evaluation -------------------------------------------------
 
+    def _estimated_rows(self, stratum: Stratum) -> float | None:
+        """Plan-time estimate for this stratum, if the serving layer set one."""
+        est = self.estimates
+        if est is None:
+            return None
+        se = est.stratum(stratum.index)
+        return se.est_rows if se is not None else None
+
+    def _note_stratum_actuals(
+        self, stratum: Stratum, store: dict[str, Any], t0: float
+    ) -> dict[str, int]:
+        rows = {
+            p: int(getattr(store.get(p), "count", 0)) for p in stratum.preds
+        }
+        self.stats.stratum_seconds[stratum.index] = time.perf_counter() - t0
+        self.stats.stratum_rows[stratum.index] = rows
+        return rows
+
     def _eval_stratum(
         self,
         strat: Stratification,
@@ -240,6 +267,7 @@ class Engine:
         start_iteration: int = 0,
     ) -> None:
         cfg = self.config
+        t0 = time.perf_counter()
 
         # PBME: dense binary TC/SG-shaped strata on the bit-matrix backend
         from repro.core.bitmatrix import eligible_plan
@@ -251,7 +279,15 @@ class Engine:
                 stratum=stratum.index, backend="bitmatrix",
             ) as sp:
                 plan.execute(store, self)
-                sp.set(iterations=plan.iterations)
+                rows = self._note_stratum_actuals(stratum, store, t0)
+                sp.set(
+                    iterations=plan.iterations,
+                    rows=sum(rows.values()),
+                    seconds=self.stats.stratum_seconds[stratum.index],
+                )
+                est = self._estimated_rows(stratum)
+                if est is not None:
+                    sp.set(est_rows=est)
             self.stats.backend_used[stratum.preds[0]] = "bitmatrix"
             self.stats.iterations[stratum.index] = plan.iterations
             return
@@ -278,7 +314,15 @@ class Engine:
                 strat, stratum, store, handles, deltas, dsd_state, groups,
                 start_iteration=start_iteration,
             )
-            sp.set(iterations=self.stats.iterations.get(stratum.index, 0))
+            rows = self._note_stratum_actuals(stratum, store, t0)
+            sp.set(
+                iterations=self.stats.iterations.get(stratum.index, 0),
+                rows=sum(rows.values()),
+                seconds=self.stats.stratum_seconds[stratum.index],
+            )
+            est = self._estimated_rows(stratum)
+            if est is not None:
+                sp.set(est_rows=est)
 
     def _seminaive_loop(
         self,

@@ -1,9 +1,19 @@
-"""Observability: span tracing, metrics, shared latency statistics.
+"""Observability: span tracing, metrics, EXPLAIN/ANALYZE, latency statistics.
 
 Stdlib-only by design — ``core``, ``serve_datalog``, and ``persist`` all
-import this package, so it must never import back into them (or into JAX).
+import this package, so it must never import back into them (or into JAX;
+the one device-memory probe in :mod:`repro.obs.profile` imports JAX lazily
+and degrades to an empty dict).
 """
 
+from repro.obs.explain import (
+    PlanEstimate,
+    RuleEstimate,
+    StratumEstimate,
+    estimate_plan,
+    estimate_query_rows,
+    estimate_rule,
+)
 from repro.obs.metrics import (
     DEFAULT_BUCKETS,
     Counter,
@@ -11,21 +21,47 @@ from repro.obs.metrics import (
     Histogram,
     MetricsRegistry,
 )
+from repro.obs.profile import (
+    RATIO_BUCKETS,
+    FixpointProfile,
+    ProfileNode,
+    RuleProfile,
+    StratumProfile,
+    build_profile,
+    device_memory_stats,
+    misestimation_ratio,
+    spans_for_rid,
+)
 from repro.obs.stats import latency_summary, nearest_rank, percentile
 from repro.obs.trace import NOOP_SPAN, Span, Tracer, TRACER, get_tracer
 
 __all__ = [
     "Counter",
     "DEFAULT_BUCKETS",
+    "FixpointProfile",
     "Gauge",
     "Histogram",
     "MetricsRegistry",
     "NOOP_SPAN",
+    "PlanEstimate",
+    "ProfileNode",
+    "RATIO_BUCKETS",
+    "RuleEstimate",
+    "RuleProfile",
     "Span",
+    "StratumEstimate",
+    "StratumProfile",
     "TRACER",
     "Tracer",
+    "build_profile",
+    "device_memory_stats",
+    "estimate_plan",
+    "estimate_query_rows",
+    "estimate_rule",
     "get_tracer",
     "latency_summary",
+    "misestimation_ratio",
     "nearest_rank",
     "percentile",
+    "spans_for_rid",
 ]

@@ -167,8 +167,23 @@ def _label_key(labels: dict | None) -> tuple:
     return tuple(sorted(labels.items())) if labels else ()
 
 
+def _escape_label_value(v) -> str:
+    # text-format spec: label values escape backslash, double-quote, newline
+    return (
+        str(v)
+        .replace("\\", "\\\\")
+        .replace('"', '\\"')
+        .replace("\n", "\\n")
+    )
+
+
+def _escape_help(text: str) -> str:
+    # HELP lines escape backslash and newline (but not double-quote)
+    return text.replace("\\", "\\\\").replace("\n", "\\n")
+
+
 def _render_labels(labels: tuple, extra: str = "") -> str:
-    parts = [f'{k}="{v}"' for k, v in labels]
+    parts = [f'{k}="{_escape_label_value(v)}"' for k, v in labels]
     if extra:
         parts.append(extra)
     return "{" + ",".join(parts) + "}" if parts else ""
@@ -254,7 +269,7 @@ class MetricsRegistry:
             if name not in seen_header:
                 seen_header.add(name)
                 if inst.help:
-                    lines.append(f"# HELP {name} {inst.help}")
+                    lines.append(f"# HELP {name} {_escape_help(inst.help)}")
                 lines.append(f"# TYPE {name} {kind}")
             if isinstance(inst, Histogram):
                 snap = inst.snapshot()
@@ -270,5 +285,17 @@ class MetricsRegistry:
 
 
 def _fmt(v: float) -> str:
-    """Integral floats print as ints — matches common exposition style."""
-    return str(int(v)) if float(v).is_integer() and abs(v) < 1e15 else repr(float(v))
+    """Integral floats print as ints — matches common exposition style.
+
+    Non-finite values use the exposition-format spellings ``+Inf`` /
+    ``-Inf`` / ``NaN`` (Python's ``repr`` says ``inf``/``nan``, which
+    Prometheus parsers reject).
+    """
+    v = float(v)
+    if v != v:
+        return "NaN"
+    if v == float("inf"):
+        return "+Inf"
+    if v == float("-inf"):
+        return "-Inf"
+    return str(int(v)) if v.is_integer() and abs(v) < 1e15 else repr(v)

@@ -70,7 +70,11 @@ arrived EDB facts is treated as an externally-seeded Δ, and the fixpoint is
    submission, at admission (before the WAL), and between strata in
    flight (``DeadlineError``), plus seeded-jitter retries for transient
    fallback failures.  ``repro.loadgen`` replays deterministic hostile
-   arrival traces against all of it.
+   arrival traces against all of it.  The EXPLAIN/ANALYZE surface
+   (``srv.explain()``, ``profile=True`` submissions → ``srv.profile(rid)``,
+   ``ServerLimits(slow_query_threshold=...)`` → ``srv.slow_queries()``)
+   attributes cost per rule/stratum and feeds estimate-vs-actual
+   cardinality histograms — see ``docs/observability.md``.
 
 6. Durability (``repro.persist``) turns the server from a cache into a
    system of record: ``DatalogServer(durability=...)`` appends every
@@ -91,6 +95,8 @@ lifecycle, ``docs/serving_api.md`` for the public API contract, and
 """
 
 from repro.core.versioned_store import Snapshot, VersionedStore
+from repro.obs.explain import PlanEstimate
+from repro.obs.profile import FixpointProfile
 from repro.persist.manager import DurabilityConfig, DurabilityManager
 from repro.serve_datalog.instance import (
     MaterializedInstance,
@@ -128,4 +134,6 @@ __all__ = [
     "VersionedStore",
     "DurabilityConfig",
     "DurabilityManager",
+    "PlanEstimate",
+    "FixpointProfile",
 ]

@@ -92,6 +92,7 @@ from repro.core.relation import (
 from repro.core.seminaive import ingest_variants
 from repro.core.setdiff import DSDState, set_difference
 from repro.core.versioned_store import Snapshot, VersionedStore
+from repro.obs.explain import PlanEstimate, estimate_plan, estimate_query_rows
 from repro.obs.trace import TRACER as _TRACE
 from repro.analysis import AnalysisConfig
 from repro.serve_datalog.plan_cache import (
@@ -157,6 +158,7 @@ class UpdateStats:
     epoch: int = -1                      # epoch published by this txn
     modes: dict[int, str] = field(default_factory=dict)      # stratum → mode
     iterations: dict[int, int] = field(default_factory=dict)  # stratum → iters
+    derived_by_stratum: dict[int, int] = field(default_factory=dict)
     ops: list[OpStats] = field(default_factory=list)          # per-op slices
     read_set: tuple[str, ...] = ()
     write_set: tuple[str, ...] = ()
@@ -226,6 +228,56 @@ class MaterializedInstance:
         self.cache.warm(self.plan, domain, buckets=self._hot_buckets(handles))
         self.update_log: list[UpdateStats] = []
         self._write_lock = threading.Lock()
+        # plan-time cost/cardinality estimates (EXPLAIN): computed once per
+        # installed state and attached to the engine so stratum spans carry
+        # est_rows next to actuals (the ANALYZE side reads both)
+        self.plan_estimate = self._make_plan_estimate(handles, domain, bm)
+        self.engine.estimates = self.plan_estimate
+
+    def _make_plan_estimate(
+        self, handles: dict, domain: int, bm: dict[int, dict]
+    ) -> PlanEstimate:
+        """EXPLAIN against concrete state: EDB actual sizes seed the
+        System-R heuristics, stored IDB counts ride along as ``actuals``,
+        and the predicted per-stratum mode comes from PBME residency plus
+        the engine's materialization-time backend choice."""
+        sizes = {
+            name: float(getattr(handles.get(name), "count", 0))
+            for name in self.strat.edb
+        }
+        actuals = {
+            name: int(getattr(handles.get(name), "count", 0))
+            for name in self.strat.idb
+            if name in handles
+        }
+        modes: dict[int, str] = {}
+        for stratum in self.strat.strata:
+            if stratum.index in bm:
+                modes[stratum.index] = "bitmatrix"
+            else:
+                modes[stratum.index] = self.engine.stats.backend_used.get(
+                    stratum.preds[0], "tuple"
+                )
+        return estimate_plan(
+            self.plan, sizes=sizes, domain=domain, modes=modes, actuals=actuals
+        )
+
+    def explain(self) -> PlanEstimate:
+        """Fresh :class:`PlanEstimate` against the latest published epoch."""
+        return self._make_plan_estimate(
+            self.vstore.handles, self.vstore.domain, self._bm
+        )
+
+    def query_estimate(
+        self, rel: str, bounds: dict, snapshot: Snapshot | None = None
+    ) -> float:
+        """Plan-time cardinality estimate for one selection (see
+        :func:`repro.obs.explain.estimate_query_rows`)."""
+        handles = snapshot.handles if snapshot is not None else self.vstore.handles
+        h = handles.get(rel)
+        return estimate_query_rows(
+            float(getattr(h, "count", 0)), self.vstore.domain, bounds
+        )
 
     # -- the published view --------------------------------------------------
 
@@ -489,6 +541,18 @@ class MaterializedInstance:
         :class:`Snapshot` from :meth:`pin`, repeated queries all observe
         that same epoch.
         """
+        bounds = self.resolve_bounds(where, **kw)
+        if snapshot is not None:
+            return self._query_in(snapshot.handles, rel, bounds)
+        with self.vstore.pin() as snap:
+            return self._query_in(snap.handles, rel, bounds)
+
+    def resolve_bounds(
+        self, where: dict | None = None, **kw
+    ) -> dict[int, int | tuple[int, int]]:
+        """Column-index bounds from ``where=`` plus keyword aliases — the
+        shared front half of :meth:`query`, also used by the server's
+        query-cardinality estimates."""
         bounds: dict[int, int | tuple[int, int]] = dict(where or {})
         for name, v in kw.items():
             if name not in self._ALIASES:
@@ -497,10 +561,7 @@ class MaterializedInstance:
                     " or where={col_index: bound}"
                 )
             bounds[self._ALIASES[name]] = v
-        if snapshot is not None:
-            return self._query_in(snapshot.handles, rel, bounds)
-        with self.vstore.pin() as snap:
-            return self._query_in(snap.handles, rel, bounds)
+        return bounds
 
     def _query_in(self, handles, rel: str, bounds: dict) -> np.ndarray:
         rows = self._tuple_rows(handles, rel)
@@ -514,9 +575,11 @@ class MaterializedInstance:
             col = rows[:, 0]
             l = int(jnp.searchsorted(col, lo, side="left"))
             h = int(jnp.searchsorted(col, hi, side="right"))
-            return np.asarray(rows[l:h])
+            with _TRACE.span("device.sync", "serve", what="query_rows"):
+                return np.asarray(rows[l:h])
         out, count = self.cache.select(rows, bounds)
-        return np.asarray(out[:count])
+        with _TRACE.span("device.sync", "serve", what="query_rows"):
+            return np.asarray(out[:count])
 
     def _tuple_rows(self, handles, rel: str):
         h = handles.get(rel)
@@ -906,8 +969,12 @@ class MaterializedInstance:
                         mode=stats.modes[stratum.index],
                         iterations=iters, derived=derived,
                     )
+                    est = self._stratum_estimate(stratum.index)
+                    if est is not None:
+                        sp.set(est_rows=est)
                 stats.iterations[stratum.index] = iters
                 stats.derived += derived
+                stats.derived_by_stratum[stratum.index] = derived
             return reads
 
         for stratum in self.strat.strata:
@@ -934,13 +1001,11 @@ class MaterializedInstance:
                 ):
                     iters, derived = self._bitmatrix_delta(txn, stratum, changed)
                     stats.modes[stratum.index] = "bitmatrix"
-                    stats.derived += derived
                 elif mode == "delta":
                     iters, derived = self._delta_stratum(
                         txn, stratum, changed, nonmono, kinds
                     )
                     stats.modes[stratum.index] = "delta"
-                    stats.derived += derived
                 elif mode == "dred":
                     iters, net_del, net_add = self.engine.dred_stratum(
                         self.strat, stratum, txn.store, store_old,
@@ -951,17 +1016,32 @@ class MaterializedInstance:
                     changed.update(net_add)
                     stats.modes[stratum.index] = "dred"
                     stats.retracted += sum(v.count for v in net_del.values())
-                    stats.derived += sum(v.count for v in net_add.values())
+                    derived = sum(v.count for v in net_add.values())
                 else:
                     iters, n_add, n_del = self._full_stratum_diff(
                         txn, stratum, deleted, changed
                     )
                     stats.modes[stratum.index] = "full"
-                    stats.derived += n_add
                     stats.retracted += n_del
-                sp.set(mode=stats.modes[stratum.index], iterations=iters)
+                    derived = n_add
+                stats.derived += derived
+                sp.set(
+                    mode=stats.modes[stratum.index], iterations=iters,
+                    derived=derived,
+                )
+                est = self._stratum_estimate(stratum.index)
+                if est is not None:
+                    sp.set(est_rows=est)
             stats.iterations[stratum.index] = iters
+            stats.derived_by_stratum[stratum.index] = derived
         return reads
+
+    def _stratum_estimate(self, index: int) -> float | None:
+        est = getattr(self, "plan_estimate", None)
+        if est is None:
+            return None
+        se = est.stratum(index)
+        return se.est_rows if se is not None else None
 
     # -- update-mode selection ----------------------------------------------
 
@@ -1104,10 +1184,22 @@ class MaterializedInstance:
 
         groups = ingest_variants(stratum, set(changed))
         for pred in stratum.preds:
-            rec = eng._eval_idb_iteration(
-                self.strat, stratum, txn.store, handles, deltas, dsd_state,
-                pred, groups[pred], 0,
-            )
+            # same "rule" span the engine's loop emits, so profile trees see
+            # the ingest pass (iteration 0) and per-rule deltas sum to the
+            # stratum's Δ total
+            with _TRACE.span(
+                "rule", "engine",
+                pred=pred, stratum=stratum.index, iteration=0,
+                variants=len(groups[pred]), ingest=True,
+            ) as rule_span:
+                rec = eng._eval_idb_iteration(
+                    self.strat, stratum, txn.store, handles, deltas, dsd_state,
+                    pred, groups[pred], 0,
+                )
+                rule_span.set(
+                    candidates=rec.candidates, delta=rec.delta,
+                    full=rec.full, dsd=rec.dsd_strategy,
+                )
             eng.stats.records.append(rec)
         if stratum.recursive:
             eng._seminaive_loop(
@@ -1252,6 +1344,12 @@ class MaterializedInstance:
             stats.retracted += max(old_counts[p] - new_count, 0)
         stats.write_set = tuple(sorted(set(self.strat.edb) | set(self.strat.idb)))
         stats.read_set = stats.write_set
+        # the domain changed: every size the EXPLAIN estimate was built on
+        # is stale — recompute against the rebuilt state
+        self.plan_estimate = self._make_plan_estimate(
+            txn.store, txn.domain, txn.bm
+        )
+        self.engine.estimates = self.plan_estimate
 
     # -- delta bookkeeping -----------------------------------------------------
 

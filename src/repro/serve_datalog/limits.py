@@ -75,6 +75,13 @@ class ServerLimits:
     stats_records_cap:
         Bound on ``ServerStats.records`` (per-request latency records).
         The historical default was a fixed 65536; long soaks can lower it.
+    slow_query_threshold:
+        Sojourn (queued + service seconds) above which a finished request's
+        full profile tree is captured into the slow-query ring
+        (``srv.slow_queries()``).  Setting a threshold auto-profiles every
+        request (the capture needs the spans); ``None`` = off.
+    slow_query_log:
+        Capacity of the slow-query ring (oldest captures evicted first).
     """
 
     max_queue_depth: int | None = None
@@ -86,6 +93,8 @@ class ServerLimits:
     retry_jitter: float = 0.0
     retry_seed: int = 0
     stats_records_cap: int = 65536
+    slow_query_threshold: float | None = None
+    slow_query_log: int = 64
 
     def __post_init__(self) -> None:
         if self.overload_policy not in ("reject", "block"):
@@ -103,6 +112,10 @@ class ServerLimits:
             raise ValueError("retry_jitter must be >= 0")
         if self.stats_records_cap < 1:
             raise ValueError("stats_records_cap must be >= 1")
+        if self.slow_query_threshold is not None and self.slow_query_threshold < 0:
+            raise ValueError("slow_query_threshold must be >= 0 (or None)")
+        if self.slow_query_log < 1:
+            raise ValueError("slow_query_log must be >= 1")
 
     @property
     def degrade_depth(self) -> int | None:

@@ -79,6 +79,27 @@ class CompiledPlan:
     def groups_for(self, stratum_index: int) -> dict[str, list[RuleVariant]]:
         return self.delta_groups[stratum_index]
 
+    def explain(
+        self,
+        sizes: dict[str, float] | None = None,
+        domain: int = 0,
+        modes: dict[int, str] | None = None,
+        actuals: dict[str, int] | None = None,
+    ):
+        """EXPLAIN this plan: per-rule/per-stratum cost and cardinality
+        estimates (:class:`repro.obs.explain.PlanEstimate`).
+
+        ``sizes`` maps relation → row count (EDB actuals; unknown relations
+        default to ``domain``); ``modes`` maps stratum index → predicted
+        evaluation mode.  Pure — touches no device state, so it is safe at
+        admission time before any data exists.
+        """
+        from repro.obs.explain import estimate_plan
+
+        return estimate_plan(
+            self, sizes=sizes, domain=domain, modes=modes, actuals=actuals
+        )
+
 
 @functools.partial(jax.jit, static_argnames=("mask",))
 def _select_rows(rows: jax.Array, lov: jax.Array, hiv: jax.Array, mask: tuple):

@@ -64,6 +64,13 @@ from dataclasses import dataclass, field, replace
 import numpy as np
 
 from repro.obs.metrics import MetricsRegistry
+from repro.obs.profile import (
+    RATIO_BUCKETS,
+    FixpointProfile,
+    build_profile,
+    device_memory_stats,
+    misestimation_ratio,
+)
 from repro.obs.stats import latency_summary
 from repro.obs.trace import TRACER as _TRACE
 from repro.serve_datalog.errors import DeadlineError, OverloadError, RequestError
@@ -79,6 +86,7 @@ class _Request:
     payload: dict | np.ndarray | list
     submitted: float
     deadline: float | None = None    # absolute, on the server's clock
+    profile: bool = False            # assemble a FixpointProfile on completion
 
 
 # RequestError lives in errors.py (admission needs it without a module
@@ -131,14 +139,19 @@ class ServerTransaction:
                 self._rid, "transaction already submitted; build a new one"
             )
 
-    def submit(self, deadline: float | None = None) -> int:
+    def submit(
+        self, deadline: float | None = None, profile: bool = False
+    ) -> int:
         """Validate and enqueue the transaction; returns its request id.
 
         ``deadline`` is seconds-from-now on the server's clock (see
-        :meth:`DatalogServer.submit_txn`).
+        :meth:`DatalogServer.submit_txn`); ``profile=True`` captures the
+        transaction's evaluation profile (:meth:`DatalogServer.profile`).
         """
         self._check_open()
-        self._rid = self._server.submit_txn(self._ops, deadline=deadline)
+        self._rid = self._server.submit_txn(
+            self._ops, deadline=deadline, profile=profile
+        )
         return self._rid
 
 
@@ -275,6 +288,17 @@ class DatalogServer:
         self._queue_high_water = 0
         # (thread, group, out, t0, base_epoch) of the one in-flight update
         self._writer: tuple | None = None
+        # -- EXPLAIN/ANALYZE state --------------------------------------------
+        # finished profiles by rid (bounded like ``done``), the slow-query
+        # ring, and the demand-counted tracing scope: profiled requests need
+        # spans, so submitting one turns the tracer on (without clearing)
+        # and the last one in flight restores the caller's setting
+        self._profiles: dict[int, FixpointProfile] = {}
+        self._slow: deque[FixpointProfile] = deque(
+            maxlen=limits.slow_query_log if limits else 64
+        )
+        self._profiling_inflight = 0
+        self._trace_autoenabled = False
         self._init_metrics()
         # -- durability (optional): WAL + background checkpointer -------------
         self.durability = None
@@ -405,6 +429,26 @@ class DatalogServer:
         reg.gauge("datalog_plan_cache_warmed_buckets",
                   "Pre-traced (fingerprint, bucket, arity, domain) combos",
                   fn=lambda: cache.stats()["warmed_buckets"])
+        # -- EXPLAIN/ANALYZE (estimate-vs-actual feedback) --------------------
+        self._m_misest = {
+            level: reg.histogram(
+                "datalog_misestimation_ratio",
+                "Actual/estimated cardinality ratio ((a+1)/(e+1); 1 = perfect)",
+                labels={"level": level},
+                buckets=RATIO_BUCKETS,
+            )
+            for level in ("stratum", "query")
+        }
+        self._m_profiles = reg.counter(
+            "datalog_profiles_total", "Requests profiled (profile=True)"
+        )
+        self._m_slow_queries = reg.counter(
+            "datalog_slow_queries_total",
+            "Requests captured by the slow-query log",
+        )
+        self._m_explain_requests = reg.counter(
+            "datalog_explain_requests_total", "explain() calls served"
+        )
         # -- static analysis (admission diagnostics + lint traffic) ----------
         self._m_lint_requests = reg.counter(
             "datalog_lint_requests_total", "lint() calls served"
@@ -490,14 +534,99 @@ class DatalogServer:
                 outputs=outputs,
             )
 
+    # -- EXPLAIN / ANALYZE ----------------------------------------------------
+
+    def explain(self, program=None, *, text: bool = False):
+        """Static annotated plan tree with cost/cardinality estimates.
+
+        Read-only and synchronous, like :meth:`lint` — never touches the
+        queue, the WAL, or the store's write path.  With no ``program`` the
+        instance's admitted plan is explained against its *current* state
+        (EDB actual sizes seed the estimates; stored IDB counts ride along
+        as ``actuals``).  A candidate ``program`` (source text or
+        :class:`~repro.core.ast.Program`) is admitted through the plan
+        cache and explained with this instance's EDB sizes where relation
+        names match — a pre-flight "what would this cost here".
+
+        Returns a :class:`repro.obs.explain.PlanEstimate` (``.to_json()``
+        for the machine form); ``text=True`` returns the rendered tree.
+        """
+        self._m_explain_requests.inc()
+        with _TRACE.span("server.explain", "serve"):
+            if program is None:
+                est = self.instance.explain()
+            else:
+                plan = self.instance.cache.get(program)
+                handles = self.instance.vstore.handles
+                sizes = {
+                    name: float(getattr(handles.get(name), "count", 0))
+                    for name in plan.strat.edb
+                }
+                est = plan.explain(
+                    sizes=sizes, domain=self.instance.vstore.domain
+                )
+        return est.render_text() if text else est
+
+    def profile(self, rid: int, *, text: bool = False):
+        """The :class:`~repro.obs.profile.FixpointProfile` of a finished
+        request submitted with ``profile=True``.
+
+        Raises ``KeyError`` for unknown rids and for requests that were not
+        profiled (or whose profile was evicted — the store is bounded by
+        ``history``, like ``done``).  ``text=True`` returns the rendered
+        tree instead of the object.
+        """
+        prof = self._profiles.get(rid)
+        if prof is None:
+            raise KeyError(
+                f"no profile for rid {rid}: not submitted with profile=True, "
+                "not finished, or evicted"
+            )
+        return prof.render_text() if text else prof
+
+    def slow_queries(self) -> list:
+        """The slow-query ring, oldest first: full profiles of requests
+        whose sojourn exceeded ``ServerLimits.slow_query_threshold``
+        (bounded by ``slow_query_log``; empty when no threshold is set)."""
+        return list(self._slow)
+
     # -- submission ----------------------------------------------------------
 
     def now(self) -> float:
         """Current time on the server's clock (deadlines are relative to it)."""
         return self._clock()
 
+    def _profile_on(self) -> None:
+        """One more profiled request in flight; tracing must be live.
+
+        While tracing is already on (a caller's session, or other profiled
+        requests in flight) the buffer is left alone so concurrent
+        requests' spans survive; only the off→on transition clears.
+        :meth:`_profile_off` restores the caller's setting once nothing
+        profiled is in flight.
+        """
+        self._profiling_inflight += 1
+        if not _TRACE.enabled:
+            # tracing was off, so anything in the buffer is a stale session
+            # — drop it, or an old request's markers would alias this one's
+            # rid (rids restart at 0 per server)
+            _TRACE.clear()
+            _TRACE.enabled = True
+            self._trace_autoenabled = True
+
+    def _profile_off(self) -> None:
+        self._profiling_inflight = max(0, self._profiling_inflight - 1)
+        if self._profiling_inflight == 0 and self._trace_autoenabled:
+            _TRACE.enabled = False
+            self._trace_autoenabled = False
+
     def _enqueue(
-        self, kind: str, rel: str, payload, deadline: float | None
+        self,
+        kind: str,
+        rel: str,
+        payload,
+        deadline: float | None,
+        profile: bool = False,
     ) -> int:
         """The one admission gate every submission goes through.
 
@@ -513,6 +642,11 @@ class DatalogServer:
         submitted = self._clock()
         abs_deadline: float | None = None
         lim = self.limits
+        # a configured slow-query threshold auto-profiles every request —
+        # the capture needs the span tree to already exist when the sojourn
+        # turns out slow (an explicit opt-in cost, documented on ServerLimits)
+        if lim is not None and lim.slow_query_threshold is not None:
+            profile = True
         rel_deadline = (
             deadline if deadline is not None
             else (lim.default_deadline if lim else None)
@@ -551,8 +685,10 @@ class DatalogServer:
                 # it created instead of growing it
                 while len(self.queue) >= bound and self.step():
                     pass
+        if profile:
+            self._profile_on()
         self.queue.append(
-            _Request(rid, kind, rel, payload, submitted, abs_deadline)
+            _Request(rid, kind, rel, payload, submitted, abs_deadline, profile)
         )
         self._queue_high_water = max(self._queue_high_water, len(self.queue))
         _TRACE.instant("enqueue", "serve", rid=rid, kind=kind, rel=rel)
@@ -564,21 +700,28 @@ class DatalogServer:
         *,
         where: dict | None = None,
         deadline: float | None = None,
+        profile: bool = False,
         **kw,
     ) -> int:
         """Queue one point/range query.
 
         ``deadline`` is seconds-from-now on the server's clock: a query
         still queued past it is failed cheaply (a :class:`DeadlineError` in
-        ``done``) without touching the store.
+        ``done``) without touching the store.  ``profile=True`` captures
+        the request's full span tree and estimate-vs-actual cardinalities;
+        fetch the result with :meth:`profile` after it completes.
         """
-        return self._enqueue("query", rel, {"where": where, "kw": kw}, deadline)
+        return self._enqueue(
+            "query", rel, {"where": where, "kw": kw}, deadline, profile
+        )
 
     def transaction(self) -> ServerTransaction:
         """A builder for one atomic multi-relation write transaction."""
         return ServerTransaction(self)
 
-    def submit_txn(self, ops, deadline: float | None = None) -> int:
+    def submit_txn(
+        self, ops, deadline: float | None = None, profile: bool = False
+    ) -> int:
         """Queue one transaction (iterable of ``(op, rel, rows)``/``TxnOp``).
 
         The whole transaction is validated here — empty transactions,
@@ -602,7 +745,7 @@ class DatalogServer:
             msg = e.args[0] if e.args else str(e)
             raise RequestError(-1, f"invalid transaction: {msg}") from e
         rels = "+".join(dict.fromkeys(rel for _, rel, _ in norm))
-        return self._enqueue("txn", rels, norm, deadline)
+        return self._enqueue("txn", rels, norm, deadline, profile)
 
     def submit_insert(self, rel: str, rows: np.ndarray) -> int:
         """Deprecated: queue one single-relation insert (use transactions).
@@ -716,10 +859,12 @@ class DatalogServer:
             # legacy mode: apply inline — a thread would be join()ed
             # immediately anyway
             t0 = self._clock()
+            prids = tuple(r.rid for r in group if r.profile)
             with _TRACE.span(
                 "writer.apply", "serve",
                 kind=group[0].kind, batch=len(group),
                 base_epoch=self.instance.epoch,
+                **({"profile_rids": prids} if prids else {}),
             ) as sp:
                 results = self._apply_update_group(group)
                 sp.set(epoch=self.instance.epoch)
@@ -874,21 +1019,51 @@ class DatalogServer:
                 "serve.queries", "serve",
                 batch=len(group), epoch=snap.epoch, concurrent=concurrent,
             ):
-                results = {
-                    r.rid: self._apply(
-                        lambda r=r: self.instance.query(
-                            r.rel,
-                            where=r.payload["where"],
-                            snapshot=snap,
-                            **r.payload["kw"],
-                        ),
-                        r.rid,
+                results = {}
+                for r in group:
+                    fn = lambda r=r: self.instance.query(  # noqa: E731
+                        r.rel,
+                        where=r.payload["where"],
+                        snapshot=snap,
+                        **r.payload["kw"],
                     )
-                    for r in group
-                }
+                    if not (_TRACE.enabled or r.profile):
+                        # the historical hot path, untouched: no span, no
+                        # estimate, nothing allocated per request
+                        results[r.rid] = self._apply(fn, r.rid)
+                        continue
+                    results[r.rid] = self._serve_one_query(r, fn, snap)
         finally:
             snap.release()
         self._record(group, results, t0, self._clock(), snap.epoch, concurrent)
+
+    def _serve_one_query(self, r: _Request, fn, snap):
+        """One traced/profiled query: a per-request ``query`` span carrying
+        the result cardinality — and, when profiled, the selection estimate
+        plus a ``query``-level misestimation observation."""
+        attrs = {"rid": r.rid, "rel": r.rel}
+        if r.profile:
+            attrs["profile_rid"] = r.rid
+        with _TRACE.span("query", "serve", **attrs) as qs:
+            res = self._apply(fn, r.rid)
+            if not isinstance(res, RequestError):
+                qs.set(rows=len(res))
+                if r.profile:
+                    try:
+                        bounds = self.instance.resolve_bounds(
+                            r.payload["where"], **r.payload["kw"]
+                        )
+                        est = self.instance.query_estimate(
+                            r.rel, bounds, snapshot=snap
+                        )
+                    except Exception:       # noqa: BLE001 — estimates are advisory
+                        est = None
+                    if est is not None:
+                        qs.set(est_rows=est)
+                        self._m_misest["query"].observe(
+                            misestimation_ratio(len(res), est)
+                        )
+        return res
 
     # -- update batches (writer path) -----------------------------------------
 
@@ -897,12 +1072,17 @@ class DatalogServer:
         out: dict = {}
         base_epoch = self.instance.epoch
 
+        prids = tuple(r.rid for r in group if r.profile)
+
         def work() -> None:
             # epoch lineage: base_epoch is what this group builds on;
-            # the published epoch lands on the span when the apply returns
+            # the published epoch lands on the span when the apply returns.
+            # profile_rids marks this span as the subtree root for every
+            # profiled member of the group (see repro.obs.profile)
             with _TRACE.span(
                 "writer.apply", "serve",
                 kind=group[0].kind, batch=len(group), base_epoch=base_epoch,
+                **({"profile_rids": prids} if prids else {}),
             ) as sp:
                 try:
                     out["results"] = self._apply_update_group(group)
@@ -961,6 +1141,31 @@ class DatalogServer:
             self._m_retracted.inc(res.retracted)
             if res.full_rebuild:
                 self._m_rebuilds.inc()
+            ests = self._delta_estimates(res)
+            for idx, actual in res.derived_by_stratum.items():
+                est = ests.get(idx)
+                if est is not None:
+                    self._m_misest["stratum"].observe(
+                        misestimation_ratio(actual, est)
+                    )
+
+    def _delta_estimates(self, res: UpdateStats) -> dict[int, float]:
+        """Per-stratum delta estimates for one applied transaction.
+
+        The plan estimate's :meth:`~repro.obs.explain.PlanEstimate.
+        scaled_delta` linearization, seeded with the rows each op actually
+        changed — what the stratum's Δ total *should* have been if the
+        System-R guesses were right.
+        """
+        plan_est = getattr(self.instance, "plan_estimate", None)
+        if plan_est is None:
+            return {}
+        delta_rows: dict[str, float] = {}
+        for op in res.ops:
+            delta_rows[op.rel] = delta_rows.get(op.rel, 0.0) + op.applied
+        if not delta_rows:
+            return {}
+        return plan_est.scaled_delta(delta_rows)
 
     def _apply_txn_group(self, group: list[_Request]):
         """One group-commit of coalesced transactions.
@@ -1214,10 +1419,55 @@ class DatalogServer:
                 self._m_errors.inc()
             self._m_queue_wait.observe(t0 - r.submitted)
             service_hist.observe(per_req)
+            if r.profile:
+                self._finish_profile(r, results[r.rid], t0, per_req, epoch)
         while len(self.done) > self.history:     # evict oldest results
             self.done.pop(next(iter(self.done)))
+        while len(self._profiles) > self.history:
+            self._profiles.pop(next(iter(self._profiles)))
         if self.durability is not None and is_update:
             self._ckpt_wake.set()       # nudge the checkpointer's policy check
+
+    def _finish_profile(
+        self, r: _Request, result, t0: float, service: float, epoch: int
+    ) -> None:
+        """Assemble the finished request's :class:`FixpointProfile` from the
+        tracer snapshot, store it for :meth:`profile`, and capture it into
+        the slow-query ring when the sojourn crossed the limit."""
+        derived = None
+        est_by_stratum: dict[int, float] = {}
+        if isinstance(result, UpdateStats):
+            derived = result.derived
+            est_by_stratum = self._delta_estimates(result)
+        queued = t0 - r.submitted
+        prof = build_profile(
+            _TRACE.spans(),
+            r.rid,
+            kind=r.kind,
+            relation=r.rel,
+            queued=queued,
+            service=service,
+            epoch=epoch,
+            est_by_stratum=est_by_stratum,
+            derived=derived,
+            device_memory=device_memory_stats(),
+        )
+        self._profiles[r.rid] = prof
+        self._m_profiles.inc()
+        self._profile_off()
+        lim = self.limits
+        if (
+            lim is not None
+            and lim.slow_query_threshold is not None
+            and prof.sojourn_seconds > lim.slow_query_threshold
+        ):
+            prof.slow = True
+            self._slow.append(prof)
+            self._m_slow_queries.inc()
+            _TRACE.instant(
+                "slow_query", "serve",
+                rid=r.rid, kind=r.kind, sojourn=prof.sojourn_seconds,
+            )
 
     @staticmethod
     def _apply(fn, rid: int):
