@@ -11,12 +11,26 @@ Three layers over the :mod:`repro.core` AST:
    program transformations (dead-rule elimination, dedup, constant
    folding, join reordering), verified bit-for-bit against the
    unoptimized fixpoint.
+4. **Demand transformation** (:mod:`repro.analysis.demand`) — adornment
+   under a configurable SIP strategy plus the magic-set rewrite, turning
+   bound queries into specialized programs that derive only the demanded
+   slice; unsupported shapes fall back with coded ``DL4xx`` diagnostics.
 
 ``python -m repro.analysis file.dl`` runs the linter from the command
-line; the serving layer runs :func:`analyze_program` at admission (see
+line (``--adorn pred^bf`` prints the adorned + magic program); the
+serving layer runs :func:`analyze_program` at admission (see
 ``repro.serve_datalog.plan_cache``).
 """
 
+from repro.analysis.demand import (
+    DEFAULT_DEMAND,
+    AdornedRule,
+    DemandConfig,
+    DemandTransform,
+    adorn_program,
+    demand_diagnostics,
+    demand_transform,
+)
 from repro.analysis.diagnostics import (
     CODES,
     ERROR,
@@ -40,18 +54,25 @@ from repro.analysis.rewrites import (
 )
 
 __all__ = [
+    "AdornedRule",
     "AnalysisConfig",
     "AnalysisReport",
     "CODES",
     "DEFAULT_CONFIG",
+    "DEFAULT_DEMAND",
     "DEFAULT_REWRITES",
+    "DemandConfig",
+    "DemandTransform",
     "Diagnostic",
     "ERROR",
     "INFO",
     "NO_REWRITES",
     "RewriteConfig",
     "WARNING",
+    "adorn_program",
     "analyze_program",
+    "demand_diagnostics",
+    "demand_transform",
     "lint_program",
     "rewrite_program",
     "verify_rewrite",

@@ -8,6 +8,7 @@ Examples::
     python -m repro.analysis examples/datalog/*.dl
     python -m repro.analysis --json --outputs tc program.dl
     echo 'p(x) :- e(x,y).' | python -m repro.analysis --strict -
+    python -m repro.analysis --adorn 'tc^bf' program.dl
 """
 
 from __future__ import annotations
@@ -51,6 +52,14 @@ def build_parser() -> argparse.ArgumentParser:
         action="store_true",
         help="print the rewritten program after the diagnostics",
     )
+    ap.add_argument(
+        "--adorn",
+        default=None,
+        metavar="PRED^PATTERN",
+        help="print the adorned + magic program for one binding pattern "
+        "(e.g. tc^bf; pred/pattern also accepted); with --json the "
+        "transform rides in each file's 'demand' key",
+    )
     return ap
 
 
@@ -68,6 +77,18 @@ def run(argv: list[str]) -> int:
     )
     config = AnalysisConfig(rewrite=rewrite, lint=not args.no_lint)
 
+    adorn: tuple[str, str] | None = None
+    if args.adorn is not None:
+        sep = "^" if "^" in args.adorn else "/"
+        pred, _, pattern = args.adorn.partition(sep)
+        if not pred or not pattern:
+            print(
+                f"--adorn {args.adorn!r}: expected PRED^PATTERN (e.g. tc^bf)",
+                file=sys.stderr,
+            )
+            return 2
+        adorn = (pred, pattern)
+
     failed = False
     json_out = []
     for path in args.files:
@@ -80,13 +101,28 @@ def run(argv: list[str]) -> int:
         report = analyze_program(source, config, outputs=outputs)
         if report.errors or (args.strict and report.warnings):
             failed = True
+        transform = None
+        if adorn is not None and report.rewritten is not None:
+            from repro.analysis import demand_transform
+
+            try:
+                transform = demand_transform(report.rewritten, *adorn)
+            except ValueError as e:     # unknown pred / malformed pattern
+                print(f"{name}: --adorn: {e}", file=sys.stderr)
+                return 2
         if args.json:
-            json_out.append({"file": name, **report.to_dict()})
+            doc = {"file": name, **report.to_dict()}
+            if transform is not None:
+                doc["demand"] = transform.to_dict()
+            json_out.append(doc)
         else:
             print(report.render(name))
             if args.show_rewritten and report.rewritten is not None:
                 print("--- rewritten ---")
                 print(repr(report.rewritten))
+            if transform is not None:
+                print("--- demand ---")
+                print(transform.render())
     if args.json:
         print(json.dumps(json_out, indent=2))
     return 1 if failed else 0

@@ -12,6 +12,10 @@ Severity bands:
 * ``DL1xx`` — **warnings**: almost certainly a bug, but evaluable.
 * ``DL2xx`` — **info**: explanations (e.g. PBME eligibility).
 * ``DL3xx`` — **info**: semantics-preserving rewrites that were applied.
+* ``DL4xx`` — **info**: demand-transformation decisions and fallbacks
+  (adornment/SIP choices, magic-set rewrite outcomes — see
+  ``repro.analysis.demand``).  A fallback is a *decision*, never an
+  error: the query is served from the full materialization instead.
 """
 
 from __future__ import annotations
@@ -45,10 +49,20 @@ CODES: dict[str, str] = {
     "DL105": "subsumed rule (body is a superset of another rule's)",
     "DL106": "unsatisfiable body (always-false constraint)",
     "DL201": "PBME bit-matrix eligibility",
+    "DL202": "demand-specialization eligibility",
     "DL301": "rewrite: dead rule eliminated",
     "DL302": "rewrite: duplicate rule removed",
     "DL303": "rewrite: constant folded/propagated",
     "DL304": "rewrite: body atoms reordered",
+    "DL400": "demand transform applied (adornment + magic-set rewrite)",
+    "DL401": "predicate ineligible for demand specialization",
+    "DL402": "binding not propagated through negation",
+    "DL403": "binding lost through aggregation",
+    "DL404": "SIP decision (sideways information passing)",
+    "DL405": "demand fallback: transform fails stratification/safety re-check",
+    "DL406": "demand fallback: transform estimated unprofitable",
+    "DL407": "demand fallback: binding pattern cannot seed a magic predicate",
+    "DL408": "atom demanded with all-free adornment (computed in full)",
 }
 
 

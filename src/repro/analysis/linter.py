@@ -42,14 +42,18 @@ class AnalysisConfig:
 
     ``rewrite`` selects the semantics-preserving rewrites applied before
     planning; ``lint`` turns the DL1xx warning passes on/off (errors
-    always run); ``explain_pbme`` adds the DL201 eligibility explainer.
-    The fingerprint participates in the :class:`PlanCache` key, so two
-    admissions under different configs never share a cache slot.
+    always run); ``explain_pbme`` adds the DL201 eligibility explainer;
+    ``explain_demand`` adds the DL202 demand-specialization explainer
+    (one info per IDB predicate: can a first-column-bound point query
+    specialize it — see ``repro.analysis.demand``).  The fingerprint
+    participates in the :class:`PlanCache` key, so two admissions under
+    different configs never share a cache slot.
     """
 
     rewrite: RewriteConfig = field(default_factory=lambda: DEFAULT_REWRITES)
     lint: bool = True
     explain_pbme: bool = True
+    explain_demand: bool = True
 
     def fingerprint(self) -> str:
         return hashlib.sha1(repr(self).encode()).hexdigest()[:8]
@@ -141,6 +145,15 @@ def analyze_program(
             report,
             "pbme_explain",
             lambda: pbme_diagnostics(rewritten, engine_config),
+        )
+
+    if config.explain_demand:
+        from repro.analysis.demand import demand_diagnostics
+
+        _timed(
+            report,
+            "demand_explain",
+            lambda: demand_diagnostics(rewritten),
         )
     return report
 

@@ -369,12 +369,23 @@ def verify_rewrite(
     rewritten: Program,
     edb: dict,
     engine_config=None,
+    *,
+    demand=None,
+    seeds=(),
 ) -> list[str]:
     """Run both programs to fixpoint and compare bit-for-bit.
 
     Returns a list of mismatch descriptions (empty == identical).  A
     predicate the rewrite eliminated entirely reads as empty.  Test/CLI
     helper — O(two full evaluations), never called on the serving path.
+
+    With ``demand`` (a :class:`repro.analysis.demand.DemandTransform`;
+    ``rewritten`` should be ``demand.program``) the comparison switches to
+    the demand contract: the specialized program is evaluated with
+    ``demand.seed_rel`` holding one row per binding in ``seeds`` (tuples of
+    bound-column values), and for *every* seed the demanded slice of
+    ``demand.answer_rel`` must equal the same selection over the
+    unspecialized fixpoint of ``demand.query_pred`` — bit for bit.
     """
     import numpy as np
 
@@ -382,8 +393,39 @@ def verify_rewrite(
 
     cfg = engine_config if engine_config is not None else EngineConfig()
     before = Engine(cfg).run(original, dict(edb))
-    after = Engine(replace(cfg)).run(rewritten, dict(edb))
     problems: list[str] = []
+
+    if demand is not None:
+        seed_list = [tuple(int(v) for v in s) for s in seeds]
+        seed_rows = np.asarray(seed_list, np.int32).reshape(
+            len(seed_list), len(demand.bound_cols)
+        )
+        spec_edb = dict(edb)
+        spec_edb[demand.seed_rel] = seed_rows
+        after = Engine(replace(cfg)).run(rewritten, spec_edb)
+        full = np.asarray(before.get(demand.query_pred))
+        sl = after.get(demand.answer_rel)
+        sl = (
+            np.asarray(sl) if sl is not None
+            else np.empty((0,) + full.shape[1:], full.dtype)
+        )
+        for seed in seed_rows:
+            def select(rows: np.ndarray) -> set:
+                keep = np.ones(len(rows), bool)
+                for col, val in zip(demand.bound_cols, seed):
+                    keep &= rows[:, col] == val
+                return {tuple(int(x) for x in r) for r in rows[keep]}
+            want, got = select(full), select(sl)
+            if want != got:
+                problems.append(
+                    f"{demand.query_pred}^{demand.adornment} @ "
+                    f"{tuple(int(v) for v in seed)}: {len(want)} rows in the "
+                    f"full fixpoint vs {len(got)} demanded "
+                    f"(symmetric difference {len(want ^ got)})"
+                )
+        return problems
+
+    after = Engine(replace(cfg)).run(rewritten, dict(edb))
     for pred in original.idb_preds:
         b = np.asarray(before.get(pred))
         a = after.get(pred)

@@ -75,6 +75,14 @@ arrived EDB facts is treated as an externally-seeded Δ, and the fixpoint is
    ``ServerLimits(slow_query_threshold=...)`` → ``srv.slow_queries()``)
    attributes cost per rule/stratum and feeds estimate-vs-actual
    cardinality histograms — see ``docs/observability.md``.
+   ``submit_query(..., on_demand=True)`` routes *bound* queries through
+   demand specialization (adornment + magic sets,
+   :mod:`repro.analysis.demand`): a bounded LRU of per-binding-pattern
+   specialized instances materializes only the demanded slice —
+   extended incrementally per new binding via the same Δ machinery —
+   and falls back to the full materialization with a coded ``DL4xx``
+   decision (counted, never a request error) when the transform cannot
+   apply.
 
 6. Durability (``repro.persist``) turns the server from a cache into a
    system of record: ``DatalogServer(durability=...)`` appends every
@@ -94,6 +102,7 @@ lifecycle, ``docs/serving_api.md`` for the public API contract, and
 ``docs/persistence.md`` for snapshot/WAL formats and the recovery contract.
 """
 
+from repro.analysis.demand import DemandConfig, DemandTransform
 from repro.core.versioned_store import Snapshot, VersionedStore
 from repro.obs.explain import PlanEstimate
 from repro.obs.profile import FixpointProfile
@@ -136,4 +145,6 @@ __all__ = [
     "DurabilityManager",
     "PlanEstimate",
     "FixpointProfile",
+    "DemandConfig",
+    "DemandTransform",
 ]

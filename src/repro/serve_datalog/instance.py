@@ -95,6 +95,7 @@ from repro.core.versioned_store import Snapshot, VersionedStore
 from repro.obs.explain import PlanEstimate, estimate_plan, estimate_query_rows
 from repro.obs.trace import TRACER as _TRACE
 from repro.analysis import AnalysisConfig
+from repro.analysis.demand import DemandTransform
 from repro.serve_datalog.plan_cache import (
     ADMISSION_CONFIG,
     CompiledPlan,
@@ -595,6 +596,87 @@ class MaterializedInstance:
             rows, _count = h.full_tuples(cap)
             return rows
         raise TypeError(type(h))
+
+    # -- demand specialization -----------------------------------------------
+
+    #: set on demand-specialized instances (see :meth:`specialize`); ``None``
+    #: on ordinary full-materialization instances
+    demand: "DemandTransform | None" = None
+
+    @classmethod
+    def specialize(
+        cls,
+        base: "MaterializedInstance",
+        transform: DemandTransform,
+        seed: tuple,
+    ) -> "MaterializedInstance":
+        """Build a demand-specialized instance from ``base``'s current EDB.
+
+        ``transform`` is a successful :class:`~repro.analysis.demand.
+        DemandTransform`; ``seed`` is the first demanded binding (the bound
+        columns' constants, in pattern order).  The specialized instance
+        materializes only the demanded slice: the magic-transformed program
+        runs over a copy of the base EDB plus a seed relation holding
+        ``seed``.  Later bindings enter through :meth:`seed_demand` — plain
+        EDB inserts, so the resumable semi-naïve Δ machinery (ingest
+        variants) extends the slice incrementally; the base instance's MVCC
+        and WAL state are never touched.
+        """
+        edb = {name: base.relation(name) for name in base.strat.edb}
+        first = tuple(int(v) for v in seed)
+        edb[transform.seed_rel] = np.asarray([first], np.int32).reshape(
+            1, len(transform.bound_cols)
+        )
+        inst = cls(
+            transform.program,
+            edb,
+            config=base.engine.config,
+            cache=base.cache,
+            analysis=None,
+        )
+        inst.demand = transform
+        inst._demand_seeded = {first}
+        return inst
+
+    def seed_demand(self, values) -> bool:
+        """Demand one more binding: insert it into the seed relation.
+
+        Returns True when the seed was new (the magic fixpoint extended
+        incrementally via the ordinary Δ path), False when it was already
+        demanded (no work).  Idempotent under races: a duplicate insert is
+        a no-op transaction that publishes nothing.
+        """
+        t = self.demand
+        if t is None:
+            raise RuntimeError("not a demand-specialized instance")
+        seed = tuple(int(v) for v in values)
+        if seed in self._demand_seeded:
+            return False
+        self.apply_txn(
+            [("insert", t.seed_rel, np.asarray([seed], np.int32))]
+        )
+        self._demand_seeded.add(seed)  # after publish: readers of the set
+        return True                    # must find the slice materialized
+
+    def demand_query(self, bounds: dict) -> np.ndarray:
+        """Answer one bound query through the demanded slice.
+
+        ``bounds`` must bind every column of the transform's adornment with
+        a point constant (extra bounds on free columns pass through as
+        ordinary filters).  Constants outside the active domain match
+        nothing and are answered empty *without* seeding — seeding them
+        would force a domain-growth rebuild for a provably empty result.
+        """
+        t = self.demand
+        if t is None:
+            raise RuntimeError("not a demand-specialized instance")
+        seed = tuple(int(bounds[c]) for c in t.bound_cols)
+        if any(v < 0 or v >= self.domain for v in seed):
+            return np.zeros(
+                (0, self.plan.program.arity_of(t.answer_rel)), np.int32
+            )
+        self.seed_demand(seed)
+        return self.query(t.answer_rel, where=bounds)
 
     # -- writes --------------------------------------------------------------
 

@@ -82,6 +82,13 @@ class ServerLimits:
         request (the capture needs the spans); ``None`` = off.
     slow_query_log:
         Capacity of the slow-query ring (oldest captures evicted first).
+    demand_instances:
+        Capacity of the server's LRU of demand-specialized instances (one
+        per ``(relation, binding pattern)`` routed through
+        ``submit_query(..., on_demand=True)``).  Evicted or epoch-stale
+        entries respecialize on next touch; fallback decisions are cached
+        too, so a pattern that cannot specialize is not re-analyzed per
+        query.
     """
 
     max_queue_depth: int | None = None
@@ -95,6 +102,7 @@ class ServerLimits:
     stats_records_cap: int = 65536
     slow_query_threshold: float | None = None
     slow_query_log: int = 64
+    demand_instances: int = 8
 
     def __post_init__(self) -> None:
         if self.overload_policy not in ("reject", "block"):
@@ -116,6 +124,8 @@ class ServerLimits:
             raise ValueError("slow_query_threshold must be >= 0 (or None)")
         if self.slow_query_log < 1:
             raise ValueError("slow_query_log must be >= 1")
+        if self.demand_instances < 1:
+            raise ValueError("demand_instances must be >= 1")
 
     @property
     def degrade_depth(self) -> int | None:

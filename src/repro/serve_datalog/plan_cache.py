@@ -39,9 +39,9 @@ from repro.relational.sort import SENTINEL
 from repro.serve_datalog.errors import RequestError
 
 # Admission default: full error + lint passes, semantics-preserving
-# rewrites on, no PBME explainer (that re-runs stratification; ``lint``
-# requests get it instead).
-ADMISSION_CONFIG = AnalysisConfig(explain_pbme=False)
+# rewrites on, no PBME/demand explainers (those re-run whole-program
+# probes; ``lint`` requests get them instead).
+ADMISSION_CONFIG = AnalysisConfig(explain_pbme=False, explain_demand=False)
 
 
 def fingerprint(program: Program | str) -> str:
@@ -132,6 +132,9 @@ class PlanCache:
     def __init__(self, capacity: int = 32):
         self.capacity = capacity
         self._plans: OrderedDict[str, CompiledPlan] = OrderedDict()
+        # demand-specialized plans, keyed by (source fingerprint, adornment,
+        # analysis + demand config fingerprints) — see get_demand
+        self._demand: OrderedDict[str, tuple] = OrderedDict()
         # (fp, bucket, arity, domain) — domain is a static argname of every
         # kernel traced below, so warmth is per-domain too
         self._warmed: set[tuple[str, int, int, int]] = set()
@@ -208,6 +211,64 @@ class PlanCache:
                 self._plans.popitem(last=False)
             return plan
 
+    def get_demand(
+        self,
+        program: Program | str,
+        query_pred: str,
+        pattern: str,
+        analysis: AnalysisConfig | None = ADMISSION_CONFIG,
+        demand_config=None,
+        *,
+        sizes: dict[str, float] | None = None,
+        domain: int = 0,
+    ) -> tuple[CompiledPlan, "object"]:
+        """Admit a demand-specialized plan for ``query_pred^pattern``.
+
+        Returns ``(plan, transform)``.  Specialized plans are keyed by
+        ``(source fingerprint, adornment, analysis config, demand
+        config)`` so the same program specialized for different binding
+        patterns — or under different SIP strategies — never shares a
+        slot.  When the transform *falls back* (``transform.ok`` is
+        False: unstratifiable, unprofitable, unseedable — a coded
+        ``DL4xx`` info diagnostic, never an error) the returned plan is
+        the ordinary :meth:`get` plan of the unspecialized program.
+        ``sizes``/``domain`` feed the profitability estimate and are
+        *not* part of the key: profitability is decided at first
+        admission and revisited only when the entry is evicted.
+        """
+        from repro.analysis.demand import DEFAULT_DEMAND, demand_transform
+
+        dconf = demand_config if demand_config is not None else DEFAULT_DEMAND
+        base = self.get(program, analysis=analysis)
+        key = (
+            f"{base.fingerprint}:{query_pred}^{pattern}"
+            f":{analysis.fingerprint() if analysis else 'raw'}"
+            f":{dconf.fingerprint()}"
+        )
+        if key in self._demand:
+            self.hits += 1
+            self._demand.move_to_end(key)
+            return self._demand[key]
+        self.misses += 1
+        with _TRACE.span(
+            "plan_cache.get_demand", "serve",
+            query=f"{query_pred}^{pattern}",
+        ) as sp:
+            transform = demand_transform(
+                base.program, query_pred, pattern, dconf,
+                sizes=sizes, domain=domain,
+            )
+            if transform.ok:
+                plan = self.get(transform.program, analysis=None)
+            else:
+                plan = base
+            sp.set(ok=transform.ok)
+        entry = (plan, transform)
+        self._demand[key] = entry
+        while len(self._demand) > self.capacity:
+            self._demand.popitem(last=False)
+        return entry
+
     # -- physical plans ----------------------------------------------------
 
     def warm(
@@ -282,6 +343,7 @@ class PlanCache:
     def stats(self) -> dict:
         return {
             "plans": len(self._plans),
+            "demand_plans": len(self._demand),
             "hits": self.hits,
             "misses": self.misses,
             "warmed_buckets": len(self._warmed),
